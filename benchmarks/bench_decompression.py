@@ -1,0 +1,166 @@
+"""Paper Figs 9/10/11 + Fig 12 + Tables 3/4: end-to-end decompression.
+
+Wall-clock scaling curves need >1 core; this container has one, so each
+figure reports (a) single-core bandwidth for every configuration, (b) the
+architecture's *work accounting*: speculative tasks completed, false
+positives absorbed, cache hits, zlib delegations — the quantities that
+determine scaling on a real node — and (c) the sequential-fraction estimate
+(window propagation + finalize) that bounds speedup by Amdahl's law, which
+is the paper's own analysis (§2.2/§4.5).
+"""
+
+from __future__ import annotations
+
+import io
+import time
+import zlib
+
+from repro.core import GzipIndex, ParallelGzipReader
+from repro.core.deflate import gzip_decompress_sequential
+from repro.core.synth import COMPRESSORS
+
+from .common import DataGen, emit, gzip_bytes, timeit
+
+
+def _run_reader(comp: bytes, *, parallelization: int, chunk_size: int, index=None):
+    t0 = time.perf_counter()
+    r = ParallelGzipReader(comp, parallelization=parallelization, chunk_size=chunk_size,
+                           index=index)
+    n = 0
+    while True:
+        piece = r.read(1 << 20)
+        if not piece:
+            break
+        n += len(piece)
+    dt = time.perf_counter() - t0
+    stats = r.stats()
+    r.close()
+    return n, dt, stats
+
+
+def bench_scaling(gen: DataGen, data_name: str, data: bytes) -> None:
+    """Figs 9-11: first pass vs indexed pass vs gzip/zlib baselines."""
+    comp = gzip_bytes(data, 6)
+    ratio = len(data) / len(comp)
+
+    # single-threaded baselines
+    best, _ = timeit(lambda: zlib.decompress(comp, 31), repeats=3, warmup=1)
+    emit(f"fig9_{data_name}_zlib_1t", best * 1e6, f"{len(data)/best/1e6:.1f}MB/s")
+    best, _ = timeit(lambda: gzip_decompress_sequential(comp), repeats=1, warmup=0)
+    emit(f"fig9_{data_name}_custom_sequential", best * 1e6, f"{len(data)/best/1e6:.2f}MB/s")
+
+    idx_bytes = None
+    for P in (1, 2, 4):
+        n, dt, stats = _run_reader(comp, parallelization=P, chunk_size=256 << 10)
+        assert n == len(data)
+        f = stats["fetcher"]
+        emit(
+            f"fig9_{data_name}_rapidgzip_P{P}", dt * 1e6,
+            f"{len(data)/dt/1e6:.2f}MB/s ratio={ratio:.2f} nominal={f['nominal_tasks']} "
+            f"exact={f['exact_tasks']} fp={f['false_positive_starts']} "
+            f"markers={f['chunks_with_markers']}",
+        )
+
+    # indexed pass (paper: "with index" curves)
+    r = ParallelGzipReader(comp, parallelization=2, chunk_size=256 << 10)
+    buf = io.BytesIO()
+    r.export_index(buf)
+    r.close()
+    for P in (1, 2, 4):
+        idx = GzipIndex.from_bytes(buf.getvalue())
+        n, dt, stats = _run_reader(comp, parallelization=P, chunk_size=256 << 10, index=idx)
+        assert n == len(data)
+        emit(
+            f"fig9_{data_name}_rapidgzip_index_P{P}", dt * 1e6,
+            f"{len(data)/dt/1e6:.2f}MB/s zlibdeleg={stats['fetcher']['zlib_delegations']}",
+        )
+
+
+def bench_chunk_size(gen: DataGen) -> None:
+    """Fig 12: bandwidth vs chunk size."""
+    data = gen.base64(6 << 20)
+    comp = gzip_bytes(data, 6)
+    for cs_kib in (16, 64, 256, 1024, 4096):
+        n, dt, stats = _run_reader(comp, parallelization=4, chunk_size=cs_kib << 10)
+        assert n == len(data)
+        f = stats["fetcher"]
+        emit(
+            f"fig12_chunksize_{cs_kib}KiB", dt * 1e6,
+            f"{len(data)/dt/1e6:.2f}MB/s tasks={f['nominal_tasks']+f['exact_tasks']}",
+        )
+
+
+def bench_compressors(gen: DataGen) -> None:
+    """Table 3: decompression across compressor variants/levels."""
+    data = gen.silesia_like(4 << 20)
+    for name, fn in sorted(COMPRESSORS.items()):
+        comp = fn(data)
+        n, dt, stats = _run_reader(comp, parallelization=4, chunk_size=128 << 10)
+        assert n == len(data)
+        f = stats["fetcher"]
+        emit(
+            f"table3_{name}", dt * 1e6,
+            f"{len(data)/dt/1e6:.2f}MB/s ratio={len(data)/len(comp):.2f} "
+            f"nominal={f['nominal_tasks']} zlibdeleg={f['zlib_delegations']}",
+        )
+
+
+def bench_formats(gen: DataGen) -> None:
+    """Table 4 analogue: gzip (ours, ours+index, zlib) vs raw memcpy bound."""
+    data = gen.silesia_like(4 << 20)
+    comp = gzip_bytes(data, 6)
+    best, _ = timeit(lambda: zlib.decompress(comp, 31), repeats=3)
+    emit("table4_zlib", best * 1e6, f"{len(data)/best/1e6:.1f}MB/s")
+    n, dt, _ = _run_reader(comp, parallelization=4, chunk_size=128 << 10)
+    emit("table4_rapidgzip", dt * 1e6, f"{len(data)/dt/1e6:.2f}MB/s")
+    r = ParallelGzipReader(comp, parallelization=2, chunk_size=128 << 10)
+    buf = io.BytesIO(); r.export_index(buf); r.close()
+    n, dt, _ = _run_reader(comp, parallelization=4, chunk_size=128 << 10,
+                           index=GzipIndex.from_bytes(buf.getvalue()))
+    emit("table4_rapidgzip_index", dt * 1e6, f"{len(data)/dt/1e6:.2f}MB/s")
+    buf2 = bytearray(len(data))
+    best, _ = timeit(lambda: buf2.__setitem__(slice(None), data), repeats=3)
+    emit("table4_memcpy_bound", best * 1e6, f"{len(data)/best/1e6:.1f}MB/s")
+
+
+def bench_amdahl(gen: DataGen) -> None:
+    """§2.2/§4.5: sequential fraction = window propagation on the critical
+    path; everything else parallelizes. Reported as a speedup bound."""
+    from repro.core import BitReader, DeflateChunkDecoder, parse_gzip_header
+    from repro.core.markers import propagate_window, replace_markers
+
+    data = gen.silesia_like(4 << 20)
+    comp = gzip_bytes(data, 6)
+    br = BitReader(comp)
+    parse_gzip_header(br)
+    dec = DeflateChunkDecoder(comp)
+    res = dec.decode_chunk(br.bit_pos, br.bit_pos + (256 << 13), window=None)
+
+    t0 = time.perf_counter()
+    dec.decode_chunk(res.start_bit, res.end_bit, window=None)
+    t_decode = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    propagate_window(res.data, b"\0" * 32768)
+    t_prop = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    replace_markers(res.data, b"\0" * 32768)
+    t_replace = time.perf_counter() - t0
+
+    seq_frac = t_prop / (t_decode + t_replace)
+    bound = 1.0 / max(seq_frac, 1e-9)
+    emit("amdahl_sequential_fraction", t_prop * 1e6,
+         f"frac={seq_frac:.4f} max_speedup~{bound:.0f}x decode={t_decode*1e3:.0f}ms "
+         f"replace={t_replace*1e3:.1f}ms")
+
+
+def main() -> None:
+    gen = DataGen()
+    bench_scaling(gen, "base64", gen.base64(4 << 20))
+    bench_scaling(gen, "silesia", gen.silesia_like(4 << 20))
+    bench_scaling(gen, "fastq", gen.fastq_like(4 << 20))
+    bench_chunk_size(gen)
+    bench_compressors(gen)
+    bench_formats(gen)
+    bench_amdahl(gen)

@@ -1,0 +1,62 @@
+"""Pallas kernel benchmarks: interpret-mode correctness throughput + the
+jnp-oracle throughput (the XLA-fused upper bound this container can run)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.marker_replace import TILE_COLS, TILE_ROWS, marker_replace_tiles
+from repro.kernels.ref import make_replacement_table, marker_replace_ref, precode_check_ref
+from repro.kernels.precode_check import BLOCK, precode_check_blocks
+
+from .common import DataGen, emit, timeit
+
+
+def bench_marker_replace(gen: DataGen) -> None:
+    window = gen.rng.integers(0, 256, 32768, dtype=np.uint8)
+    table = jnp.asarray(make_replacement_table(window))
+    n_tiles = 64
+    syms = jnp.asarray(
+        gen.rng.integers(0, 33024, (n_tiles, TILE_ROWS, TILE_COLS), dtype=np.int64).astype(np.int32)
+    )
+    nbytes = n_tiles * TILE_ROWS * TILE_COLS
+
+    ref = jax.jit(marker_replace_ref)
+    ref(syms, table).block_until_ready()
+    best, _ = timeit(lambda: ref(syms, table).block_until_ready(), repeats=5)
+    emit("kernel_marker_replace_jnp", best * 1e6, f"{nbytes/best/1e6:.0f}MB/s")
+
+    out = marker_replace_tiles(syms[:2], table, interpret=True)
+    out.block_until_ready()
+    best, _ = timeit(
+        lambda: marker_replace_tiles(syms[:2], table, interpret=True).block_until_ready(),
+        repeats=3,
+    )
+    emit("kernel_marker_replace_pallas_interpret", best * 1e6,
+         f"{2*TILE_ROWS*TILE_COLS/best/1e6:.1f}MB/s(interpret-mode)")
+
+
+def bench_precode(gen: DataGen) -> None:
+    n_blocks = 32
+    bits = jnp.asarray(gen.rng.integers(0, 2, ((n_blocks + 1), BLOCK), dtype=np.int64).astype(np.int32))
+    n_offsets = n_blocks * BLOCK
+
+    fn = jax.jit(lambda b: precode_check_blocks(b, interpret=True))
+    fn(bits).block_until_ready()
+    best, _ = timeit(lambda: fn(bits).block_until_ready(), repeats=3)
+    emit("kernel_precode_pallas_interpret", best * 1e6,
+         f"{n_offsets/8/best/1e6:.2f}MB/s(bit-offsets/8)")
+
+    flat = bits.reshape(-1)
+    ref = jax.jit(precode_check_ref)
+    ref(flat).block_until_ready()
+    best, _ = timeit(lambda: ref(flat).block_until_ready(), repeats=3)
+    emit("kernel_precode_jnp", best * 1e6, f"{(flat.shape[0]-74)/8/best/1e6:.2f}MB/s")
+
+
+def main() -> None:
+    gen = DataGen()
+    bench_marker_replace(gen)
+    bench_precode(gen)

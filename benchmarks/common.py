@@ -1,0 +1,79 @@
+"""Shared benchmark utilities: timing, CSV emission, data generation."""
+
+from __future__ import annotations
+
+import gzip as _gzip
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+
+def timeit(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> Tuple[float, float]:
+    """Returns (best_seconds, mean_seconds)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times), float(np.mean(times))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+class DataGen:
+    def __init__(self, seed: int = 0xBEEF):
+        self.rng = np.random.default_rng(seed)
+
+    def text(self, n: int) -> bytes:
+        words = [b"the", b"quick", b"brown", b"fox", b"jumps", b"over", b"lazy",
+                 b"dog", b"rapidgzip", b"parallel", b"deflate", b"window",
+                 b"chunk", b"prefetch", b"cache", b"marker"]
+        idx = self.rng.integers(0, len(words), size=max(8, n // 5))
+        return b" ".join(words[i] for i in idx)[:n]
+
+    def base64(self, n: int) -> bytes:
+        import base64
+
+        raw = self.rng.integers(0, 256, (n * 3) // 4 + 3, dtype=np.uint8).tobytes()
+        return base64.b64encode(raw)[:n]
+
+    def random(self, n: int) -> bytes:
+        return self.rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+    def silesia_like(self, n: int) -> bytes:
+        """Mixed corpus stand-in: text + structured binary + low-entropy runs."""
+        parts = []
+        per = max(1, n // 4)
+        parts.append(self.text(per))
+        # structured little-endian ints with small deltas (db-like)
+        base = np.cumsum(self.rng.integers(0, 16, per // 4, dtype=np.int64)).astype("<u4")
+        parts.append(base.tobytes())
+        parts.append(self.random(per // 2))  # incompressible section
+        parts.append((b"ABCD" * (per // 4 + 1))[:per])  # runs
+        out = b"".join(parts)
+        return out[:n]
+
+    def fastq_like(self, n: int) -> bytes:
+        """FASTQ records: @id / sequence / + / quality."""
+        out = []
+        size = 0
+        i = 0
+        bases = np.frombuffer(b"ACGT", np.uint8)
+        quals = np.arange(33, 74, dtype=np.uint8)
+        while size < n:
+            seq = bases[self.rng.integers(0, 4, 100)].tobytes()
+            qual = quals[self.rng.integers(0, len(quals), 100)].tobytes()
+            rec = b"@SRR0000." + str(i).encode() + b"\n" + seq + b"\n+\n" + qual + b"\n"
+            out.append(rec)
+            size += len(rec)
+            i += 1
+        return b"".join(out)[:n]
+
+
+def gzip_bytes(data: bytes, level: int = 6) -> bytes:
+    return _gzip.compress(data, compresslevel=level)

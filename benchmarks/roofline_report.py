@@ -1,0 +1,68 @@
+"""§Roofline report: reads results/dryrun.json, prints the per-cell table
+with the three terms, dominant bottleneck, 6ND-useful-flops ratio, and a
+one-line improvement note per cell."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+from repro.configs import SHAPES, all_configs
+from repro.launch.roofline import model_flops
+
+NOTES = {
+    "t_compute": "compute-bound: raise MXU utilization (larger per-chip tiles, fewer pad heads)",
+    "t_memory": "memory-bound: fuse attention score traffic (flash-style), shrink fp32 intermediates, better remat policy",
+    "t_collective": "collective-bound: re-shard to cut all-gathers (embedding/CE path), overlap collectives with compute",
+}
+
+
+def load(path: str = "results/dryrun.json") -> Dict[str, dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def report(path: str = "results/dryrun.json", mesh: str = "16x16") -> None:
+    results = load(path)
+    print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "roofline_fraction,useful_flops_ratio,collective_bytes,note")
+    for key in sorted(results):
+        c = results[key]
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            print(f"{c['arch']},{c['shape']},{mesh},,,,skipped-by-design,,,,{c['reason']}")
+            continue
+        if c["status"] != "ok":
+            print(f"{c['arch']},{c['shape']},{mesh},,,,ERROR,,,,{c.get('error','')}")
+            continue
+        r = c["roofline"]
+        cal = c.get("calibrated", {})
+        if isinstance(cal, dict) and "roofline" in cal:
+            r = cal["roofline"]  # unrolled per-layer extrapolation (exact)
+        cfg = all_configs()[c["arch"]]
+        shape = SHAPES[c["shape"]]
+        # recompute 6ND with the (fixed) exact param counts
+        mf = model_flops(cfg, shape) / c["n_chips"]
+        useful = mf / r["flops"] if r["flops"] else 0.0
+        print(
+            f"{c['arch']},{c['shape']},{mesh},"
+            f"{r['t_compute']:.3e},{r['t_memory']:.3e},{r['t_collective']:.3e},"
+            f"{r['dominant']},{r['roofline_fraction']:.3f},{useful:.3f},"
+            f"{r['collective_bytes']:.3e},{NOTES[r['dominant']]}"
+        )
+
+
+def main() -> None:
+    for path, tag in (("results/dryrun.json", "baseline"), ("results/dryrun_opt.json", "optimized")):
+        if not os.path.exists(path):
+            print(f"# {path} missing — run: python -m repro.launch.dryrun")
+            continue
+        for mesh in ("16x16", "2x16x16"):
+            print(f"# {tag} mesh {mesh}")
+            report(path, mesh=mesh)
+
+
+if __name__ == "__main__":
+    main()

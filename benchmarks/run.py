@@ -1,0 +1,53 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (see DESIGN.md §8 for the
+table/figure mapping). ``python -m benchmarks.run [--only sections]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list: components,decomp,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    sections = []
+    if only is None or "components" in only:
+        from . import bench_components
+
+        sections.append(("components", lambda: bench_components.main(tempfile.mkdtemp())))
+    if only is None or "decomp" in only:
+        from . import bench_decompression
+
+        sections.append(("decompression", bench_decompression.main))
+    if only is None or "kernels" in only:
+        from . import bench_kernels
+
+        sections.append(("kernels", bench_kernels.main))
+    if only is None or "roofline" in only:
+        from . import roofline_report
+
+        sections.append(("roofline", roofline_report.main))
+
+    failures = 0
+    for name, fn in sections:
+        print(f"# === {name} ===")
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# section {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

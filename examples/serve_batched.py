@@ -1,0 +1,72 @@
+"""Batched serving demo: prefill a batch of prompts, then greedy-decode with
+sharded KV caches (the ``decode_32k``-style serve_step at toy scale).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma-2b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_configs, smoke_config
+from repro.distributed import default_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.serve import make_serve_steps, prefill_to_decode_caches
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=sorted(all_configs()))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = smoke_config(all_configs()[args.arch])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    rules = default_rules(mesh)
+
+    B, P, N = args.batch, args.prompt_len, args.new_tokens
+    max_len = P + N + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    prefill_fn, decode_fn, _, _ = make_serve_steps(model, mesh, rules, batch=B, max_len=max_len)
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P), dtype=np.int32))}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_frames, cfg.d_model)).astype(np.float32)
+        ).astype(jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_tokens, cfg.d_model)).astype(np.float32)
+        ).astype(jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    logits, pc = prefill_fn(params, batch)
+    prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
+    caches = prefill_to_decode_caches(cfg, model, pc, B, max_len, P + prefix)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill {B}x{P}: {t_prefill*1e3:.0f} ms")
+
+    generated = [tok]
+    t0 = time.perf_counter()
+    for t in range(N - 1):
+        tok, _, caches = decode_fn(params, tok, caches, jnp.int32(P + prefix + t))
+        generated.append(tok)
+    dt = time.perf_counter() - t0
+    out = np.concatenate([np.asarray(g) for g in generated], axis=1)
+    print(f"decode {N-1} steps: {dt*1e3:.0f} ms "
+          f"({B*(N-1)/dt:.1f} tok/s batched, greedy)")
+    for b in range(B):
+        print(f"  seq {b}: {out[b][:16].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

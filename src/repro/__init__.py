@@ -1,0 +1,4 @@
+"""rapidgzip-JAX: parallel gzip decompression (Knespel & Brunst, HPDC'23) as
+a first-class data substrate for a multi-pod JAX training/serving framework."""
+
+__version__ = "0.1.0"

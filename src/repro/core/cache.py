@@ -1,0 +1,83 @@
+"""Thread-safe LRU caches (paper §3.2).
+
+The chunk fetcher uses two separate caches so prefetch traffic cannot evict
+explicitly accessed chunks ("to avoid cache pollution", paper §3.2): a small
+*access cache* (size 1 for plain sequential decompression) and a *prefetch
+cache* sized at twice the parallelism. False-positive chunk results enter
+the prefetch cache under a wrong offset key, are never requested, and age
+out — that eviction path is what makes the whole architecture robust.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Hashable, Optional
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {k: int(getattr(self, k)) for k in self.__dataclass_fields__}
+
+
+class LRUCache:
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.stats.hits += 1
+                return self._data[key]
+            self.stats.misses += 1
+            return None
+
+    def peek(self, key: Hashable) -> Optional[Any]:
+        """Get without touching LRU order or stats."""
+        with self._lock:
+            return self._data.get(key)
+
+    def insert(self, key: Hashable, value: Any) -> None:
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self._data[key] = value
+                return
+            self._data[key] = value
+            self.stats.insertions += 1
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.stats.evictions += 1
+
+    def pop(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            return self._data.pop(key, None)
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def keys(self):
+        with self._lock:
+            return list(self._data.keys())
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()

@@ -1,0 +1,486 @@
+"""Chunk fetcher: thread pool + caches + prefetcher (paper §3.2/§3.3, Figs 4&5).
+
+Orchestrates parallel chunk decompression:
+
+  * **Nominal (speculative) tasks** — prefetches for chunk index ``k`` run the
+    block finder from the nominal offset ``k * chunk_size`` and trial-decode
+    candidates until one survives to the stop condition. Results are cached
+    keyed by their *actual* start bit offset.
+  * **Exact tasks** — the main thread requests chunks by the exact end offset
+    of the predecessor. A prefetch that found a false positive simply never
+    matches any request key and ages out of the prefetch cache; the main
+    thread re-dispatches an exact-offset task (paper §3: "robust against
+    false positives").
+  * **Indexed tasks** — once seek points exist, chunks decompress from their
+    recorded (bit offset, window) — delegated to zlib where possible (paper
+    §1.3: >2x faster than two-stage), falling back to the custom decoder for
+    chunks containing gzip member boundaries.
+  * **Finalization** — window propagation is the only sequential step (last
+    32 KiB per chunk); full marker replacement and CRC parts run on the pool
+    (paper §2.2's Amdahl mitigation).
+
+Work distribution is dynamic: whichever worker is free takes the next
+dispatched chunk — the paper's straggler mitigation (§4.2, §6).
+"""
+
+from __future__ import annotations
+
+import threading
+import zlib as _zlib
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .block_finder import CombinedBlockFinder
+from .cache import LRUCache
+from .deflate import (
+    DecodeResult,
+    DeflateChunkDecoder,
+    WINDOW_SIZE,
+)
+from .errors import BlockNotFoundError, DeflateError, EndOfStream, RapidgzipError
+from .filereader import BytesFileReader, FileReader
+from .index import (
+    FLAG_HAS_INTERIOR_MEMBER_END,
+    FLAG_STREAM_START,
+    FLAG_ZLIB_UNSAFE,
+    GzipIndex,
+    SeekPoint,
+)
+from .markers import propagate_window, replacement_table, replace_markers
+from .prefetch import AdaptivePrefetchStrategy, PrefetchStrategy
+from .zlib_bridge import zlib_inflate_at
+
+DEFAULT_CHUNK_SIZE = 4 << 20  # paper §1.4: 4 MiB default compressed chunk size
+#: deflate's maximum compression ratio is ~1032 (paper §1.4); the cap guards
+#: against runaway false positives without rejecting any legal chunk.
+MAX_COMPRESSION_RATIO = 1100
+
+
+@dataclass
+class FetcherStats:
+    nominal_tasks: int = 0
+    exact_tasks: int = 0
+    indexed_tasks: int = 0
+    candidates_tried: int = 0
+    false_positive_starts: int = 0  # candidates that failed trial decompression
+    false_positive_chunks: int = 0  # full chunk results never matched by a request
+    redispatches: int = 0  # exact task after prefetch mismatch
+    chunks_with_markers: int = 0
+    zlib_delegations: int = 0
+    bytes_decompressed: int = 0
+
+    def as_dict(self) -> dict:
+        return {k: int(getattr(self, k)) for k in self.__dataclass_fields__}
+
+
+@dataclass
+class FinalizedChunk:
+    """A chunk whose window has been propagated; bytes may still be in flight."""
+
+    start_bit: int
+    end_bit: int
+    out_start: int  # global decompressed offset of the chunk start
+    size: int
+    window_in: Optional[bytes]
+    window_out: bytes
+    result: DecodeResult
+    _bytes_future: Optional[Future] = None
+    _bytes: Optional[np.ndarray] = None
+
+    def bytes(self) -> np.ndarray:
+        if self._bytes is None:
+            assert self._bytes_future is not None
+            self._bytes = self._bytes_future.result()
+        return self._bytes
+
+    def crc_segments(self) -> List[Tuple[int, int]]:
+        """[(segment_length, crc32), ...] split at interior member ends."""
+        data = self.bytes()
+        cuts = [me.out_offset for me in self.result.member_ends]
+        segs: List[Tuple[int, int]] = []
+        prev = 0
+        for c in cuts + [self.size]:
+            seg = data[prev:c]
+            segs.append((int(seg.shape[0]), _zlib.crc32(seg.tobytes()) & 0xFFFFFFFF))
+            prev = c
+        return segs
+
+
+class GzipChunkFetcher:
+    """Parallel chunk decompression engine over a FileReader."""
+
+    def __init__(
+        self,
+        reader: FileReader,
+        *,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        parallelization: int = 4,
+        framing: str = "gzip",
+        index: Optional[GzipIndex] = None,
+        prefetch_strategy: Optional[PrefetchStrategy] = None,
+        access_cache_size: int = 1,
+        max_ratio: int = MAX_COMPRESSION_RATIO,
+    ):
+        if chunk_size < 1 << 10:
+            raise ValueError("chunk_size must be >= 1 KiB")
+        self.reader = reader
+        self.chunk_size = chunk_size
+        self.parallelization = max(1, parallelization)
+        self.framing = framing
+        self.index = index if index is not None else GzipIndex()
+        self.max_ratio = max_ratio
+        self.file_size = reader.size()
+        self.total_bits = self.file_size * 8
+        self.n_nominal = max(1, -(-self.file_size // chunk_size))
+
+        self.pool = ThreadPoolExecutor(max_workers=self.parallelization)
+        # Separate caches: prefetch traffic must not evict accessed chunks
+        # (paper §3.2). Prefetch cache holds 2x parallelism chunks (§1.4).
+        self.access_cache = LRUCache(max(1, access_cache_size))
+        self.prefetch_cache = LRUCache(2 * self.parallelization)
+        self.strategy = prefetch_strategy or AdaptivePrefetchStrategy(self.parallelization)
+
+        self._lock = threading.Lock()
+        self._in_flight: Dict[object, Future] = {}
+        self._nominal_done: Dict[int, Optional[int]] = {}  # k -> actual start bit
+        self.stats = FetcherStats()
+
+    # ------------------------------------------------------------------
+    # buffer access
+    # ------------------------------------------------------------------
+
+    def _buffer(self, start_byte: int, end_byte: int) -> Tuple[bytes, int]:
+        """Return (buffer, base_byte). Zero-copy for in-memory sources."""
+        if isinstance(self.reader, BytesFileReader):
+            return self.reader._data, 0
+        end_byte = min(end_byte, self.file_size)
+        return self.reader.pread(start_byte, end_byte - start_byte), start_byte
+
+    # ------------------------------------------------------------------
+    # generic cache/in-flight plumbing
+    # ------------------------------------------------------------------
+
+    def _cache_lookup(self, key):
+        val = self.access_cache.get(key)
+        if val is not None:
+            return val
+        val = self.prefetch_cache.get(key)
+        if val is not None:
+            self.access_cache.insert(key, val)  # promote
+        return val
+
+    def _submit(self, key, fn, *args) -> Future:
+        with self._lock:
+            fut = self._in_flight.get(key)
+            if fut is not None:
+                return fut
+            fut = self.pool.submit(self._run_task, key, fn, *args)
+            self._in_flight[key] = fut
+            return fut
+
+    def _run_task(self, key, fn, *args):
+        try:
+            return fn(*args)
+        finally:
+            with self._lock:
+                self._in_flight.pop(key, None)
+
+    # ------------------------------------------------------------------
+    # first pass (no index): speculative parallel decompression
+    # ------------------------------------------------------------------
+
+    def nominal_index_of(self, bit_offset: int) -> int:
+        return min(bit_offset // (self.chunk_size * 8), self.n_nominal - 1)
+
+    def _nominal_stop_bit(self, k: int) -> int:
+        return min((k + 1) * self.chunk_size * 8, self.total_bits)
+
+    def trigger_prefetch(self, k: int) -> None:
+        """Dispatch speculative tasks per the prefetch strategy (paper §3.1:
+        access triggers the prefetcher even on a cache hit)."""
+        for j in self.strategy.on_access(k):
+            if j < 0 or j >= self.n_nominal:
+                continue
+            with self._lock:
+                if j in self._nominal_done or ("nom", j) in self._in_flight:
+                    continue
+            self._submit(("nom", j), self._task_nominal, j)
+
+    def get_chunk_at(self, bit_offset: int, window: Optional[bytes] = None) -> DecodeResult:
+        """Fetch the chunk starting exactly at ``bit_offset`` (first pass).
+
+        ``window`` may carry a known window (e.g. b"" right after a gzip
+        header) enabling single-stage decode; None means two-stage marker
+        mode.
+        """
+        k = self.nominal_index_of(bit_offset)
+        self.trigger_prefetch(k)
+
+        key = ("fp", bit_offset)
+        res = self._cache_lookup(key)
+        if res is not None:
+            # Marker-mode results are fine even when the window is known:
+            # finalize_async resolves them with the supplied window.
+            return res
+
+        # A nominal prefetch covering this offset may be in flight — its
+        # result is only usable if its speculative start matched exactly.
+        with self._lock:
+            nom_fut = self._in_flight.get(("nom", k))
+        if nom_fut is not None:
+            nom_res = nom_fut.result()
+            if nom_res is not None and nom_res.start_bit == bit_offset:
+                return nom_res
+            with self._lock:
+                self.stats.redispatches += 1
+
+        fut = self._submit(key, self._task_exact, bit_offset, window)
+        res = fut.result()
+        if res is None:
+            raise RapidgzipError("exact chunk decode failed at bit %d" % bit_offset)
+        return res
+
+    # -- tasks ----------------------------------------------------------
+
+    def _margins(self, start_byte: int, stop_byte: int):
+        """Yield growing (buffer, base) windows until EOF is covered."""
+        margin = max(2 * self.chunk_size, 1 << 20)
+        while True:
+            end = min(stop_byte + margin, self.file_size)
+            yield self._buffer(start_byte, end), end >= self.file_size
+            if end >= self.file_size:
+                return
+            margin *= 4
+
+    def _task_nominal(self, k: int) -> Optional[DecodeResult]:
+        with self._lock:
+            self.stats.nominal_tasks += 1
+        start_bit = k * self.chunk_size * 8
+        stop_bit = self._nominal_stop_bit(k)
+        if start_bit >= self.total_bits:
+            with self._lock:
+                self._nominal_done[k] = None
+            return None
+
+        failed: set = set()
+        result: Optional[DecodeResult] = None
+        for (buf, base), at_eof in self._margins(start_bit // 8, stop_bit // 8):
+            base_bits = base * 8
+            local_start = start_bit - base_bits
+            local_stop = stop_bit - base_bits
+            decoder = DeflateChunkDecoder(buf, framing=self.framing)
+            finder = CombinedBlockFinder(buf, local_start, local_stop)
+            need_more_data = False
+            for cand in finder:
+                if cand + base_bits in failed:
+                    continue
+                with self._lock:
+                    self.stats.candidates_tried += 1
+                try:
+                    res = decoder.decode_chunk(
+                        cand,
+                        local_stop,
+                        window=None,
+                        max_out=self.max_ratio * self.chunk_size,
+                    )
+                except EndOfStream:
+                    if not at_eof:
+                        need_more_data = True
+                        break
+                    with self._lock:
+                        self.stats.false_positive_starts += 1
+                    failed.add(cand + base_bits)
+                    continue
+                except DeflateError:
+                    with self._lock:
+                        self.stats.false_positive_starts += 1
+                    failed.add(cand + base_bits)
+                    continue
+                result = _offset_result(res, base_bits)
+                break
+            if result is not None or not need_more_data:
+                break
+
+        with self._lock:
+            self._nominal_done[k] = result.start_bit if result is not None else None
+        if result is not None:
+            self.prefetch_cache.insert(("fp", result.start_bit), result)
+            with self._lock:
+                if result.contains_markers():
+                    self.stats.chunks_with_markers += 1
+        return result
+
+    def _task_exact(self, bit_offset: int, window: Optional[bytes]) -> DecodeResult:
+        with self._lock:
+            self.stats.exact_tasks += 1
+        k = self.nominal_index_of(bit_offset)
+        stop_bit = max(self._nominal_stop_bit(k), bit_offset + 1)
+        last_err: Optional[Exception] = None
+        for (buf, base), at_eof in self._margins(bit_offset // 8, stop_bit // 8):
+            base_bits = base * 8
+            decoder = DeflateChunkDecoder(buf, framing=self.framing)
+            try:
+                res = decoder.decode_chunk(
+                    bit_offset - base_bits,
+                    stop_bit - base_bits,
+                    window=window,
+                    max_out=self.max_ratio * self.chunk_size,
+                )
+            except EndOfStream as exc:
+                if not at_eof:
+                    last_err = exc
+                    continue
+                raise
+            res = _offset_result(res, base_bits)
+            self.prefetch_cache.insert(("fp", bit_offset), res)
+            with self._lock:
+                self._nominal_done.setdefault(k, res.start_bit)
+                if res.contains_markers():
+                    self.stats.chunks_with_markers += 1
+            return res
+        raise last_err  # pragma: no cover - loop always ends at EOF
+
+    # ------------------------------------------------------------------
+    # finalization (stage 2)
+    # ------------------------------------------------------------------
+
+    def finalize_async(
+        self, result: DecodeResult, window: Optional[bytes], out_start: int
+    ) -> FinalizedChunk:
+        """Propagate the window (sequential, O(32 KiB)) and dispatch full
+        marker replacement to the pool."""
+        window_out = propagate_window(result.data, window)
+        fc = FinalizedChunk(
+            start_bit=result.start_bit,
+            end_bit=result.end_bit,
+            out_start=out_start,
+            size=result.size,
+            window_in=window,
+            window_out=window_out,
+            result=result,
+        )
+        if result.marker_mode:
+            fc._bytes_future = self.pool.submit(self._task_replace, result, window)
+        else:
+            fc._bytes = result.data
+        with self._lock:
+            self.stats.bytes_decompressed += result.size
+        return fc
+
+    def _task_replace(self, result: DecodeResult, window: Optional[bytes]) -> np.ndarray:
+        if not result.contains_markers():
+            return result.data.astype(np.uint8)
+        return replace_markers(result.data, window)
+
+    # ------------------------------------------------------------------
+    # indexed mode (second pass / imported index / BGZF)
+    # ------------------------------------------------------------------
+
+    def get_indexed(self, i: int) -> np.ndarray:
+        """Decompressed bytes of index chunk ``i`` (seek point i .. i+1)."""
+        for j in self.strategy.on_access(i):
+            if 0 <= j < len(self.index) and self.index.chunk_output_size(j) is not None:
+                with self._lock:
+                    if ("ix", j) in self._in_flight:
+                        continue
+                if ("ix", j) in self.prefetch_cache or ("ix", j) in self.access_cache:
+                    continue
+                self._submit(("ix", j), self._task_indexed, j)
+
+        key = ("ix", i)
+        val = self._cache_lookup(key)
+        if val is not None:
+            return val
+        fut = self._submit(key, self._task_indexed, i)
+        return fut.result()
+
+    def put_indexed(self, i: int, data: np.ndarray) -> None:
+        """Install first-pass bytes under their index key (frontier handoff).
+
+        Goes to the prefetch cache (2x parallelism entries): the access cache
+        may be sized 1 and a chunk can hand over several split slices.
+        """
+        self.prefetch_cache.insert(("ix", i), data)
+
+    def _task_indexed(self, i: int) -> np.ndarray:
+        with self._lock:
+            self.stats.indexed_tasks += 1
+        point = self.index.point_at(i)
+        out_size = self.index.chunk_output_size(i)
+        if out_size is None:
+            raise RapidgzipError("indexed chunk %d has unknown size" % i)
+        if out_size == 0:
+            return np.empty(0, dtype=np.uint8)
+        start_byte = point.compressed_bit // 8
+        if i + 1 < len(self.index):
+            comp_span = self.index.point_at(i + 1).compressed_bit // 8 - start_byte
+        else:
+            comp_span = self.file_size - start_byte
+        buf, base = self._buffer(start_byte, start_byte + comp_span + (1 << 16))
+        local_bit = point.compressed_bit - base * 8
+        if i + 1 < len(self.index):
+            local_stop = self.index.point_at(i + 1).compressed_bit - base * 8
+        else:
+            local_stop = len(buf) * 8
+
+        if point.flags & (FLAG_HAS_INTERIOR_MEMBER_END | FLAG_ZLIB_UNSAFE):
+            # gzip member boundary inside the chunk (zlib raw streams cannot
+            # cross it) or stored-block padding that would not survive the
+            # bit-shift realignment — use the custom decoder (window known
+            # -> single stage).
+            decoder = DeflateChunkDecoder(buf, framing=self.framing)
+            res = decoder.decode_chunk(
+                local_bit,
+                local_stop,
+                window=point.window if point.window is not None else b"",
+                max_out=out_size + WINDOW_SIZE,
+            )
+            data = res.data[:out_size]
+            if data.shape[0] < out_size:
+                raise DeflateError("indexed chunk %d produced too few bytes" % i)
+            self.prefetch_cache.insert(("ix", i), data)
+            return data
+
+        with self._lock:
+            self.stats.zlib_delegations += 1
+        raw = zlib_inflate_at(
+            buf, local_bit, point.window or b"", out_size,
+            # +2 bytes slack: enough for the final block's bit tail, not
+            # enough for zlib to parse a (shift-broken) stored header beyond
+            # the chunk boundary.
+            max_input_bytes=comp_span + 2,
+        )
+        data = np.frombuffer(raw, dtype=np.uint8)
+        self.prefetch_cache.insert(("ix", i), data)
+        return data
+
+    # ------------------------------------------------------------------
+
+    def shutdown(self) -> None:
+        self.pool.shutdown(wait=False, cancel_futures=True)
+
+    def cache_report(self) -> dict:
+        return {
+            "access": self.access_cache.stats.as_dict(),
+            "prefetch": self.prefetch_cache.stats.as_dict(),
+            "fetcher": self.stats.as_dict(),
+        }
+
+
+def _offset_result(res: DecodeResult, base_bits: int) -> DecodeResult:
+    """Translate a buffer-local DecodeResult to global bit offsets."""
+    if base_bits == 0:
+        return res
+    res.start_bit += base_bits
+    res.end_bit += base_bits
+    for b in res.blocks:
+        b.bit_offset += base_bits
+    for me in res.member_ends:
+        me.footer_end_bit += base_bits
+    for ms in res.member_starts:
+        ms.header_start_bit += base_bits
+        ms.deflate_start_bit += base_bits
+    return res

@@ -1,0 +1,130 @@
+"""FileReader abstraction (paper §3, Fig 5).
+
+Rapidgzip abstracts file access behind a ``FileReader`` interface so the same
+decompression machinery can serve regular files, in-memory buffers, and Python
+file-like objects (the paper uses this for recursive access to gzip-in-gzip).
+
+``SharedFileReader`` is the thread-safe variant used by the parallel chunk
+fetcher: every read is a *stateless* positioned read (POSIX ``pread`` semantics,
+paper §4.2 / Fig 8) so worker threads never contend on a shared file position.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import threading
+from typing import Optional, Union
+
+
+class FileReader:
+    """Stateless positioned-read interface over a byte source."""
+
+    def size(self) -> int:
+        raise NotImplementedError
+
+    def pread(self, offset: int, size: int) -> bytes:
+        """Read up to ``size`` bytes at absolute ``offset`` (thread-safe)."""
+        raise NotImplementedError
+
+    def close(self) -> None:  # pragma: no cover - trivial
+        pass
+
+    def __enter__(self) -> "FileReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class BytesFileReader(FileReader):
+    """In-memory byte buffer source."""
+
+    def __init__(self, data: Union[bytes, bytearray, memoryview]):
+        self._data = bytes(data)
+
+    def size(self) -> int:
+        return len(self._data)
+
+    def pread(self, offset: int, size: int) -> bytes:
+        if offset >= len(self._data):
+            return b""
+        return self._data[offset : offset + size]
+
+
+class SharedFileReader(FileReader):
+    """Thread-safe reader over a path using ``os.pread``.
+
+    Mirrors the paper's SharedFileReader: many threads issue positioned reads
+    against one file descriptor in parallel (Fig 8 benchmark).
+    """
+
+    def __init__(self, path: Union[str, os.PathLike]):
+        self._path = os.fspath(path)
+        self._fd = os.open(self._path, os.O_RDONLY)
+        self._size = os.fstat(self._fd).st_size
+        self._closed = False
+
+    def size(self) -> int:
+        return self._size
+
+    def pread(self, offset: int, size: int) -> bytes:
+        if offset >= self._size or size <= 0:
+            return b""
+        out = []
+        remaining = min(size, self._size - offset)
+        while remaining > 0:
+            chunk = os.pread(self._fd, remaining, offset)
+            if not chunk:
+                break
+            out.append(chunk)
+            offset += len(chunk)
+            remaining -= len(chunk)
+        return b"".join(out)
+
+    def close(self) -> None:
+        if not self._closed:
+            os.close(self._fd)
+            self._closed = True
+
+
+class PythonFileReader(FileReader):
+    """Adapter for arbitrary Python file-like objects (seek/read).
+
+    File-like objects have a single cursor, so positioned reads are serialized
+    behind a lock — this is the abstraction that lets rapidgzip-JAX decompress
+    e.g. a gzip stream stored inside another ParallelGzipReader (recursive
+    gzip-in-gzip access, paper §3).
+    """
+
+    def __init__(self, fileobj):
+        if not (hasattr(fileobj, "read") and hasattr(fileobj, "seek")):
+            raise TypeError("fileobj must support read() and seek()")
+        self._f = fileobj
+        self._lock = threading.Lock()
+        with self._lock:
+            pos = self._f.tell()
+            self._f.seek(0, io.SEEK_END)
+            self._size = self._f.tell()
+            self._f.seek(pos)
+
+    def size(self) -> int:
+        return self._size
+
+    def pread(self, offset: int, size: int) -> bytes:
+        with self._lock:
+            self._f.seek(offset)
+            return self._f.read(size)
+
+
+def open_file_reader(
+    source: Union[str, os.PathLike, bytes, bytearray, memoryview, FileReader, object],
+) -> FileReader:
+    """Open any supported source as a FileReader."""
+    if isinstance(source, FileReader):
+        return source
+    if isinstance(source, (bytes, bytearray, memoryview)):
+        return BytesFileReader(source)
+    if isinstance(source, (str, os.PathLike)):
+        return SharedFileReader(source)
+    return PythonFileReader(source)

@@ -1,0 +1,361 @@
+"""ParallelGzipReader — seekable, parallel-decompressing file-like object
+(paper §3.1, Fig 4/5).
+
+Reading drives a *frontier* of sequential finalization over parallel
+speculative chunk decompression:
+
+  * ``read``/``seek`` only update the logical position (a seek does no work
+    until the next read — paper §3.1).
+  * Positions beyond the finalized frontier advance it: prefetched chunks are
+    fetched from the cache (dispatching exact re-decodes on speculation
+    misses), their windows propagated sequentially, marker replacement and
+    CRC parts dispatched to the pool, and seek points appended to the
+    on-the-fly index — including interior split points that bound the
+    decompressed spacing (load balancing for the indexed pass, paper §1.4).
+  * Positions behind the frontier are served through the seek-point index:
+    O(1) to the chunk, zlib-delegated decompression, adaptive prefetch for
+    sequential patterns.
+  * BGZF files are detected and indexed directly from their metadata — the
+    trivially-parallel fast path (paper §3.4.4).
+
+The index can be exported/imported; with an imported index the first pass is
+skipped entirely and every read is an indexed read (paper Fig 9 "with
+index").
+"""
+
+from __future__ import annotations
+
+import io
+import zlib as _zlib
+from typing import List, Optional, Union
+
+import numpy as np
+
+from .bitreader import BitReader
+from .chunk_fetcher import FinalizedChunk, GzipChunkFetcher
+from .crc32 import crc32_combine
+from .deflate import (
+    BT_DYNAMIC,
+    BT_STORED,
+    WINDOW_SIZE,
+    canonical_stored_offset,
+)
+from .errors import GzipFooterError, RapidgzipError
+from .filereader import open_file_reader
+from .gzip_format import parse_gzip_header, scan_bgzf_members, detect_bgzf
+from .index import (
+    FLAG_HAS_INTERIOR_MEMBER_END,
+    FLAG_STORED_BLOCK,
+    FLAG_STREAM_START,
+    FLAG_ZLIB_UNSAFE,
+    GzipIndex,
+    SeekPoint,
+)
+from .markers import full_window
+
+
+class ParallelGzipReader(io.RawIOBase):
+    """File-like object exposing the decompressed stream of a gzip file."""
+
+    def __init__(
+        self,
+        source,
+        *,
+        parallelization: int = 4,
+        chunk_size: int = 4 << 20,
+        index: Optional[Union[GzipIndex, str, bytes]] = None,
+        verify: bool = True,
+        framing: str = "gzip",
+        index_spacing: Optional[int] = None,
+        access_cache_size: int = 1,
+    ):
+        super().__init__()
+        self._reader = open_file_reader(source)
+        self._verify = verify
+        self._framing = framing
+        # Decompressed spacing between seek points; chunks whose decompressed
+        # size exceeds it are split at interior block boundaries (paper §1.4).
+        self._index_spacing = index_spacing or 4 * chunk_size
+
+        if isinstance(index, str):
+            index = GzipIndex.import_file(index)
+        elif isinstance(index, (bytes, bytearray)):
+            index = GzipIndex.from_bytes(bytes(index))
+
+        self._fetcher = GzipChunkFetcher(
+            self._reader,
+            chunk_size=chunk_size,
+            parallelization=parallelization,
+            framing=framing,
+            index=index,
+            access_cache_size=access_cache_size,
+        )
+        self._index = self._fetcher.index
+
+        self._pos = 0
+        self._eos = False
+        self._frontier_bit = 0
+        self._frontier_out = 0
+        self._window: Optional[bytes] = b""
+        self._member_crc = 0
+        self._member_len = 0
+
+        if self._index.finalized:
+            # Imported (or BGZF) index: no first pass needed.
+            self._eos = True
+            self._frontier_out = self._index.decompressed_size or 0
+        elif framing == "gzip" and detect_bgzf(self._reader.pread(0, 1 << 12)):
+            self._build_bgzf_index()
+        else:
+            self._parse_leading_header()
+
+    # ------------------------------------------------------------------
+    # setup
+    # ------------------------------------------------------------------
+
+    def _parse_leading_header(self) -> None:
+        if self._framing == "raw":
+            self._frontier_bit = 0
+            return
+        head = self._reader.pread(0, 1 << 16)
+        hdr = parse_gzip_header(BitReader(head))
+        self._frontier_bit = hdr.header_bits
+
+    def _build_bgzf_index(self) -> None:
+        """BGZF fast path: member boundaries from metadata (paper §3.4.4)."""
+        members = scan_bgzf_members(self._reader)
+        out = 0
+        for offset, size in members:
+            head = self._reader.pread(offset, min(size, 1 << 12))
+            hdr = parse_gzip_header(BitReader(head))
+            footer = self._reader.pread(offset + size - 8, 8)
+            isize = int.from_bytes(footer[4:8], "little")
+            if isize == 0:
+                continue  # BGZF EOF marker block
+            self._index.add_point(
+                SeekPoint(offset * 8 + hdr.header_bits, out, b"", FLAG_STREAM_START)
+            )
+            out += isize
+        self._index.finalize(out, self._reader.size())
+        self._eos = True
+        self._frontier_out = out
+
+    # ------------------------------------------------------------------
+    # frontier: first-pass parallel decompression + on-the-fly indexing
+    # ------------------------------------------------------------------
+
+    def _advance_frontier(self) -> None:
+        if self._eos:
+            return
+        res = self._fetcher.get_chunk_at(self._frontier_bit, window=self._window)
+        fc = self._fetcher.finalize_async(res, self._window, self._frontier_out)
+        self._collect(fc)
+        self._window = fc.window_out
+        self._frontier_bit = res.end_bit
+        self._frontier_out += res.size
+        if res.ended_at_eos:
+            self._eos = True
+            self._index.finalize(self._frontier_out, self._reader.size())
+
+    def _collect(self, fc: FinalizedChunk) -> None:
+        """Sequential bookkeeping for one finalized chunk: CRC verification,
+        seek points (with interior splits), and byte handoff to the cache."""
+        data = fc.bytes()
+        res = fc.result
+
+        # -- CRC32 / ISIZE verification at member ends ---------------------
+        if self._verify and self._framing == "gzip":
+            prev = 0
+            for me in res.member_ends:
+                seg = data[prev : me.out_offset]
+                crc = _zlib.crc32(seg.tobytes()) & 0xFFFFFFFF
+                self._member_crc = crc32_combine(self._member_crc, crc, int(seg.shape[0]))
+                self._member_len += int(seg.shape[0])
+                if self._member_crc != me.crc32:
+                    raise GzipFooterError(
+                        "CRC32 mismatch at decompressed offset %d"
+                        % (fc.out_start + me.out_offset)
+                    )
+                if (self._member_len & 0xFFFFFFFF) != me.isize:
+                    raise GzipFooterError("ISIZE mismatch")
+                self._member_crc = 0
+                self._member_len = 0
+                prev = me.out_offset
+            tail = data[prev:]
+            if tail.shape[0]:
+                crc = _zlib.crc32(tail.tobytes()) & 0xFFFFFFFF
+                self._member_crc = crc32_combine(self._member_crc, crc, int(tail.shape[0]))
+                self._member_len += int(tail.shape[0])
+
+        # -- seek points ----------------------------------------------------
+        cuts = self._split_offsets(fc)
+        first_bound = cuts[0][1] if cuts else fc.size
+        point_flags = 0
+        if any(0 < me.out_offset <= first_bound for me in res.member_ends):
+            point_flags |= FLAG_HAS_INTERIOR_MEMBER_END
+        starts = [(fc.start_bit, 0, point_flags)] + cuts
+        bounds_for_flags = [s[1] for s in starts] + [fc.size]
+        stored_offsets = [
+            b.out_offset for b in res.blocks if b.block_type == BT_STORED
+        ]
+        ordinals: List[int] = []
+        for j, (bit, local_out, flags) in enumerate(starts):
+            # zlib delegation is unsafe when stored-block padding would not
+            # survive the bit-shift realignment (see FLAG_ZLIB_UNSAFE).
+            if bit % 8 != 0:
+                lo, hi = local_out, bounds_for_flags[j + 1]
+                if any(lo <= so < hi for so in stored_offsets):
+                    flags |= FLAG_ZLIB_UNSAFE
+            window = self._window_at(fc, local_out)
+            self._index.add_point(SeekPoint(bit, fc.out_start + local_out, window, flags))
+            ordinals.append(len(self._index) - 1)
+        # Hand decompressed slices to the cache under their index keys so
+        # trailing reads are free.
+        bounds = [s[1] for s in starts] + [fc.size]
+        for j, i_point in enumerate(ordinals):
+            self._fetcher.put_indexed(i_point, data[bounds[j] : bounds[j + 1]])
+
+    def _split_offsets(self, fc: FinalizedChunk):
+        """Interior seek points bounding decompressed spacing (paper §1.4)."""
+        res = fc.result
+        cuts = []
+        if fc.size <= self._index_spacing:
+            return cuts
+        next_cut = self._index_spacing
+        for b in res.blocks[1:]:
+            if b.out_offset < next_cut or b.is_final:
+                continue
+            if b.block_type not in (BT_STORED, BT_DYNAMIC):
+                continue  # the finder cannot resume at fixed blocks
+            bit = (
+                canonical_stored_offset(b.bit_offset)
+                if b.block_type == BT_STORED
+                else b.bit_offset
+            )
+            flags = FLAG_STORED_BLOCK if b.block_type == BT_STORED else 0
+            # Member-boundary flag for the sub-chunk starting here.
+            lo = b.out_offset
+            hi = fc.size
+            if any(lo < me.out_offset <= hi for me in res.member_ends):
+                flags |= FLAG_HAS_INTERIOR_MEMBER_END
+            cuts.append((bit, b.out_offset, flags))
+            next_cut = b.out_offset + self._index_spacing
+        # Fix member-end flags of earlier pieces: a piece has the flag iff a
+        # member end falls strictly inside (start, next_start].
+        fixed = []
+        all_bounds = [c[1] for c in cuts] + [fc.size]
+        for j, (bit, off, flags) in enumerate(cuts):
+            lo, hi = off, all_bounds[j + 1]
+            has = any(lo < me.out_offset <= hi for me in res.member_ends)
+            flags = (flags | FLAG_HAS_INTERIOR_MEMBER_END) if has else (flags & ~FLAG_HAS_INTERIOR_MEMBER_END)
+            fixed.append((bit, off, flags))
+        return fixed
+
+    def _window_at(self, fc: FinalizedChunk, local_out: int) -> bytes:
+        if local_out == 0:
+            return self._window if self._window is not None else b""
+        data = fc.bytes()
+        if local_out >= WINDOW_SIZE:
+            return data[local_out - WINDOW_SIZE : local_out].tobytes()
+        prev = full_window(self._window)
+        combined = np.concatenate([prev, data[:local_out]])
+        return combined[-WINDOW_SIZE:].tobytes()
+
+    # ------------------------------------------------------------------
+    # io.RawIOBase interface
+    # ------------------------------------------------------------------
+
+    def readable(self) -> bool:
+        return True
+
+    def seekable(self) -> bool:
+        return True
+
+    def tell(self) -> int:
+        return self._pos
+
+    def seek(self, offset: int, whence: int = io.SEEK_SET) -> int:
+        if whence == io.SEEK_SET:
+            pos = offset
+        elif whence == io.SEEK_CUR:
+            pos = self._pos + offset
+        elif whence == io.SEEK_END:
+            pos = self.size() + offset
+        else:
+            raise ValueError("bad whence")
+        if pos < 0:
+            raise ValueError("negative seek position")
+        self._pos = pos  # lazy: work happens on the next read (paper §3.1)
+        return pos
+
+    def size(self) -> int:
+        """Decompressed size (drives the first pass to completion)."""
+        while not self._eos:
+            self._advance_frontier()
+        assert self._index.decompressed_size is not None
+        return self._index.decompressed_size
+
+    def read(self, size: int = -1) -> bytes:
+        out: List[bytes] = []
+        pos = self._pos
+        remaining = size if size >= 0 else None
+        while remaining is None or remaining > 0:
+            if pos >= self._frontier_out:
+                if self._eos:
+                    break
+                self._advance_frontier()
+                continue
+            i = self._index.find(pos)
+            if i is None:
+                raise RapidgzipError("position %d precedes the index" % pos)
+            # The chunk's size must be bounded by a successor point (or the
+            # finalized total) before an indexed fetch can run.
+            if i + 1 >= len(self._index) and not self._index.finalized:
+                if self._eos:
+                    break
+                self._advance_frontier()
+                continue
+            data = self._fetcher.get_indexed(i)
+            start = self._index.point_at(i).decompressed_byte
+            off = pos - start
+            avail = int(data.shape[0]) - off
+            if avail <= 0:
+                break  # pos beyond EOF
+            take = avail if remaining is None else min(avail, remaining)
+            out.append(data[off : off + take].tobytes())
+            pos += take
+            if remaining is not None:
+                remaining -= take
+        self._pos = pos
+        return b"".join(out)
+
+    def readinto(self, b) -> int:
+        data = self.read(len(b))
+        b[: len(data)] = data
+        return len(data)
+
+    def close(self) -> None:
+        if not self.closed:
+            self._fetcher.shutdown()
+            self._reader.close()
+        super().close()
+
+    # ------------------------------------------------------------------
+    # index import/export & introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def index(self) -> GzipIndex:
+        return self._index
+
+    def build_full_index(self) -> GzipIndex:
+        while not self._eos:
+            self._advance_frontier()
+        return self._index
+
+    def export_index(self, dest) -> None:
+        self.build_full_index()
+        self._index.export_file(dest)
+
+    def stats(self) -> dict:
+        return self._fetcher.cache_report()

@@ -1,0 +1,112 @@
+"""Synthetic gzip-variant compressors (test + benchmark data generation).
+
+The paper evaluates decompression across files produced by gzip, pigz,
+bgzip, and igzip at various levels (Table 3) — each tool produces a
+structurally different gzip file. This module reproduces those structures
+with zlib so benchmarks and tests can exercise every code path offline:
+
+  * ``gzip_compress``        — single member, dynamic blocks (GNU gzip).
+  * ``pigz_like_compress``   — independent deflate spans joined by empty
+    stored (sync-flush) blocks, one member — pigz's byte-alignment
+    workaround (paper §5).
+  * ``multistream_gzip``     — concatenated gzip members (bgzip without
+    metadata / concatenated .gz files).
+  * ``bgzf_compress``        — Blocked GNU Zip Format: fixed-size members
+    with the BC extra field carrying the compressed size (paper §3.4.4).
+  * ``fixed_only_compress``  — every block uses fixed Huffman codes
+    (zlib Z_FIXED): the block finder cannot find any block, so parallel
+    decompression degrades to sequential — the igzip -0 analogue (§4.8).
+  * ``stored_only_compress`` — level-0 stored blocks (bgzip -0 analogue:
+    decompression is a memcpy via the NCB fast path).
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Iterable, List
+
+_GZIP_HEADER = b"\x1f\x8b\x08\x00\x00\x00\x00\x00\x00\xff"
+
+
+def _gzip_member(raw_deflate: bytes, data: bytes) -> bytes:
+    footer = struct.pack("<II", zlib.crc32(data) & 0xFFFFFFFF, len(data) & 0xFFFFFFFF)
+    return _GZIP_HEADER + raw_deflate + footer
+
+
+def gzip_compress(data: bytes, level: int = 6) -> bytes:
+    c = zlib.compressobj(level, zlib.DEFLATED, -15)
+    raw = c.compress(data) + c.flush(zlib.Z_FINISH)
+    return _gzip_member(raw, data)
+
+
+def pigz_like_compress(data: bytes, level: int = 6, block_size: int = 128 << 10) -> bytes:
+    """Independent deflate spans + empty stored blocks, one gzip member."""
+    parts: List[bytes] = []
+    n = len(data)
+    for off in range(0, max(n, 1), block_size):
+        block = data[off : off + block_size]
+        last = off + block_size >= n
+        c = zlib.compressobj(level, zlib.DEFLATED, -15)
+        body = c.compress(block)
+        body += c.flush(zlib.Z_FINISH if last else zlib.Z_FULL_FLUSH)
+        parts.append(body)
+    return _gzip_member(b"".join(parts), data)
+
+
+def multistream_gzip(data: bytes, level: int = 6, stream_size: int = 256 << 10) -> bytes:
+    parts: List[bytes] = []
+    for off in range(0, max(len(data), 1), stream_size):
+        parts.append(gzip_compress(data[off : off + stream_size], level))
+    return b"".join(parts)
+
+
+def bgzf_compress(data: bytes, level: int = 6, block_size: int = 0xFF00) -> bytes:
+    """BGZF: gzip members with the 'BC' extra subfield = total member size."""
+    out: List[bytes] = []
+    for off in range(0, max(len(data), 1), block_size):
+        block = data[off : off + block_size]
+        c = zlib.compressobj(level, zlib.DEFLATED, -15)
+        raw = c.compress(block) + c.flush(zlib.Z_FINISH)
+        # header: magic, CM, FLG=FEXTRA, mtime, XFL, OS, XLEN=6, BC subfield
+        xtra = b"BC" + struct.pack("<HH", 2, 0)  # BSIZE patched below
+        header = b"\x1f\x8b\x08\x04\x00\x00\x00\x00\x00\xff" + struct.pack("<H", 6) + xtra
+        footer = struct.pack("<II", zlib.crc32(block) & 0xFFFFFFFF, len(block) & 0xFFFFFFFF)
+        member = bytearray(header + raw + footer)
+        bsize = len(member) - 1  # BSIZE = total block size minus 1
+        member[16:18] = struct.pack("<H", bsize)
+        out.append(bytes(member))
+    # BGZF EOF marker: empty member (fixed canonical bytes from the spec).
+    out.append(
+        bytes.fromhex(
+            "1f8b08040000000000ff0600424302001b0003000000000000000000"
+        )
+    )
+    return b"".join(out)
+
+
+def fixed_only_compress(data: bytes, level: int = 6) -> bytes:
+    """Every block uses fixed Huffman codes: finder-invisible (igzip -0 case)."""
+    c = zlib.compressobj(level, zlib.DEFLATED, -15, 9, zlib.Z_FIXED)
+    raw = c.compress(data) + c.flush(zlib.Z_FINISH)
+    return _gzip_member(raw, data)
+
+
+def stored_only_compress(data: bytes) -> bytes:
+    """Level 0: all Non-Compressed blocks (bgzip -0 analogue)."""
+    c = zlib.compressobj(0, zlib.DEFLATED, -15)
+    raw = c.compress(data) + c.flush(zlib.Z_FINISH)
+    return _gzip_member(raw, data)
+
+
+COMPRESSORS = {
+    "gzip-1": lambda d: gzip_compress(d, 1),
+    "gzip-6": lambda d: gzip_compress(d, 6),
+    "gzip-9": lambda d: gzip_compress(d, 9),
+    "pigz-like-6": lambda d: pigz_like_compress(d, 6),
+    "multistream-6": lambda d: multistream_gzip(d, 6),
+    "bgzf-6": lambda d: bgzf_compress(d, 6),
+    "bgzf-0": lambda d: bgzf_compress(d, 0),
+    "fixed-only-6": lambda d: fixed_only_compress(d, 6),
+    "stored-only": stored_only_compress,
+}

@@ -1,0 +1,187 @@
+"""Gzip-corpus input pipeline: the paper's engine as a training substrate.
+
+``GzipCorpusDataset`` streams documents out of gzip-compressed shards
+through ``ParallelGzipReader`` (speculative parallel decompression +
+prefetch), tokenizes, and packs fixed-length LM sequences. This is the
+deployment the paper motivates (§1.1: Common-Crawl-scale ML pipelines).
+
+Fault tolerance: the iterator state is (shard index, *decompressed byte
+offset*, partial-buffer digest) — restoring seeks in O(1) through the seek
+index instead of re-decompressing the shard prefix, the paper's random
+access capability doing real work. State is saved/restored with the model
+checkpoint (checkpoint/checkpoint.py).
+
+In a multi-host deployment every host runs one pipeline over its own shard
+subset (shard_id=process_index) and feeds its addressable devices;
+decompression parallelism comes from the chunk fetcher's thread pool —
+exactly the paper's architecture, one instance per host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.index import GzipIndex
+from ..core.reader import ParallelGzipReader
+from .tokenizer import ByteTokenizer, EOS
+
+
+@dataclasses.dataclass
+class PipelineState:
+    shard_idx: int
+    byte_offset: int  # decompressed offset within the current shard
+    buffered_tokens: int  # tokens already emitted from the current read block
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d) -> "PipelineState":
+        return cls(int(d["shard_idx"]), int(d["byte_offset"]), int(d["buffered_tokens"]))
+
+
+class GzipCorpusDataset:
+    """Packed LM batches from gzip shards, checkpointable and shardable."""
+
+    def __init__(
+        self,
+        shards: Sequence[str],  # paths or bytes objects of .gz shards
+        *,
+        tokenizer: Optional[ByteTokenizer] = None,
+        seq_len: int = 1024,
+        batch_size: int = 8,
+        parallelization: int = 4,
+        chunk_size: int = 1 << 20,
+        read_block: int = 1 << 20,
+        shard_id: int = 0,
+        num_shards: int = 1,
+        indexes: Optional[Dict[int, GzipIndex]] = None,
+        loop: bool = True,
+    ):
+        if not shards:
+            raise ValueError("no shards")
+        self.shards = list(shards)
+        self.tokenizer = tokenizer or ByteTokenizer()
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.parallelization = parallelization
+        self.chunk_size = chunk_size
+        self.read_block = read_block
+        self.shard_id = shard_id
+        self.num_shards = num_shards
+        self.indexes = indexes or {}
+        self.loop = loop
+
+        self._my_shards = [i for i in range(len(self.shards)) if i % num_shards == shard_id]
+        if not self._my_shards:
+            raise ValueError("shard_id has no shards")
+        self.state = PipelineState(0, 0, 0)
+        self._reader: Optional[ParallelGzipReader] = None
+        self._reader_shard: Optional[int] = None
+        self._token_buf = np.empty(0, np.int32)
+        self._exhausted = False
+
+    # -- reader management ---------------------------------------------------
+
+    def _open(self, local_idx: int) -> ParallelGzipReader:
+        global_idx = self._my_shards[local_idx % len(self._my_shards)]
+        if self._reader is not None and self._reader_shard == global_idx:
+            return self._reader
+        if self._reader is not None:
+            self._reader.close()
+        self._reader = ParallelGzipReader(
+            self.shards[global_idx],
+            parallelization=self.parallelization,
+            chunk_size=self.chunk_size,
+            index=self.indexes.get(global_idx),
+        )
+        self._reader_shard = global_idx
+        return self._reader
+
+    # -- iteration -------------------------------------------------------------
+
+    def _refill(self) -> bool:
+        """Read the next block of the corpus into the token buffer."""
+        while True:
+            if not self.loop and self._exhausted:
+                return False
+            reader = self._open(self.state.shard_idx)
+            reader.seek(self.state.byte_offset)
+            data = reader.read(self.read_block)
+            if not data:
+                # next shard (wrapping if looping)
+                nxt = self.state.shard_idx + 1
+                if not self.loop and nxt >= len(self._my_shards):
+                    self._exhausted = True
+                    return False
+                self.state = PipelineState(nxt % len(self._my_shards), 0, 0)
+                continue
+            tokens = self.tokenizer.encode(data, add_bos=self.state.byte_offset == 0, add_eos=False)
+            skip = self.state.buffered_tokens
+            if skip:
+                tokens = tokens[skip:]
+            self._token_buf = np.concatenate([self._token_buf, tokens])
+            self.state.byte_offset += len(data)
+            self.state.buffered_tokens = 0
+            return True
+
+    def next_batch(self) -> Optional[Dict[str, np.ndarray]]:
+        """Packed {tokens: [B, seq_len+1]} batch (causal LM layout)."""
+        need = self.batch_size * (self.seq_len + 1)
+        while self._token_buf.shape[0] < need:
+            if not self._refill():
+                if self._token_buf.shape[0] == 0:
+                    return None
+                pad = np.full(need - self._token_buf.shape[0], EOS, np.int32)
+                self._token_buf = np.concatenate([self._token_buf, pad])
+        batch = self._token_buf[:need].reshape(self.batch_size, self.seq_len + 1).copy()
+        self._token_buf = self._token_buf[need:]
+        return {"tokens": batch}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            b = self.next_batch()
+            if b is None:
+                return
+            yield b
+
+    # -- checkpointing -----------------------------------------------------------
+
+    def state_dict(self) -> Dict[str, int]:
+        # The buffer itself is not persisted; instead record how many tokens
+        # of the current block were already consumed so restore can skip them.
+        st = dataclasses.replace(self.state)
+        # tokens consumed from past blocks = everything not in _token_buf
+        return {
+            **st.as_dict(),
+            "pending_buffer": int(self._token_buf.shape[0]),
+        }
+
+    def load_state_dict(self, d: Dict[str, int]) -> None:
+        self.state = PipelineState.from_dict(d)
+        # Rewind to the start of the partially-consumed region: drop the
+        # buffered remainder and re-read it (idempotent, O(1) via the index).
+        pending = int(d.get("pending_buffer", 0))
+        self.state.byte_offset = max(0, self.state.byte_offset - pending)
+        self._token_buf = np.empty(0, np.int32)
+        self._exhausted = False
+        if self._reader is not None:
+            self._reader.close()
+            self._reader = None
+            self._reader_shard = None
+
+    def export_indexes(self) -> Dict[int, bytes]:
+        """Seek indexes of every opened shard (reusable across restarts)."""
+        out = {}
+        if self._reader is not None and self._reader_shard is not None:
+            out[self._reader_shard] = self._reader.index.to_bytes()
+        return out
+
+    def close(self) -> None:
+        if self._reader is not None:
+            self._reader.close()
+            self._reader = None

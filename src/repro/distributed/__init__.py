@@ -1,0 +1,3 @@
+from .sharding import ShardingRules, constrain, default_rules, logical_sharding_tree, zero1_spec
+
+__all__ = ["ShardingRules", "constrain", "default_rules", "logical_sharding_tree", "zero1_spec"]

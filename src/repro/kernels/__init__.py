@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships three layers (repo convention):
+  * ``<name>.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling.
+  * ``ops.py``    — jit'd wrappers (padding/reshape/dtype glue).
+  * ``ref.py``    — pure-jnp oracle for allclose validation.
+
+This container is CPU-only: kernels validate with ``interpret=True`` (kernel
+bodies execute in Python); TPU v5e is the compile target.
+"""
+
+from .ops import crc32_parallel, marker_replace, precode_candidates
+
+__all__ = ["crc32_parallel", "marker_replace", "precode_candidates"]

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: stage-2 marker replacement (paper §2.2 step 3, Table 2).
+
+Marker replacement is the data-parallel half of two-stage decompression:
+
+    out[i] = sym[i]                      if sym[i] < 256   (resolved literal)
+    out[i] = window[sym[i] - 256]        otherwise         (marker)
+
+which collapses into a single gather through a 33 024-entry replacement
+table (``[0..255] ++ window``). On TPU the table (132 KiB as int32) is
+pinned whole in VMEM while symbol tiles stream HBM→VMEM; the gather runs on
+the VPU at memory bandwidth — the TPU-native analogue of the paper's
+L1-resident window on CPU.
+
+Tiling: symbols are processed in (8, 1024) int32 tiles (8×128-lane VREG
+granularity); the grid walks the flattened symbol stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import TABLE_SIZE
+
+# One tile = SUBLANES x LANES*4 elements; int32 VREGs are (8, 128).
+TILE_ROWS = 8
+TILE_COLS = 1024
+TILE = TILE_ROWS * TILE_COLS
+
+
+def _marker_replace_kernel(syms_ref, table_ref, out_ref):
+    """out = table[syms] — table resident in VMEM, symbols tiled."""
+    syms = syms_ref[...]
+    table = table_ref[...]
+    out_ref[...] = table[syms]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def marker_replace_tiles(syms: jax.Array, table: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Gather-replace over tiled int32 symbols.
+
+    syms:  (n_tiles, TILE_ROWS, TILE_COLS) int32 (padded, values < TABLE_SIZE)
+    table: (TABLE_SIZE,) int32 replacement table
+    returns same shape int32 with markers resolved to byte values.
+    """
+    n_tiles = syms.shape[0]
+    return pl.pallas_call(
+        _marker_replace_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_COLS), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TABLE_SIZE,), lambda i: (0,)),  # whole table in VMEM
+        ],
+        out_specs=pl.BlockSpec((1, TILE_ROWS, TILE_COLS), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(syms.shape, jnp.int32),
+        interpret=interpret,
+    )(syms, table)

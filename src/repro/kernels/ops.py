@@ -1,0 +1,102 @@
+"""jit'd high-level wrappers around the Pallas kernels.
+
+These are the entry points the rest of the system uses: they pad/reshape
+host data into kernel tiling, dispatch (interpret=True on CPU — TPU v5e is
+the compile target), and restore shapes/dtypes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.crc32 import combine_parts
+from .crc32 import N_SEGMENTS, SEG_COLS, SEG_ROWS, crc32_segments, make_crc_table
+from .marker_replace import TILE, TILE_COLS, TILE_ROWS, marker_replace_tiles
+from .precode_check import BLOCK, HALO, precode_check_blocks
+from .ref import make_replacement_table
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+#: interpret=True executes kernel bodies in Python on CPU — the validation
+#: mode for this container; on real TPU hardware the same calls compile.
+INTERPRET = not _ON_TPU
+
+
+# -- marker replacement -------------------------------------------------------
+
+def marker_replace(symbols: np.ndarray, window: Optional[bytes]) -> np.ndarray:
+    """Resolve a uint16 marker stream to bytes via the Pallas kernel."""
+    n = symbols.shape[0]
+    table = jnp.asarray(make_replacement_table(np.frombuffer(window or b"", np.uint8)))
+    n_tiles = max(1, -(-n // TILE))
+    padded = np.zeros(n_tiles * TILE, dtype=np.int32)
+    padded[:n] = symbols.astype(np.int32)
+    tiles = jnp.asarray(padded.reshape(n_tiles, TILE_ROWS, TILE_COLS))
+    out = marker_replace_tiles(tiles, table, interpret=INTERPRET)
+    return np.asarray(out).reshape(-1)[:n].astype(np.uint8)
+
+
+# -- block-finder precheck ----------------------------------------------------
+
+def precode_candidates(data: bytes, start_bit: int = 0, end_bit: Optional[int] = None) -> np.ndarray:
+    """Bit offsets passing finder steps 1-4, computed on-device.
+
+    Returns absolute candidate bit offsets; callers confirm with the strict
+    host-side header parse (steps 5-7), exactly like the production finder.
+    """
+    total_bits = len(data) * 8
+    if end_bit is None:
+        end_bit = total_bits - HALO
+    end_bit = min(end_bit, total_bits - HALO)
+    if end_bit <= start_bit:
+        return np.empty(0, dtype=np.int64)
+    n = end_bit - start_bit
+
+    first_byte = start_bit // 8
+    need_bits = (start_bit - first_byte * 8) + n + HALO
+    need_bytes = -(-need_bits // 8)
+    raw = np.frombuffer(data, np.uint8, count=min(need_bytes, len(data) - first_byte), offset=first_byte)
+    bits = np.unpackbits(raw, bitorder="little").astype(np.int32)
+    rel = start_bit - first_byte * 8
+
+    n_blocks = max(1, -(-n // BLOCK))
+    padded = np.zeros((n_blocks + 1) * BLOCK, dtype=np.int32)
+    usable = min(bits.shape[0] - rel, padded.shape[0])
+    padded[:usable] = bits[rel : rel + usable]
+    blocks = jnp.asarray(padded.reshape(n_blocks + 1, BLOCK))
+    mask = np.asarray(precode_check_blocks(blocks, interpret=INTERPRET)).reshape(-1)[:n]
+    return np.nonzero(mask)[0].astype(np.int64) + start_bit
+
+
+# -- crc32 --------------------------------------------------------------------
+
+def crc32_parallel(data: bytes) -> int:
+    """CRC32 of ``data`` via N_SEGMENTS parallel lanes + GF(2) combine."""
+    n = len(data)
+    if n == 0:
+        return 0
+    seg_len = max(1, -(-n // N_SEGMENTS))
+    padded = np.zeros(N_SEGMENTS * seg_len, dtype=np.uint8)
+    padded[:n] = np.frombuffer(data, np.uint8)
+    tiles = jnp.asarray(
+        padded.reshape(SEG_ROWS, SEG_COLS, seg_len).astype(np.int32)
+    )
+    crcs = np.asarray(crc32_segments(tiles, make_crc_table(), interpret=INTERPRET)).astype(np.uint32)
+    # Combine per-segment CRCs; the tail segment may be short — zero padding
+    # inside a segment changes its CRC, so true lengths are honored by
+    # recomputing the last (partial) segment's CRC on the host.
+    parts = []
+    flat = crcs.reshape(-1)
+    full_segments = n // seg_len
+    for s in range(full_segments):
+        parts.append((int(flat[s]), seg_len))
+    rem = n - full_segments * seg_len
+    if rem:
+        import zlib
+
+        tail = data[full_segments * seg_len :]
+        parts.append((zlib.crc32(tail) & 0xFFFFFFFF, rem))
+    return combine_parts(parts)

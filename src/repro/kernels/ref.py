@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MARKER_BASE = 256
+WINDOW_SIZE = 32768
+TABLE_SIZE = MARKER_BASE + WINDOW_SIZE  # 33 024
+
+
+# -- marker replacement -------------------------------------------------------
+
+def marker_replace_ref(syms: jax.Array, table: jax.Array) -> jax.Array:
+    """out = table[syms] (identity for literals, window gather for markers)."""
+    return jnp.take(table, syms, axis=0)
+
+
+def make_replacement_table(window: np.ndarray) -> np.ndarray:
+    """int32 replacement table from a (possibly short) window."""
+    table = np.empty(TABLE_SIZE, dtype=np.int32)
+    table[:MARKER_BASE] = np.arange(MARKER_BASE)
+    padded = np.zeros(WINDOW_SIZE, dtype=np.int32)
+    w = np.asarray(window, dtype=np.int32)[-WINDOW_SIZE:]
+    padded[WINDOW_SIZE - w.shape[0] :] = w
+    table[MARKER_BASE:] = padded
+    return table
+
+
+# -- precode / block-finder precheck ------------------------------------------
+
+def precode_check_ref(bits: jax.Array) -> jax.Array:
+    """Candidate mask over a flat int32 0/1 bit plane (halo included).
+
+    bits: (n,) with n >= offsets + 74; returns (n - 74,) int32 mask.
+    """
+    n = bits.shape[0] - 74
+
+    def field(at, width):
+        out = jax.lax.dynamic_slice_in_dim(bits, at, n)
+        for j in range(1, width):
+            out = out | (jax.lax.dynamic_slice_in_dim(bits, at + j, n) << j)
+        return out
+
+    b0 = jax.lax.dynamic_slice_in_dim(bits, 0, n)
+    b1 = jax.lax.dynamic_slice_in_dim(bits, 1, n)
+    b2 = jax.lax.dynamic_slice_in_dim(bits, 2, n)
+    ok = (b0 == 0) & (b1 == 0) & (b2 == 1)
+    ok &= field(3, 5) < 30
+    n_codes = field(13, 4) + 4
+    kraft = jnp.zeros((n,), jnp.int32)
+    for k in range(19):
+        cl = field(17 + 3 * k, 3)
+        active = (k < n_codes) & (cl > 0)
+        kraft = kraft + jnp.where(active, jax.lax.shift_right_logical(jnp.int32(128), cl), 0)
+    ok &= kraft == 128
+    return ok.astype(jnp.int32)
+
+
+# -- crc32 --------------------------------------------------------------------
+
+def crc32_segments_ref(data: jax.Array, table: jax.Array) -> jax.Array:
+    """Per-segment CRC32 over (R, C, L) int32 bytes."""
+    def step(crc, byte):
+        idx = (crc ^ byte) & 0xFF
+        return jax.lax.shift_right_logical(crc, 8) ^ jnp.take(table, idx, axis=0), None
+
+    init = jnp.full(data.shape[:2], jnp.int32(-1))
+    crc, _ = jax.lax.scan(step, init, jnp.moveaxis(data, -1, 0))
+    return ~crc

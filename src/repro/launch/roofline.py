@@ -1,0 +1,146 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_chip / 197e12        (bf16 peak, TPU v5e)
+    memory     = HLO_bytes_per_chip / 819e9          (HBM bandwidth)
+    collective = wire_bytes_per_chip / 50e9          (one ICI link, conservative)
+
+``cost_analysis()`` on an SPMD-partitioned executable reports the
+*per-partition* program, so terms are per-chip by construction. Collective
+wire bytes are parsed from the optimized HLO: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op's shape,
+scaled by the ring-algorithm wire factor for its replica-group size n:
+
+    all-reduce      2 * (n-1)/n * size
+    all-gather      (n-1)/n * size          (size = gathered output)
+    reduce-scatter  (n-1) * size            (size = scattered output)
+    all-to-all      (n-1)/n * size
+    collective-permute  size
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(1, first.count(",") + 1)
+    return default
+
+
+def collective_wire_bytes(hlo_text: str, *, default_group: int = 1) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind (ring-algorithm accounting)."""
+    out: Dict[str, float] = {
+        "all-gather": 0.0,
+        "all-reduce": 0.0,
+        "reduce-scatter": 0.0,
+        "all-to-all": 0.0,
+        "collective-permute": 0.0,
+    }
+    counts: Dict[str, int] = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        n = _group_size(line, default_group)
+        if n <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / n * size
+        elif kind == "all-gather":
+            wire = (n - 1) / n * size
+        elif kind == "reduce-scatter":
+            wire = float(n - 1) * size
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * size
+        else:  # collective-permute
+            wire = float(size)
+        out[kind] += wire
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+def roofline_terms(
+    cost: Dict[str, float],
+    wire: Dict[str, float],
+    *,
+    while_trip_counts: Optional[List[int]] = None,
+) -> Dict[str, float]:
+    """Three roofline terms in seconds (per chip, per step)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = float(wire.get("total", 0.0))
+    terms = {
+        "flops": flops,
+        "bytes": byts,
+        "collective_bytes": coll,
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": byts / HBM_BW,
+        "t_collective": coll / ICI_BW,
+    }
+    dominant = max(("t_compute", "t_memory", "t_collective"), key=lambda k: terms[k])
+    terms["dominant"] = dominant  # type: ignore[assignment]
+    bound = max(terms["t_compute"], terms["t_memory"], terms["t_collective"])
+    terms["roofline_fraction"] = terms["t_compute"] / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, shape, n_layers_active: Optional[int] = None) -> float:
+    """6 * N(_active) * D for the step's token count (train) or token (decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:
+        tokens = shape.global_batch  # one new token per sequence
+        mult = 2.0
+    return mult * n_active * tokens

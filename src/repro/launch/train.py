@@ -1,0 +1,125 @@
+"""End-to-end training driver: gzip corpus -> parallel decompression ->
+tokens -> pjit train step, with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch granite-3-2b --smoke --steps 50 --corpus /tmp/corpus \
+        --ckpt /tmp/ckpt --ckpt-every 20
+
+On restart the driver restores model+optimizer state AND the data-pipeline
+seek state (O(1) thanks to the gzip seek index — the paper's random-access
+capability is what makes data restart cheap).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from ..configs import all_configs, get_config, smoke_config
+from ..data import GzipCorpusDataset
+from ..distributed import default_rules
+from ..models import build_model
+from ..train import AdamWConfig, init_train_state, make_train_step
+from .mesh import make_host_mesh
+
+
+def make_corpus(directory: str, n_shards: int = 2, shard_bytes: int = 1 << 20) -> None:
+    """Synthesize a small gzip text corpus if none exists."""
+    import gzip as _gzip
+
+    os.makedirs(directory, exist_ok=True)
+    rng = np.random.default_rng(0)
+    words = [b"the", b"quick", b"brown", b"fox", b"jumps", b"over", b"lazy",
+             b"dog", b"training", b"corpus", b"gzip", b"parallel"]
+    for i in range(n_shards):
+        path = os.path.join(directory, f"shard_{i:03d}.gz")
+        if os.path.exists(path):
+            continue
+        idx = rng.integers(0, len(words), shard_bytes // 5)
+        data = b" ".join(words[j] for j in idx)[:shard_bytes]
+        with open(path, "wb") as f:
+            f.write(_gzip.compress(data, 6))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=sorted(all_configs()))
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--corpus", default="/tmp/repro_corpus")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--decomp-parallelism", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    rules = default_rules(mesh)
+
+    make_corpus(args.corpus)
+    shards = sorted(glob.glob(os.path.join(args.corpus, "*.gz")))
+    ds = GzipCorpusDataset(
+        shards,
+        seq_len=args.seq,
+        batch_size=args.batch * args.grad_accum,
+        parallelization=args.decomp_parallelism,
+        chunk_size=256 << 10,
+    )
+
+    params, opt = init_train_state(model, jax.random.PRNGKey(0), compress_grads=args.compress_grads)
+    start_step = 0
+    if args.ckpt:
+        path = latest_checkpoint(args.ckpt)
+        if path:
+            template = {"params": params, "opt": opt, "data": ds.state_dict()}
+            start_step, state = restore_checkpoint(path, template)
+            params, opt = state["params"], state["opt"]
+            ds.load_state_dict(state["data"])
+            print(f"[train] restored step {start_step} from {path}")
+
+    step_fn, _ = make_train_step(
+        model, mesh, rules,
+        AdamWConfig(peak_lr=args.lr, warmup_steps=max(5, args.steps // 20), total_steps=args.steps),
+        grad_accum=args.grad_accum,
+        compress_grads=args.compress_grads,
+    )
+
+    t_data = t_step = 0.0
+    for step in range(start_step, args.steps):
+        t0 = time.perf_counter()
+        batch = ds.next_batch()
+        t_data += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        t_step += time.perf_counter() - t0
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss {loss:.4f} lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f}")
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, step + 1,
+                            {"params": params, "opt": opt, "data": ds.state_dict()})
+            print(f"[train] checkpoint @ step {step + 1}")
+
+    tokens = args.steps * args.batch * args.grad_accum * args.seq
+    print(f"[train] done: {tokens} tokens; data {t_data:.1f}s, step {t_step:.1f}s "
+          f"(data-pipeline share {100*t_data/max(t_data+t_step,1e-9):.1f}%)")
+    ds.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .model import Model, build_model, cross_entropy
+from .transformer import ModelContext, init_caches
+
+__all__ = ["Model", "ModelContext", "build_model", "cross_entropy", "init_caches"]

@@ -1,0 +1,356 @@
+"""Foundational layers for the 10 assigned architectures.
+
+Functional style: parameter trees are plain nested dicts of jax.Arrays built
+from ``ParamDef`` declarations that carry logical sharding axes (resolved by
+``distributed/sharding.py``). All compute is bf16 with fp32 softmax/norm
+statistics; Megatron-style TP pairs (column then row) keep one psum per
+block under GSPMD propagation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict of arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None
+    dtype: Any = jnp.bfloat16
+
+    def initialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(self.dtype)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs, key) -> Params:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [d.initialize(k) for d, k in zip(leaves, keys)])
+
+
+def abstract_tree(defs) -> Params:
+    return jax.tree.map(lambda d: d.abstract(), defs, is_leaf=is_def)
+
+
+def logical_tree(defs):
+    return jax.tree.map(lambda d: d.logical, defs, is_leaf=is_def)
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Half-rotation RoPE. x: [..., S, H, Dh]; positions: [..., S]."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / MLP
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)
+
+
+def gated_mlp_defs(d_model: int, d_ff: int, *, prefix_dims: Tuple[int, ...] = ()) -> Dict[str, ParamDef]:
+    pl = (None,) * len(prefix_dims)
+    return {
+        "w_gate": ParamDef(prefix_dims + (d_model, d_ff), pl + ("embed", "ffn")),
+        "w_up": ParamDef(prefix_dims + (d_model, d_ff), pl + ("embed", "ffn")),
+        "w_down": ParamDef(prefix_dims + (d_ff, d_model), pl + ("ffn", "embed")),
+    }
+
+
+def gated_mlp(params: Params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    a = act_fn(activation)
+    gate = jnp.einsum("...sd,df->...sf", x, params["w_gate"])
+    up = jnp.einsum("...sd,df->...sf", x, params["w_up"])
+    return jnp.einsum("...sf,fd->...sd", a(gate) * up, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def gqa_defs(
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    qkv_bias: bool = False,
+) -> Dict[str, ParamDef]:
+    defs: Dict[str, ParamDef] = {
+        "wq": ParamDef((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+    if qkv_bias:
+        defs["bq"] = ParamDef((n_heads, head_dim), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((n_kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((n_kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: [B,Sq,K,G,Dh], k: [B,Skv,K,Dh] -> [B,K,G,Sq,Skv] (fp32)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _grouped_values(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: [B,K,G,Sq,Skv], v: [B,Skv,K,Dh] -> [B,Sq,K,G,Dh]."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+
+
+def causal_attention(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Skv, Kv, Dh]
+    v: jax.Array,  # [B, Skv, Kv, Dh]
+    *,
+    q_offset: int | jax.Array = 0,
+    kv_len: Optional[jax.Array] = None,  # valid cache length per batch [B]
+    sliding_window: Optional[int] = None,
+    q_chunk: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Grouped-query attention with optional q-chunking (memory-bounded).
+
+    Chunking unrolls over static q-blocks, each attending only to the kv
+    prefix it can see — no flops on fully-masked blocks (the poor man's
+    flash attention; the HLO stays compact because blocks share code).
+    """
+    b, sq, h, dh = q.shape
+    kv_heads = k.shape[2]
+    dv = v.shape[-1]  # may differ from dh (MLA: qk_dim != v_head_dim)
+    assert h % kv_heads == 0, (h, kv_heads)
+    g = h // kv_heads
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, kv_heads, g, dh)
+
+    def block(q_blk, blk_offset, kv_hi):
+        """q_blk: [B, C, K, G, Dh] attending to k[:, :kv_hi]."""
+        kk = k[:, :kv_hi]
+        vv = v[:, :kv_hi]
+        scores = _grouped_scores(q_blk, kk) * scale  # [B,K,G,C,kv_hi]
+        q_pos = blk_offset + jnp.arange(q_blk.shape[1])[:, None] + (
+            q_offset if not isinstance(q_offset, int) else jnp.int32(q_offset)
+        )
+        kv_pos = jnp.arange(kv_hi)[None, :]
+        mask = jnp.ones((q_blk.shape[1], kv_hi), dtype=bool)
+        if causal:
+            mask &= kv_pos <= q_pos
+        if sliding_window is not None:
+            mask &= kv_pos > q_pos - sliding_window
+        if kv_len is not None:
+            mask = mask[None] & (kv_pos[None] < kv_len[:, None, None])
+            scores = jnp.where(mask[:, None, None], scores, -1e30)
+        else:
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return _grouped_values(probs, vv)
+
+    if q_chunk is None or q_chunk >= sq or not causal or not isinstance(q_offset, int):
+        out = block(qg, 0, k.shape[1])
+        return out.reshape(b, sq, h, dv)
+
+    n_blocks = -(-sq // q_chunk)
+    outs = []
+    for i in range(n_blocks):
+        lo = i * q_chunk
+        hi = min(sq, lo + q_chunk)
+        kv_hi = min(k.shape[1], q_offset + hi)  # static: no masked-block flops
+        outs.append(block(qg[:, lo:hi], lo, kv_hi))
+    return jnp.concatenate(outs, axis=1).reshape(b, sq, h, dv)
+
+
+def ring_attention_decode(
+    q: jax.Array,  # [B, 1, H, Dh]
+    cache: Dict[str, jax.Array],  # k/v [B, W, Kv, Dh] + pos [B?, W] int32 (-1 empty)
+    k_new: jax.Array,
+    v_new: jax.Array,
+    position: jax.Array,  # scalar absolute position of the new token
+    *,
+    sliding_window: int,
+    softmax_scale: Optional[float] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Sliding-window decode against a ring buffer of size W (bounded state).
+
+    Slot ``p % W`` holds position ``p``; the per-slot position array masks
+    empty and out-of-window entries — absolute RoPE stays correct because
+    keys were rotated before insertion.
+    """
+    b, _, h, dh = q.shape
+    W = cache["k"].shape[1]
+    slot = position % W
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), position, jnp.int32), slot, axis=0
+    )
+    kv_heads = k_cache.shape[2]
+    g = h // kv_heads
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+    scores = _grouped_scores(q.reshape(b, 1, kv_heads, g, dh), k_cache) * scale
+    valid = (pos >= 0) & (pos <= position) & (pos > position - sliding_window)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_values(probs, v_cache).reshape(b, 1, h, dh)
+    return out, {"k": k_cache, "v": v_cache, "pos": pos}
+
+
+def gqa_attention_block(
+    params: Params,
+    x: jax.Array,  # [B, S, D]
+    positions: jax.Array,  # [B, S]
+    *,
+    rope_theta: float = 10000.0,
+    mode: str = "train",  # train | prefill | decode
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,
+    sliding_window: Optional[int] = None,
+    q_chunk: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    causal: bool = True,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """GQA attention with rope; returns (y, cache_out).
+
+    * train:   cache_out is None.
+    * prefill: cache_out = {"k","v"} post-rope full-sequence tensors (the
+               serve layer lays them out into decode caches).
+    * decode:  cache is required; S must be 1. Linear caches use
+               dynamic-update + causal mask; sliding-window caches are ring
+               buffers (bounded memory at 0.5M contexts).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    if mode == "decode":
+        assert cache is not None and cache_pos is not None and x.shape[1] == 1
+        if "pos" in cache:  # ring buffer (sliding window)
+            out, new_cache = ring_attention_decode(
+                q, cache, k, v, cache_pos,
+                sliding_window=sliding_window or cache["k"].shape[1],
+                softmax_scale=softmax_scale,
+            )
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache}
+            kv_len = jnp.full((x.shape[0],), cache_pos + 1, dtype=jnp.int32)
+            out = causal_attention(
+                q, k_cache, v_cache,
+                q_offset=cache_pos, kv_len=kv_len,
+                sliding_window=sliding_window,
+                softmax_scale=softmax_scale, causal=causal,
+            )
+    else:
+        out = causal_attention(
+            q, k, v,
+            sliding_window=sliding_window, q_chunk=q_chunk,
+            softmax_scale=softmax_scale, causal=causal,
+        )
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def init_kv_cache(
+    batch: int,
+    max_len: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype=jnp.bfloat16,
+    *,
+    ring: bool = False,
+):
+    cache = {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+    }
+    if ring:
+        cache["pos"] = jnp.full((max_len,), -1, jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_attention_block(
+    params: Params,
+    x: jax.Array,  # decoder states [B, S, D]
+    enc: jax.Array,  # encoder states [B, T, D]
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", enc, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc, params["wv"])
+    out = causal_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])

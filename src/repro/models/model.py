@@ -1,0 +1,271 @@
+"""Unified model facade: one object per architecture family exposing
+
+    init / abstract / logical            (parameter trees)
+    loss(params, batch, ctx)             (train forward + CE)
+    prefill(params, batch, ctx)          (logits + per-layer cache tensors)
+    decode_step(params, tokens, caches, cache_pos, ctx)
+
+Families: dense / moe / hybrid -> transformer.py; ssm (xLSTM) -> xlstm.py;
+audio (Whisper) -> encdec.py; vlm -> transformer.py with prefix embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from . import encdec, transformer, xlstm
+from .layers import ParamDef, abstract_tree, init_tree, logical_tree, rms_norm
+from .transformer import ModelContext
+
+
+def cross_entropy(
+    logits: jax.Array,  # [B, S, V]
+    labels: jax.Array,  # [B, S] int32; negative = masked
+    *,
+    z_loss: float = 1e-4,
+    ctx: Optional["ModelContext"] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Vocab-sharded CE: both the fp32 logits and the one-hot targets are
+    constrained to the ("batch", None, "vocab") layout so GSPMD keeps every
+    [B, S, V] intermediate vocab-sharded — without the constraint the
+    one-hot materializes replicated and XLA all-gathers the fp32 logits
+    (~TB-scale wire for 256k vocabs; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    V = logits.shape[-1]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    onehot = jax.nn.one_hot(safe, V, dtype=jnp.float32)
+    if ctx is not None:
+        lf = constrain(lf, ctx.rules, "batch", None, "vocab")
+        onehot = constrain(onehot, ctx.rules, "batch", None, "vocab")
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    picked = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    nll = (lse - picked) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    metrics = {"nll": loss, "tokens": denom}
+    if z_loss:
+        zl = z_loss * jnp.sum(jnp.square(lse) * mask) / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    defs: Any
+    loss: Callable  # (params, batch, ctx) -> (loss, metrics)
+    prefill: Callable  # (params, batch, ctx) -> (logits, caches)
+    decode_step: Callable  # (params, tokens, caches, cache_pos, ctx) -> (logits, caches)
+    init_decode_caches: Callable  # (batch, max_len) -> caches
+
+    def init(self, key) -> Any:
+        return init_tree(self.defs, key)
+
+    def abstract(self) -> Any:
+        return abstract_tree(self.defs)
+
+    def logical(self) -> Any:
+        return logical_tree(self.defs)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only families (dense / moe / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+def _decoder_model(cfg: ModelConfig) -> Model:
+    defs = transformer.decoder_defs(cfg)
+
+    def _prefix(params, batch):
+        if cfg.family == "vlm":
+            return batch["patches"]
+        return None
+
+    def loss(params, batch, ctx):
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        prefix = _prefix(params, batch)
+        logits, aux, _ = transformer.forward(
+            cfg, ctx, params, inputs, mode="train", prefix_embeds=prefix
+        )
+        if prefix is not None:
+            logits = logits[:, prefix.shape[1] :]
+        ce, metrics = cross_entropy(logits, labels, ctx=ctx)
+        total = ce + 0.01 * aux
+        metrics["aux_loss"] = aux
+        return total, metrics
+
+    def prefill(params, batch, ctx):
+        prefix = _prefix(params, batch)
+        logits, _, caches = transformer.forward(
+            cfg, ctx, params, batch["tokens"], mode="prefill", prefix_embeds=prefix
+        )
+        return logits[:, -1:], caches
+
+    def decode_step(params, tokens, caches, cache_pos, ctx):
+        logits, _, caches = transformer.forward(
+            cfg, ctx, params, tokens, mode="decode", caches=caches, cache_pos=cache_pos
+        )
+        return logits, caches
+
+    def init_decode_caches(batch, max_len):
+        return transformer.init_caches(cfg, batch, max_len)
+
+    return Model(cfg, defs, loss, prefill, decode_step, init_decode_caches)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM (ssm family)
+# ---------------------------------------------------------------------------
+
+def _xlstm_defs(cfg: ModelConfig):
+    V, D, H = cfg.vocab_size, cfg.d_model, cfg.n_heads
+    every = max(1, cfg.slstm_every)
+    n_groups = cfg.n_layers // every
+    n_m = every - 1
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=D ** -0.5),
+        "final_norm": ParamDef((D,), ("embed",), init="zeros"),
+        "unembed": ParamDef((D, V), ("embed", "vocab")),
+        # groups of (every-1) mLSTM blocks + 1 sLSTM block, scanned over groups
+        "mlstm": _nest_stack(xlstm.mlstm_defs(n_m, D, H), n_groups),
+        "slstm": _nest_stack(xlstm.slstm_defs(0, D, H), n_groups),
+    }
+
+
+def _nest_stack(defs, n: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (None,) + d.logical, d.init, d.scale, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _xlstm_model(cfg: ModelConfig) -> Model:
+    defs = _xlstm_defs(cfg)
+    every = max(1, cfg.slstm_every)
+    n_m = every - 1
+
+    def run(params, tokens, ctx, *, mode, caches=None):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = constrain(x, ctx.rules, "batch", None, None)
+        want_state = mode != "train"
+
+        def group(carry, layer_in):
+            x_in = carry
+            p, cache = layer_in
+
+            def m_body(xm, m_in):
+                pm, mc = m_in
+                xm, new_state = xlstm.mlstm_block(
+                    pm, xm, cfg.n_heads,
+                    state=mc if mode == "decode" else None,
+                    return_state=want_state,
+                    unroll=cfg.scan_unroll,
+                )
+                return xm, new_state
+
+            if n_m:
+                x_mid, m_states = jax.lax.scan(
+                    m_body, x_in, (p["m"], cache["m"] if cache is not None else None),
+                    unroll=True if cfg.scan_unroll else 1,
+                )
+            else:
+                x_mid, m_states = x_in, None
+            x_out, s_state_out = xlstm.slstm_block(
+                p["s"], x_mid, cfg.n_heads,
+                state=cache["s"] if (cache is not None and mode == "decode") else None,
+                return_state=want_state,
+            )
+            cache_out = {"m": m_states, "s": s_state_out} if want_state else None
+            return x_out, cache_out
+
+        x, caches_out = jax.lax.scan(
+            group, x, ({"m": params["mlstm"], "s": params["slstm"]}, caches),
+            unroll=True if cfg.scan_unroll else 1,
+        )
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+        return constrain(logits, ctx.rules, "batch", None, "vocab"), caches_out
+
+    def loss(params, batch, ctx):
+        tokens = batch["tokens"]
+        logits, _ = run(params, tokens[:, :-1], ctx, mode="train")
+        ce, metrics = cross_entropy(logits, tokens[:, 1:], ctx=ctx)
+        return ce, metrics
+
+    def prefill(params, batch, ctx):
+        # Prefill builds recurrent state via the chunkwise form (no caches in).
+        logits, caches = run(params, batch["tokens"], ctx, mode="prefill")
+        return logits[:, -1:], caches
+
+    def decode_step(params, tokens, caches, cache_pos, ctx):
+        logits, caches = run(params, tokens, ctx, mode="decode", caches=caches)
+        return logits, caches
+
+    def init_decode_caches(batch, max_len):
+        every_ = max(1, cfg.slstm_every)
+        n_groups = cfg.n_layers // every_
+        m_state = xlstm.init_mlstm_state(batch, cfg.d_model, cfg.n_heads)
+        s_state = xlstm.init_slstm_state(batch, cfg.d_model, cfg.n_heads)
+        stack_m = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None, None], (n_groups, every_ - 1) + l.shape).copy(),
+            m_state,
+        )
+        stack_s = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_groups,) + l.shape).copy(), s_state
+        )
+        return {"m": stack_m, "s": stack_s}
+
+    return Model(cfg, defs, loss, prefill, decode_step, init_decode_caches)
+
+
+# ---------------------------------------------------------------------------
+# Whisper (audio family)
+# ---------------------------------------------------------------------------
+
+def _encdec_model(cfg: ModelConfig) -> Model:
+    defs = encdec.encdec_defs(cfg)
+
+    def loss(params, batch, ctx):
+        tokens = batch["tokens"]
+        enc = encdec.encode(cfg, params, batch["frames"])
+        logits, _ = encdec.decode_stack(cfg, params, tokens[:, :-1], enc, mode="train")
+        ce, metrics = cross_entropy(logits, tokens[:, 1:], ctx=ctx)
+        return ce, metrics
+
+    def prefill(params, batch, ctx):
+        enc = encdec.encode(cfg, params, batch["frames"])
+        logits, caches = encdec.decode_stack(
+            cfg, params, batch["tokens"], enc, mode="prefill"
+        )
+        return logits[:, -1:], caches
+
+    def decode_step(params, tokens, caches, cache_pos, ctx):
+        logits, caches = encdec.decode_stack(
+            cfg, params, tokens, None, mode="decode", caches=caches, cache_pos=cache_pos
+        )
+        return logits, caches
+
+    def init_decode_caches(batch, max_len):
+        return encdec.init_decoder_caches(cfg, batch, max_len, cfg.encoder_frames)
+
+    return Model(cfg, defs, loss, prefill, decode_step, init_decode_caches)
+
+
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "ssm":
+        return _xlstm_model(cfg)
+    if cfg.family == "audio":
+        return _encdec_model(cfg)
+    return _decoder_model(cfg)

@@ -1,0 +1,129 @@
+"""Selective SSM (Mamba-style) branch and the Hymba hybrid block.
+
+Hymba (arXiv:2411.13676) runs attention heads and SSM heads *in parallel*
+inside each block and fuses their (normalized) outputs. The SSM branch is a
+selective scan: per-channel state ``h_t = exp(dt*A) h_{t-1} + dt*B_t x_t``,
+``y_t = C_t . h_t + D_skip x_t``, computed with a *chunked* associative scan
+(sequential over chunks, parallel within a chunk) to bound activation
+memory at ``B x chunk x d_inner x N``.
+
+Decode carries O(1) state: the SSM state [B, d_inner, N] plus the causal
+conv tail [B, K-1, d_inner] — this is what makes ``long_500k`` feasible for
+the hybrid family while pure attention archs skip it (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef
+
+CONV_K = 4  # causal depthwise conv kernel (mamba default)
+
+
+def ssm_defs(n_layers: int, d_model: int, d_inner: int, n_state: int) -> Dict[str, Any]:
+    L = (n_layers,) if n_layers else ()
+    pl = (None,) * len(L)
+    return {
+        "w_in": ParamDef(L + (d_model, 2 * d_inner), pl + ("embed", "ssm_inner")),
+        "conv": ParamDef(L + (CONV_K, d_inner), pl + ("conv_k", "ssm_inner"), scale=0.5),
+        "w_dt": ParamDef(L + (d_inner,), pl + ("ssm_inner",), init="zeros"),
+        "w_bc": ParamDef(L + (d_inner, 2 * n_state), pl + ("ssm_inner", None)),
+        "a_log": ParamDef(L + (d_inner, n_state), pl + ("ssm_inner", "ssm_state"), init="zeros"),
+        "d_skip": ParamDef(L + (d_inner,), pl + ("ssm_inner",), init="ones"),
+        "w_out": ParamDef(L + (d_inner, d_model), pl + ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: [B,S,C]; kernel: [K,C]; tail: [B,K-1,C]."""
+    k = kernel.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * kernel[i] for i in range(k))
+    new_tail = xp[:, -(k - 1) :] if k > 1 else None
+    return out, new_tail
+
+
+def _ssm_scan_chunk(carry, a, bx):
+    """Associative scan within one chunk given an incoming state.
+
+    a, bx: [B, C, D, N] per-step decay and input. carry: [B, D, N].
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_acc, b_acc = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = a_acc * carry[:, None] + b_acc  # [B, C, D, N]
+    return h[:, -1], h
+
+
+def selective_ssm(
+    params: Dict[str, Any],
+    x: jax.Array,  # [B, S, D_model]
+    *,
+    chunk: int = 256,
+    state: Optional[Dict[str, jax.Array]] = None,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Mamba-style selective scan. Returns (y [B,S,D_model], new_state)."""
+    B, S, _ = x.shape
+    d_inner = params["w_in"].shape[-1] // 2
+    n_state = params["a_log"].shape[-1]
+
+    zx = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xc = jnp.split(zx, 2, axis=-1)
+    conv_tail = state["conv"] if state is not None else None
+    xc, new_tail = _causal_conv(xc, params["conv"], conv_tail)
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(xc.astype(jnp.float32) + params["w_dt"].astype(jnp.float32))
+    bc = jnp.einsum("bse,en->bsn", xc, params["w_bc"]).astype(jnp.float32)
+    b_in, c_out = jnp.split(bc, 2, axis=-1)  # [B,S,N] each
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # [D,N], negative
+
+    decay = jnp.exp(dt[..., None] * a)  # [B,S,D,N]
+    drive = (dt * xc.astype(jnp.float32))[..., None] * b_in[:, :, None, :]  # [B,S,D,N]
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, d_inner, n_state), jnp.float32)
+    if S == 1:
+        h = decay[:, 0] * h0 + drive[:, 0]
+        hs = h[:, None]
+        h_last = h
+    else:
+        n_chunks = -(-S // chunk)
+        pad = n_chunks * chunk - S
+        if pad:
+            decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+            drive = jnp.pad(drive, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        decay = decay.reshape(B, n_chunks, chunk, d_inner, n_state).swapaxes(0, 1)
+        drive = drive.reshape(B, n_chunks, chunk, d_inner, n_state).swapaxes(0, 1)
+        h_last, hs = jax.lax.scan(
+            lambda c, ab: _ssm_scan_chunk(c, ab[0], ab[1]), h0, (decay, drive),
+            unroll=True if unroll else 1,
+        )
+        hs = hs.swapaxes(0, 1).reshape(B, n_chunks * chunk, d_inner, n_state)[:, :S]
+
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_out)  # [B,S,D_inner] fp32
+    y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last, "conv": new_tail}
+    return y, new_state
+
+
+def init_ssm_state(batch: int, d_inner: int, n_state: int) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, d_inner, n_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, d_inner), jnp.bfloat16),
+    }

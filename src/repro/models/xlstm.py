@@ -1,0 +1,297 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent).
+
+mLSTM has a stabilized parallel ("attention-like") form used for training
+and an O(1) recurrent form used for decode:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (matrix memory, per head)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+with exponential gating stabilized by the running max m_t. The parallel
+form materializes the decay matrix D[t,s] = exp(log i_s + cumlogf_t -
+cumlogf_s - m_t) and computes h = ((Q K^T / sqrt(d)) o D) V normalized.
+
+sLSTM keeps per-head scalar memories with recurrent (block-diagonal) gate
+connections — no parallel form exists, so training scans over time; this is
+the memory-bound roofline case among the assigned archs (EXPERIMENTS.md).
+
+The 350M config interleaves blocks 7:1 (mLSTM:sLSTM), grouped so layers
+scan as stacked groups.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef, rms_norm
+
+PROJ_FACTOR = 2  # mLSTM block up-projection factor
+
+
+def mlstm_defs(n_layers: int, d_model: int, n_heads: int) -> Dict[str, Any]:
+    d_in = PROJ_FACTOR * d_model
+    L = (n_layers,) if n_layers else ()
+    pl = (None,) * len(L)
+    return {
+        "norm": ParamDef(L + (d_model,), pl + ("embed",), init="zeros"),
+        "w_up": ParamDef(L + (d_model, 2 * d_in), pl + ("embed", "ssm_inner")),
+        "w_qkv": ParamDef(L + (d_in, 3 * d_in), pl + ("ssm_inner", None)),
+        "w_if": ParamDef(L + (d_in, 2 * n_heads), pl + ("ssm_inner", None), scale=0.01),
+        "b_if": ParamDef(L + (2 * n_heads,), pl + (None,), init="zeros"),
+        "out_norm": ParamDef(L + (d_in,), pl + ("ssm_inner",), init="zeros"),
+        "w_down": ParamDef(L + (d_in, d_model), pl + ("ssm_inner", "embed")),
+    }
+
+
+def slstm_defs(n_layers: int, d_model: int, n_heads: int) -> Dict[str, Any]:
+    dh = d_model // n_heads
+    L = (n_layers,) if n_layers else ()
+    pl = (None,) * len(L)
+    return {
+        "norm": ParamDef(L + (d_model,), pl + ("embed",), init="zeros"),
+        "w_gates": ParamDef(L + (d_model, 4 * d_model), pl + ("embed", "ssm_inner")),
+        "r_gates": ParamDef(L + (n_heads, dh, 4 * dh), pl + (None, None, None), scale=0.02),
+        "b_gates": ParamDef(L + (4 * d_model,), pl + ("ssm_inner",), init="zeros"),
+        "out_norm": ParamDef(L + (d_model,), pl + ("embed",), init="zeros"),
+        "w_out": ParamDef(L + (d_model, d_model), pl + ("embed", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilized parallel mLSTM. q,k,v: [B,S,H,Dh]; gates: [B,S,H] (fp32)."""
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    cum_f = jnp.cumsum(log_f, axis=1)  # [B,S,H]
+    # log D[t, u] = log_i[u] + cum_f[t] - cum_f[u], valid for u <= t
+    log_d = (
+        cum_f[:, :, None, :]
+        - cum_f[:, None, :, :]
+        + log_i[:, None, :, :]
+    )  # [B, T, U, H]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    log_d = jnp.where(tri[None, :, :, None], log_d, -jnp.inf)
+    m = jnp.max(log_d, axis=2, keepdims=True)  # [B,T,1,H] stabilizer
+    d = jnp.exp(log_d - m)
+    scores = jnp.einsum("bthd,buhd->btuh", q, k, preferred_element_type=jnp.float32) * scale
+    weighted = scores * d
+    norm = jnp.maximum(jnp.abs(weighted.sum(axis=2)), jnp.exp(-m[:, :, 0]))  # [B,T,H]
+    out = jnp.einsum("btuh,buhd->bthd", weighted, v.astype(jnp.float32))
+    return (out / norm[..., None]).astype(q.dtype)
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, *, chunk: int = 256, init_state=None, unroll: bool = False):
+    """Chunkwise-parallel mLSTM: recurrent state across chunks, quadratic
+    only within a chunk — activation memory O(B*C*C*H) instead of O(B*S*S*H).
+
+    State (c, n, m) represents the true memory as ``c * exp(m)`` (and
+    ``n * exp(m)``), keeping the exponential gating stabilized across chunks.
+    """
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def reshape_chunks(x_, extra):
+        return x_.reshape((b, n_chunks, chunk) + extra).swapaxes(0, 1)
+
+    qc = reshape_chunks(q, (h, dh))
+    kc = reshape_chunks(k, (h, dh))
+    vc = reshape_chunks(v, (h, dh))
+    ic = reshape_chunks(log_i, (h,))
+    fc = reshape_chunks(log_f, (h,))
+
+    if init_state is not None:
+        c0, n0, m0 = init_state["c"], init_state["n"], init_state["m"]
+    else:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inputs):
+        c_mat, n_vec, m_prev = carry
+        q_, k_, v_, li, lf = inputs  # [B,C,H,*]
+        F = jnp.cumsum(lf, axis=1)  # [B,C,H] inclusive cumsum of log f
+        # log weights of intra-chunk source u for target t: F_t - F_u + li_u
+        log_w = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        log_w = jnp.where(tri[None, :, :, None], log_w, -jnp.inf)
+        inter_log = F + m_prev[:, None, :]  # [B,C,H]
+        m_t = jnp.maximum(jnp.max(log_w, axis=2), inter_log)  # [B,C,H]
+        d = jnp.exp(log_w - m_t[:, :, None, :])  # [B,C,U,H]
+        inter_scale = jnp.exp(inter_log - m_t)  # [B,C,H]
+
+        scores = jnp.einsum("bthd,buhd->btuh", q_, k_, preferred_element_type=jnp.float32) * scale
+        intra = jnp.einsum("btuh,buhd->bthd", scores * d, v_.astype(jnp.float32))
+        qf = q_.astype(jnp.float32) * scale
+        inter = jnp.einsum("bthd,bhdv->bthv", qf, c_mat) * inter_scale[..., None]
+        num = intra + inter
+        # normalizer: |q . n_t| with n_t split into intra + inter parts
+        den_inter = jnp.einsum("bthd,bhd->bth", qf, n_vec) * inter_scale
+        den_intra = jnp.einsum("bthd,buhd,btuh->bth", qf, k_.astype(jnp.float32), d)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h_out = (num / den[..., None]).astype(q_.dtype)
+
+        # ---- state update to end of chunk --------------------------------
+        F_C = F[:, -1]  # [B,H]
+        m_new = jnp.maximum(F_C + m_prev, jnp.max(F_C[:, None] - F + li, axis=1))
+        w_u = jnp.exp(F_C[:, None] - F + li - m_new[:, None])  # [B,C,H]
+        c_new = (
+            jnp.exp(F_C + m_prev - m_new)[:, :, None, None] * c_mat
+            + jnp.einsum("buh,buhk,buhv->bhkv", w_u, k_.astype(jnp.float32), v_.astype(jnp.float32))
+        )
+        n_new = jnp.exp(F_C + m_prev - m_new)[:, :, None] * n_vec + jnp.einsum(
+            "buh,buhk->bhk", w_u, k_.astype(jnp.float32)
+        )
+        return (c_new, n_new, m_new), h_out
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(step, (c0, n0, m0), (qc, kc, vc, ic, fc), unroll=True if unroll else 1)
+    hs = hs.swapaxes(0, 1).reshape(b, n_chunks * chunk, h, dh)
+    return hs[:, :s], {"c": c_f, "n": n_f, "m": m_f}
+
+
+def _mlstm_recurrent_step(state, q, k, v, log_i, log_f):
+    """One decode step. state: dict(c [B,H,Dk,Dv], n [B,H,Dk], m [B,H])."""
+    dh = q.shape[-1]
+    scale = dh ** -0.5
+    m_new = jnp.maximum(log_f + state["m"], log_i)  # [B,H]
+    f_ = jnp.exp(log_f + state["m"] - m_new)
+    i_ = jnp.exp(log_i - m_new)
+    c = f_[..., None, None] * state["c"] + i_[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = f_[..., None] * state["n"] + i_[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", c, q.astype(jnp.float32) * scale)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32) * scale)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return {"c": c, "n": n, "m": m_new}, h
+
+
+def mlstm_block(
+    params: Dict[str, Any],
+    x: jax.Array,  # [B,S,D]
+    n_heads: int,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+    return_state: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, d = x.shape
+    xn = rms_norm(x, params["norm"])
+    up = jnp.einsum("bsd,de->bse", xn, params["w_up"])
+    inner, z = jnp.split(up, 2, axis=-1)
+    d_in = inner.shape[-1]
+    dh = d_in // n_heads
+    qkv = jnp.einsum("bse,ef->bsf", inner, params["w_qkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, n_heads, dh)
+    k = k.reshape(b, s, n_heads, dh)
+    v = v.reshape(b, s, n_heads, dh)
+    gates = jnp.einsum("bse,eg->bsg", inner, params["w_if"]).astype(jnp.float32) + params[
+        "b_if"
+    ].astype(jnp.float32)
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)  # [B,S,H]
+    log_f = jax.nn.log_sigmoid(f_raw)
+
+    new_state = None
+    if state is not None and s == 1:
+        new_state, h1 = _mlstm_recurrent_step(
+            state, q[:, 0], k[:, 0], v[:, 0], log_i[:, 0], log_f[:, 0]
+        )
+        h = h1[:, None]
+    elif state is None and not return_state and s <= 256:
+        h = _mlstm_parallel(q, k, v, log_i, log_f)
+    else:
+        h, final_state = _mlstm_chunkwise(q, k, v, log_i, log_f, init_state=state, unroll=unroll)
+        if return_state or state is not None:
+            new_state = final_state
+    h = h.reshape(b, s, d_in)
+    h = rms_norm(h, params["out_norm"]) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", h, params["w_down"])
+    return x + y, new_state
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int):
+    d_in = PROJ_FACTOR * d_model
+    dh = d_in // n_heads
+    return {
+        "c": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        # -inf-like stabilizer: an empty memory must not distort the
+        # normalizer floor exp(-m) on the first real update.
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_step(params_r, carry, zifo):
+    """carry: (c, n, m, h_prev) each [B, H, Dh] (m: [B,H,Dh]); one timestep."""
+    c, n, m, h_prev = carry
+    rec = jnp.einsum("bhd,hdg->bhg", h_prev, params_r)  # [B,H,4Dh]
+    zz, ii, ff, oo = jnp.split(zifo + rec, 4, axis=-1)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(oo)
+    log_f = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(log_f + m, ii)
+    i_ = jnp.exp(ii - m_new)
+    f_ = jnp.exp(log_f + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h), h
+
+
+def slstm_block(
+    params: Dict[str, Any],
+    x: jax.Array,  # [B,S,D]
+    n_heads: int,
+    *,
+    state: Optional[Tuple[jax.Array, ...]] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, ...]]]:
+    b, s, d = x.shape
+    dh = d // n_heads
+    xn = rms_norm(x, params["norm"])
+    zifo = (
+        jnp.einsum("bsd,dg->bsg", xn, params["w_gates"]).astype(jnp.float32)
+        + params["b_gates"].astype(jnp.float32)
+    ).reshape(b, s, n_heads, 4 * dh)
+    if state is None:
+        zeros = jnp.zeros((b, n_heads, dh), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros)
+    else:
+        carry = state
+    r = params["r_gates"].astype(jnp.float32)
+
+    def step(c, z_t):
+        return _slstm_step(r, c, z_t)
+
+    carry, hs = jax.lax.scan(step, carry, zifo.swapaxes(0, 1))  # scan over S
+    h = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    h = rms_norm(h, params["out_norm"])
+    y = jnp.einsum("bsd,de->bse", h, params["w_out"])
+    new_state = carry if (state is not None or return_state) else None
+    return x + y, new_state
+
+
+def init_slstm_state(batch: int, d_model: int, n_heads: int):
+    dh = d_model // n_heads
+    zeros = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return (zeros, zeros, zeros, zeros)

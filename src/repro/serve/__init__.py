@@ -1,0 +1,3 @@
+from .serve_step import cache_shardings, make_serve_steps, prefill_to_decode_caches
+
+__all__ = ["cache_shardings", "make_serve_steps", "prefill_to_decode_caches"]

@@ -1,0 +1,199 @@
+"""Serving steps: prefill + single-token decode with sharded KV caches.
+
+``decode_32k`` / ``long_500k`` cells lower ``serve_step`` (one new token
+against a seq_len cache) — never ``train_step``. Cache shardings follow
+kv-head TP when the head count divides the model axis, otherwise the heads
+stay replicated (gemma MQA) — the seq-sharded flash-decode alternative is
+a §Perf hillclimb (distributed/flash_decode.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import ShardingRules
+from ..models.model import Model
+from ..models.transformer import ModelContext
+
+
+def _dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, caches_abstract) -> Any:
+    """PartitionSpecs for decode caches, keyed by leaf path names."""
+    dp = _dp_axes(mesh)
+    dp_part = dp if len(dp) > 1 else (dp[0] if dp else None)
+    model_size = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf) -> NamedSharding:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1] if names else ""
+        rank = len(leaf.shape)
+        # Stacked caches have 1-2 leading layer dims; batch dim follows.
+        parts = [None] * rank
+        # find the batch dim: first dim equal to... we mark by position:
+        # [L(, L2), B, ...] for attn/ssm/xlstm states.
+        lead = 1 if rank >= 1 else 0
+        if rank >= 2 and name in ("c", "n", "m") and leaf.shape[0] != leaf.shape[1]:
+            lead = 1
+        # heuristically: leading layer dims were added by stacking; batch is
+        # the first non-layer dim. We rely on known layouts:
+        if name in ("k", "v"):  # [L, B, S, K, Dh]
+            parts = [None, dp_part, None, None, None]
+            if leaf.shape[3] % model_size == 0:
+                parts[3] = "model"
+            elif leaf.shape[2] % model_size == 0:
+                # kv heads can't shard (MQA/GQA<tp): shard the *sequence* dim
+                # over the otherwise-idle model axis — GSPMD lowers the
+                # attention as partial softmax + psum (flash-decode) and the
+                # cache never moves (§Perf iteration 4).
+                parts[2] = "model"
+        elif name in ("c_kv", "k_rope"):  # [L, B, S, R] — MLA compressed cache
+            parts = [None, dp_part, None, None]
+            if leaf.shape[2] % model_size == 0:
+                parts[2] = "model"
+        elif name == "pos":  # [L, W]
+            parts = [None, None]
+        elif name == "h":  # ssm [L, B, D_in, N]
+            parts = [None, dp_part, "model" if leaf.shape[2] % model_size == 0 else None, None]
+        elif name == "conv":  # [L, B, K-1, D_in]
+            parts = [None, dp_part, None, None]
+        elif name in ("cross_k", "cross_v"):  # [L, B, T, K, Dh]
+            parts = [None, dp_part, None, None, None]
+        elif name == "c":  # xlstm matrix memory [G(, n_m), B, H, Dk, Dv]
+            parts = [None] * (rank - 4) + [dp_part, None, "model" if leaf.shape[-2] % model_size == 0 else None, None]
+        elif name == "n":
+            parts = [None] * (rank - 3) + [dp_part, None, "model" if leaf.shape[-1] % model_size == 0 else None]
+        elif name == "m":
+            parts = [None] * (rank - 2) + [dp_part, None]
+        else:  # xlstm slstm tuple leaves etc: [G, B, H, Dh]
+            if rank >= 2:
+                parts = [None] * rank
+                parts[1] = dp_part
+        from ..distributed.sharding import fit_spec
+
+        return NamedSharding(mesh, fit_spec(P(*parts), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches_abstract)
+
+
+def make_serve_steps(
+    model: Model,
+    mesh,
+    rules: ShardingRules,
+    *,
+    batch: int,
+    max_len: int,
+):
+    """Returns (prefill_fn, decode_fn, caches_abstract, shardings)."""
+    ctx = ModelContext(mesh, rules)
+    cfg = model.cfg
+
+    from ..train.train_step import param_shardings
+    from ..distributed.sharding import batch_partition
+
+    caches_abstract = jax.eval_shape(lambda: model.init_decode_caches(batch, max_len))
+    c_shard = cache_shardings(cfg, mesh, caches_abstract)
+    p_shard = param_shardings(model, mesh, rules)
+    tok_spec = batch_partition(mesh, batch)
+    tok_shard = NamedSharding(mesh, P(*(list(tok_spec) + [None])))
+
+    def prefill_fn(params, batch_inputs):
+        return model.prefill(params, batch_inputs, ctx)
+
+    def decode_fn(params, tokens, caches, cache_pos):
+        logits, new_caches = model.decode_step(params, tokens, caches, cache_pos, ctx)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token[:, None], logits, new_caches
+
+    jit_prefill = jax.jit(prefill_fn, in_shardings=(p_shard, None))
+    jit_decode = jax.jit(
+        decode_fn,
+        in_shardings=(p_shard, tok_shard, c_shard, None),
+        out_shardings=(tok_shard, None, c_shard),
+        donate_argnums=(2,),
+    )
+    return jit_prefill, jit_decode, caches_abstract, {
+        "params": p_shard,
+        "caches": c_shard,
+        "tokens": tok_shard,
+    }
+
+
+def prefill_to_decode_caches(
+    cfg: ModelConfig, model: Model, prefill_caches: Any, batch: int, max_len: int, prefill_len: int
+) -> Any:
+    """Lay prefill cache tensors ([L,B,S,...]) into decode cache buffers."""
+    decode_caches = model.init_decode_caches(batch, max_len)
+
+    def place(dst, src_tree):
+        def leaf(d, s):
+            if d.shape == s.shape:
+                return s.astype(d.dtype)
+            # pad the sequence axis (axis 2 for [L,B,S,...] layouts)
+            if d.ndim == s.ndim and d.shape[2] >= s.shape[2]:
+                pads = [(0, d.shape[i] - s.shape[i]) for i in range(d.ndim)]
+                return jnp.pad(s.astype(d.dtype), pads)
+            raise ValueError(f"cannot place prefill cache {s.shape} into {d.shape}")
+
+        return jax.tree.map(leaf, dst, src_tree)
+
+    out = {}
+    for k in decode_caches:
+        if prefill_caches is not None and k in prefill_caches:
+            src = prefill_caches[k]
+            # attn prefill caches lack ring "pos" etc.; merge per sub-key.
+            out[k] = _merge_cache_group(decode_caches[k], src, prefill_len)
+        else:
+            out[k] = decode_caches[k]
+    return out
+
+
+def _merge_cache_group(dst, src, prefill_len: int):
+    import jax.numpy as jnp
+
+    def merge(d, s):
+        if not (hasattr(d, "shape") and hasattr(s, "shape")):
+            return s if s is not None else d
+        if d.shape == s.shape:
+            return s.astype(d.dtype)
+        # sequence axis is 2 for [L, B, S, ...] cache layouts
+        s_src, s_dst = s.shape[2], d.shape[2]
+        if s_dst >= s_src:
+            pads = [(0, d.shape[i] - s.shape[i]) for i in range(d.ndim)]
+            return jnp.pad(s.astype(d.dtype), pads)
+        # ring buffer: keep the last W tokens, slot p % W holds position p
+        tail = jax.lax.slice_in_dim(s, s_src - s_dst, s_src, axis=2)
+        shift = s_src % s_dst
+        return jnp.roll(tail, shift, axis=2).astype(d.dtype)
+
+    def walk(d, s):
+        if isinstance(d, dict):
+            out = {}
+            for k, dv in d.items():
+                sv = s.get(k) if isinstance(s, dict) else None
+                if k == "pos":
+                    # ring positions for the prefix: slot p%W holds position p
+                    W = dv.shape[-1]
+                    pos = jnp.arange(W)
+                    base = (prefill_len - 1) // W * W if prefill_len else 0
+                    cand = jnp.where(base + pos < prefill_len, base + pos, base + pos - W)
+                    out[k] = jnp.broadcast_to(
+                        jnp.where(cand >= 0, cand, -1).astype(jnp.int32), dv.shape
+                    )
+                elif sv is None:
+                    out[k] = dv
+                else:
+                    out[k] = walk(dv, sv)
+            return out
+        if s is None:
+            return d
+        return jax.tree.map(merge, d, s)
+
+    return walk(dst, src)

@@ -1,0 +1,140 @@
+"""jit-compiled train step: loss + grad + AdamW, with microbatch gradient
+accumulation, optional int8 gradient compression (error feedback), and
+sharding-in/out declarations that realize DP/TP/EP/ZeRO-1.
+
+``make_train_step`` returns (step_fn, state_shardings) so the launcher and
+the dry-run share one code path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.compression import init_error_state, quantize_with_feedback
+from ..distributed.sharding import ShardingRules, fit_spec, zero1_spec
+from ..models.model import Model
+from ..models.transformer import ModelContext
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def param_shardings(model: Model, mesh, rules: ShardingRules):
+    """Logical-axis shardings, clipped to divisible dims (fit_spec)."""
+    logical = model.logical()
+    abstract = model.abstract()
+    return jax.tree.map(
+        lambda la, ab: NamedSharding(mesh, fit_spec(rules.spec(la), ab.shape, mesh)),
+        logical,
+        abstract,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )
+
+
+def opt_state_shardings(model: Model, mesh, rules: ShardingRules, *, zero1: bool = True):
+    """Moments: param sharding + extra 'data' factor (ZeRO-1)."""
+    p_shard = param_shardings(model, mesh, rules)
+    abstract = model.abstract()
+
+    def moment(sh: NamedSharding, ab):
+        spec = zero1_spec(sh.spec, ab.shape, mesh) if zero1 else sh.spec
+        return NamedSharding(mesh, spec)
+
+    m_shard = jax.tree.map(moment, p_shard, abstract)
+    return {
+        "step": NamedSharding(mesh, P()),
+        "m": m_shard,
+        "v": m_shard,
+    }
+
+
+def batch_shardings(mesh, rules: ShardingRules, batch_specs: Dict[str, Any]):
+    return {
+        k: rules.sharding(mesh, ("batch",) + (None,) * (len(v.shape) - 1))
+        for k, v in batch_specs.items()
+    }
+
+
+def make_train_step(
+    model: Model,
+    mesh,
+    rules: ShardingRules,
+    opt_cfg: AdamWConfig,
+    *,
+    grad_accum: int = 1,
+    compress_grads: bool = False,
+    zero1: bool = True,
+):
+    """Returns (jit step_fn, shardings dict)."""
+    ctx = ModelContext(mesh, rules)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, ctx)
+        return loss, metrics
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        # Microbatch accumulation: scan over leading splits, fp32 accumulators.
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        micro_batches = jax.tree.map(
+            lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]), batch
+        )
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, loss_sum), metrics = jax.lax.scan(micro, (zero, 0.0), micro_batches)
+        grads = jax.tree.map(lambda g: (g / grad_accum).astype(jnp.bfloat16), acc)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / grad_accum, metrics, grads
+
+    def step_fn(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        if zero1:
+            # Constrain gradients to the optimizer-state (ZeRO-1) layout:
+            # GSPMD then lowers the DP gradient sync as reduce-scatter
+            # (wire (n-1)/n * size) instead of all-reduce (2x that) and the
+            # moment update runs on the scattered shard (§Perf iteration 3).
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads,
+                o_shard_m,
+            )
+        if compress_grads:
+            grads, err = quantize_with_feedback(grads, opt_state["grad_error"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, {k: opt_state[k] for k in ("step", "m", "v")}
+        )
+        if compress_grads:
+            new_opt["grad_error"] = err
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    p_shard = param_shardings(model, mesh, rules)
+    o_shard = opt_state_shardings(model, mesh, rules, zero1=zero1)
+    o_shard_m = o_shard["m"]
+    if compress_grads:
+        o_shard = dict(o_shard, grad_error=o_shard["m"])
+
+    jit_step = jax.jit(
+        step_fn,
+        in_shardings=(p_shard, o_shard, None),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+    return jit_step, {"params": p_shard, "opt": o_shard}
+
+
+def init_train_state(model: Model, key, *, compress_grads: bool = False):
+    params = model.init(key)
+    opt = init_opt_state(params)
+    if compress_grads:
+        opt["grad_error"] = init_error_state(params)
+    return params, opt

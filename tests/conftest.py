@@ -1,0 +1,33 @@
+import gzip as _gzip
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def make_text(rng, n: int) -> bytes:
+    """Compressible text-like data (dynamic blocks, plenty of backrefs)."""
+    words = [b"the", b"quick", b"brown", b"fox", b"jumps", b"over", b"lazy",
+             b"dog", b"rapidgzip", b"parallel", b"deflate", b"window"]
+    idx = rng.integers(0, len(words), size=max(8, n // 4))
+    out = b" ".join(words[i] for i in idx)
+    return out[:n]
+
+
+def make_base64(rng, n: int) -> bytes:
+    import base64
+
+    raw = rng.integers(0, 256, (n * 3) // 4 + 3, dtype=np.uint8).tobytes()
+    return base64.b64encode(raw)[:n]
+
+
+def make_random(rng, n: int) -> bytes:
+    return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+
+def gzip_bytes(data: bytes, level: int = 6) -> bytes:
+    return _gzip.compress(data, compresslevel=level)

@@ -1,0 +1,92 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitreader import BitReader
+from repro.core.errors import EndOfStream
+
+
+def ref_bits(data: bytes, offset: int, n: int) -> int:
+    """Independent LSB-first reference extraction."""
+    val = 0
+    for j in range(n):
+        bit_index = offset + j
+        byte = data[bit_index // 8]
+        val |= ((byte >> (bit_index % 8)) & 1) << j
+    return val
+
+
+def test_basic_reads():
+    br = BitReader(bytes([0b10110100, 0xFF, 0x00]))
+    assert br.read(1) == 0
+    assert br.read(2) == 0b10
+    assert br.read(5) == 0b10110
+    assert br.bit_pos == 8
+    assert br.read(8) == 0xFF
+
+
+def test_seek_and_peek():
+    data = bytes(range(64))
+    br = BitReader(data)
+    br.seek(13)
+    assert br.bit_pos == 13
+    v = br.peek(11)
+    assert br.bit_pos == 13  # peek does not consume
+    assert v == ref_bits(data, 13, 11)
+    br.skip(11)
+    assert br.bit_pos == 24
+
+
+def test_align_to_byte():
+    br = BitReader(b"\xff\xff")
+    br.read(3)
+    skipped = br.align_to_byte()
+    assert skipped == 5
+    assert br.bit_pos == 8
+    assert br.align_to_byte() == 0
+
+
+def test_read_bytes_requires_alignment():
+    br = BitReader(b"abcdef")
+    br.read(4)
+    with pytest.raises(ValueError):
+        br.read_bytes(2)
+    br.align_to_byte()
+    assert br.read_bytes(2) == b"bc"
+
+
+def test_eof_behaviour():
+    br = BitReader(b"\x01")
+    assert br.read(8) == 1
+    assert br.eof()
+    assert br.peek(8) == 0  # zero-padded peek
+    with pytest.raises(EndOfStream):
+        br.read(1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.binary(min_size=4, max_size=64),
+    reads=st.lists(st.integers(min_value=1, max_value=24), min_size=1, max_size=16),
+)
+def test_reads_match_reference(data, reads):
+    br = BitReader(data)
+    pos = 0
+    total_bits = len(data) * 8
+    for n in reads:
+        if pos + n > total_bits:
+            break
+        assert br.read(n) == ref_bits(data, pos, n)
+        pos += n
+        assert br.bit_pos == pos
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.binary(min_size=8, max_size=64), seek=st.integers(min_value=0, max_value=300))
+def test_seek_anywhere(data, seek):
+    br = BitReader(data)
+    total = len(data) * 8
+    seek = min(seek, total - 1)
+    br.seek(seek)
+    n = min(8, total - seek)
+    assert br.read(n) == ref_bits(data, seek, n)

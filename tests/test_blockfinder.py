@@ -1,0 +1,104 @@
+import numpy as np
+import pytest
+
+from repro.core import (
+    BitReader,
+    DeflateChunkDecoder,
+    canonical_stored_offset,
+    find_dynamic_skiplut,
+    find_dynamic_trial,
+    parse_gzip_header,
+    scan_dynamic_candidates,
+    scan_stored_candidates,
+)
+from repro.core.block_finder import CombinedBlockFinder, FilterStats
+from repro.core.synth import stored_only_compress
+
+from conftest import gzip_bytes, make_base64, make_random, make_text
+
+
+def _true_blocks(comp):
+    br = BitReader(comp)
+    parse_gzip_header(br)
+    dec = DeflateChunkDecoder(comp)
+    res = dec.decode_chunk(br.bit_pos, len(comp) * 8, window=b"")
+    return res.blocks
+
+
+def test_finds_all_true_dynamic_blocks(rng):
+    data = make_base64(rng, 500_000)
+    comp = gzip_bytes(data, 6)
+    blocks = _true_blocks(comp)
+    dynamic = [b.bit_offset for b in blocks if b.block_type == 2 and not b.is_final]
+    assert len(dynamic) >= 3
+    found = set(scan_dynamic_candidates(comp, 0, len(comp) * 8))
+    missing = [b for b in dynamic if b not in found]
+    assert not missing, f"finder missed true blocks at {missing}"
+
+
+def test_finds_stored_blocks_canonically(rng):
+    data = make_random(rng, 400_000)
+    comp = stored_only_compress(data)
+    blocks = _true_blocks(comp)
+    stored = [
+        canonical_stored_offset(b.bit_offset)
+        for b in blocks
+        if b.block_type == 0 and not b.is_final
+    ]
+    assert stored
+    found = set(scan_stored_candidates(comp, 0, len(comp) * 8))
+    missing = [b for b in stored if b not in found]
+    assert not missing
+
+
+def test_combined_finder_orders_candidates(rng):
+    data = make_text(rng, 200_000) + make_random(rng, 100_000)
+    comp = gzip_bytes(data, 6)
+    cands = []
+    finder = CombinedBlockFinder(comp, 0, len(comp) * 8)
+    for c in finder:
+        cands.append(c)
+        if len(cands) > 200:
+            break
+    assert cands == sorted(cands)
+    assert len(cands) == len(set(cands))
+
+
+def test_skiplut_agrees_with_vectorized(rng):
+    blob = make_random(rng, 20_000)
+    end = len(blob) * 8
+    vec = list(scan_dynamic_candidates(blob, 0, end))
+    lut = list(find_dynamic_skiplut(blob, 0, end))
+    assert vec == lut
+
+
+def test_trial_agrees_with_vectorized_small(rng):
+    blob = make_random(rng, 2_000)
+    end = len(blob) * 8
+    vec = list(scan_dynamic_candidates(blob, 0, end))
+    trial = list(find_dynamic_trial(blob, 0, end))
+    assert vec == trial
+
+
+def test_false_positive_rate_on_random_data(rng):
+    """Paper Table 1: ~200 valid headers per 1e12 positions => random data
+    yields very few candidates; the cascade must reject almost everything."""
+    blob = make_random(rng, 125_000)  # 1e6 bit positions
+    stats = FilterStats()
+    cands = list(scan_dynamic_candidates(blob, 0, len(blob) * 8, stats=stats))
+    assert stats.tested >= 990_000
+    # Expected ~2e-10 * 1e6 << 1; allow a little slack for unlucky seeds.
+    assert len(cands) <= 2
+    # Cascade ordering sanity (paper Table 1 proportions).
+    assert stats.invalid_final == pytest.approx(stats.tested * 0.5, rel=0.01)
+    assert stats.invalid_type == pytest.approx(stats.tested * 0.375, rel=0.01)
+    assert stats.invalid_hlit == pytest.approx(stats.tested * 0.0078, rel=0.15)
+    assert stats.invalid_precode_histogram > stats.invalid_precode_data
+
+
+def test_stored_finder_false_positive_rate(rng):
+    """Paper §3.4.1: one false positive every ~514 KiB on random data."""
+    blob = make_random(rng, 2 << 20)
+    n = len(list(scan_stored_candidates(blob, 0, len(blob) * 8)))
+    # 2 MiB / 514 KiB ~ 4; generous bounds:
+    assert n <= 25

@@ -1,0 +1,139 @@
+import gzip as _gzip
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BitReader,
+    DeflateChunkDecoder,
+    MARKER_BASE,
+    WINDOW_SIZE,
+    gzip_decompress_sequential,
+    inflate_raw,
+    parse_gzip_header,
+    replace_markers,
+)
+from repro.core.errors import DeflateError, GzipFooterError
+from repro.core.synth import fixed_only_compress, pigz_like_compress, stored_only_compress
+
+from conftest import gzip_bytes, make_base64, make_random, make_text
+
+
+@pytest.mark.parametrize("level", [1, 6, 9])
+@pytest.mark.parametrize("kind", ["text", "base64", "random"])
+def test_sequential_roundtrip(rng, level, kind):
+    data = {"text": make_text, "base64": make_base64, "random": make_random}[kind](rng, 200_000)
+    assert gzip_decompress_sequential(gzip_bytes(data, level)) == data
+
+
+def test_multi_member(rng):
+    data1, data2 = make_text(rng, 50_000), make_base64(rng, 30_000)
+    comp = gzip_bytes(data1) + gzip_bytes(data2) + gzip_bytes(b"")
+    assert gzip_decompress_sequential(comp) == data1 + data2
+
+
+def test_stored_blocks(rng):
+    data = make_random(rng, 300_000)  # incompressible -> stored blocks
+    assert gzip_decompress_sequential(stored_only_compress(data)) == data
+
+
+def test_fixed_blocks(rng):
+    data = make_text(rng, 100_000)
+    assert gzip_decompress_sequential(fixed_only_compress(data)) == data
+
+
+def test_pigz_like_sync_flush(rng):
+    data = make_text(rng, 300_000)
+    assert gzip_decompress_sequential(pigz_like_compress(data, block_size=64 << 10)) == data
+
+
+def test_crc_mismatch_detected(rng):
+    comp = bytearray(gzip_bytes(make_text(rng, 10_000)))
+    comp[-6] ^= 0xFF  # corrupt stored CRC32
+    with pytest.raises(GzipFooterError):
+        gzip_decompress_sequential(bytes(comp))
+
+
+def test_raw_deflate(rng):
+    data = make_text(rng, 120_000)
+    raw = zlib.compress(data, 6)[2:-4]
+    assert inflate_raw(raw) == data
+
+
+def test_reserved_block_type_rejected():
+    # final=1, type=11 (reserved): bits 1,1,1 LSB-first -> byte 0b00000111
+    with pytest.raises(DeflateError):
+        inflate_raw(b"\x07\x00\x00")
+
+
+def _block_offsets(comp: bytes):
+    br = BitReader(comp)
+    parse_gzip_header(br)
+    dec = DeflateChunkDecoder(comp)
+    res = dec.decode_chunk(br.bit_pos, len(comp) * 8, window=b"")
+    return res
+
+
+@pytest.mark.parametrize("kind", ["text", "base64"])
+def test_two_stage_equals_single_stage(rng, kind):
+    """Core paper property: marker decode + replacement == known-window decode."""
+    data = {"text": make_text, "base64": make_base64}[kind](rng, 400_000)
+    comp = gzip_bytes(data, 6)
+    full = _block_offsets(comp)
+    assert len(full.blocks) >= 2, "need multiple blocks for this test"
+    dec = DeflateChunkDecoder(comp)
+    for blk in full.blocks[1:3]:
+        window = data[max(0, blk.out_offset - WINDOW_SIZE) : blk.out_offset]
+        single = dec.decode_chunk(blk.bit_offset, len(comp) * 8, window=window)
+        marker = dec.decode_chunk(blk.bit_offset, len(comp) * 8, window=None)
+        assert marker.marker_mode and not single.marker_mode
+        resolved = replace_markers(marker.data, window)
+        np.testing.assert_array_equal(resolved, single.data)
+        truth = data[blk.out_offset : blk.out_offset + single.size]
+        assert single.data.tobytes() == truth
+
+
+def test_marker_values_name_window_positions(rng):
+    data = make_text(rng, 600_000)
+    comp = gzip_bytes(data, 6)
+    full = _block_offsets(comp)
+    assert len(full.blocks) >= 2, "test data must span multiple deflate blocks"
+    blk = full.blocks[1]
+    dec = DeflateChunkDecoder(comp)
+    res = dec.decode_chunk(blk.bit_offset, len(comp) * 8, window=None)
+    syms = res.data
+    markers = syms[syms >= MARKER_BASE]
+    if markers.size:  # every marker points into the 32 KiB window
+        w = markers.astype(np.int64) - MARKER_BASE
+        assert w.min() >= 0 and w.max() < WINDOW_SIZE
+        # resolve and compare against the original stream
+        window = data[max(0, blk.out_offset - WINDOW_SIZE) : blk.out_offset]
+        out = replace_markers(syms, window)
+        assert out.tobytes() == data[blk.out_offset : blk.out_offset + res.size]
+        assert res.first_marker >= 0 and res.last_marker >= res.first_marker
+
+
+def test_stop_condition_matches_next_chunk(rng):
+    """Chunk end offsets must be decodable start offsets for the successor."""
+    data = make_base64(rng, 600_000)
+    comp = gzip_bytes(data, 6)
+    br = BitReader(comp)
+    parse_gzip_header(br)
+    dec = DeflateChunkDecoder(comp)
+    stop = br.bit_pos + 400_000 * 8 // 2
+    first = dec.decode_chunk(br.bit_pos, stop, window=b"")
+    assert first.end_bit >= stop or first.ended_at_eos
+    if not first.ended_at_eos:
+        second = dec.decode_chunk(first.end_bit, len(comp) * 8, window=None)
+        window = first.data[-WINDOW_SIZE:].tobytes()
+        resolved = replace_markers(second.data, window)
+        combined = first.data.tobytes() + resolved.tobytes()
+        assert combined == data[: len(combined)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(blob=st.binary(min_size=0, max_size=5000), level=st.integers(min_value=0, max_value=9))
+def test_property_roundtrip_any_bytes(blob, level):
+    assert gzip_decompress_sequential(_gzip.compress(blob, compresslevel=level)) == blob

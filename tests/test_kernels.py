@@ -1,0 +1,129 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, with
+shape/dtype sweeps per the repo convention."""
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import crc32_parallel, marker_replace, precode_candidates
+from repro.kernels.crc32 import SEG_COLS, SEG_ROWS, crc32_segments, make_crc_table
+from repro.kernels.marker_replace import TILE, TILE_COLS, TILE_ROWS, marker_replace_tiles
+from repro.kernels.precode_check import BLOCK, HALO, precode_check_blocks
+from repro.kernels.ref import (
+    crc32_segments_ref,
+    make_replacement_table,
+    marker_replace_ref,
+    precode_check_ref,
+)
+from repro.core.block_finder import scan_dynamic_candidates
+from repro.core.markers import replace_markers
+
+from conftest import make_random, make_text
+
+
+# ---------------------------------------------------------------------------
+# marker_replace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_tiles", [1, 2, 5])
+def test_marker_replace_kernel_vs_ref(rng, n_tiles):
+    window = rng.integers(0, 256, 32768, dtype=np.uint8)
+    table = jnp.asarray(make_replacement_table(window))
+    syms = rng.integers(0, 256 + 32768, (n_tiles, TILE_ROWS, TILE_COLS), dtype=np.int64)
+    tiles = jnp.asarray(syms.astype(np.int32))
+    out_kernel = marker_replace_tiles(tiles, table, interpret=True)
+    out_ref = marker_replace_ref(tiles, table)
+    np.testing.assert_array_equal(np.asarray(out_kernel), np.asarray(out_ref))
+
+
+@pytest.mark.parametrize("n", [0, 1, 1000, TILE, TILE + 17])
+def test_marker_replace_op_shapes(rng, n):
+    window = rng.integers(0, 256, 32768, dtype=np.uint8).tobytes()
+    syms = rng.integers(0, 256 + 32768, n, dtype=np.uint16)
+    out = marker_replace(syms, window)
+    host = replace_markers(syms, window)
+    np.testing.assert_array_equal(out, host)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    wlen=st.integers(min_value=0, max_value=32768),
+)
+def test_marker_replace_property(n, wlen):
+    rng = np.random.default_rng(n * 7919 + wlen)
+    window = rng.integers(0, 256, wlen, dtype=np.uint8).tobytes()
+    # markers may only reference the defined (right-aligned) window region
+    lo = 256 + (32768 - wlen)
+    lits = rng.integers(0, 256, n, dtype=np.uint16)
+    marks = rng.integers(lo, 256 + 32768, n, dtype=np.uint16) if wlen else lits
+    pick = rng.integers(0, 2, n, dtype=np.uint16)
+    syms = np.where(pick == 1, marks, lits).astype(np.uint16)
+    np.testing.assert_array_equal(marker_replace(syms, window), replace_markers(syms, window))
+
+
+# ---------------------------------------------------------------------------
+# precode_check
+# ---------------------------------------------------------------------------
+
+def test_precode_kernel_vs_ref(rng):
+    bits = rng.integers(0, 2, (4, BLOCK), dtype=np.int64).astype(np.int32)
+    bits = jnp.asarray(np.concatenate([bits, np.zeros((1, BLOCK), np.int32)]))
+    out_kernel = np.asarray(precode_check_blocks(bits, interpret=True))
+    flat = np.asarray(bits).reshape(-1)
+    for blk in range(4):
+        seg = jnp.asarray(flat[blk * BLOCK : blk * BLOCK + BLOCK + HALO])
+        ref = np.asarray(precode_check_ref(seg))
+        np.testing.assert_array_equal(out_kernel[blk][: BLOCK], np.pad(ref, (0, BLOCK - ref.shape[0])))
+
+
+@pytest.mark.parametrize("nbytes", [1000, 40_000])
+def test_precode_candidates_match_host_finder(rng, nbytes):
+    blob = make_random(rng, nbytes)
+    end = nbytes * 8 - HALO
+    kern = set(precode_candidates(blob, 0, end).tolist())
+    host = set(
+        c for c in scan_dynamic_candidates(blob, 0, nbytes * 8, full_validation=False) if c < end
+    )
+    assert kern == host
+
+
+def test_precode_candidates_find_real_blocks(rng):
+    import gzip as _gzip
+
+    data = make_text(rng, 300_000)
+    comp = _gzip.compress(data, 6)
+    from repro.core import BitReader, DeflateChunkDecoder, parse_gzip_header
+
+    br = BitReader(comp)
+    parse_gzip_header(br)
+    res = DeflateChunkDecoder(comp).decode_chunk(br.bit_pos, len(comp) * 8, window=b"")
+    dynamic = [b.bit_offset for b in res.blocks if b.block_type == 2 and not b.is_final]
+    cands = set(precode_candidates(comp).tolist())
+    assert all(b in cands for b in dynamic)
+
+
+# ---------------------------------------------------------------------------
+# crc32
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seg_len", [1, 7, 64])
+def test_crc32_kernel_vs_ref(rng, seg_len):
+    data = rng.integers(0, 256, (SEG_ROWS, SEG_COLS, seg_len), dtype=np.int64).astype(np.int32)
+    table = make_crc_table()
+    out_kernel = np.asarray(crc32_segments(jnp.asarray(data), table, interpret=True))
+    out_ref = np.asarray(crc32_segments_ref(jnp.asarray(data), table))
+    np.testing.assert_array_equal(out_kernel, out_ref)
+    # spot-check lane (0,0) against zlib
+    seg = bytes(int(b) for b in data[0, 0])
+    assert (int(out_kernel[0, 0]) & 0xFFFFFFFF) == (zlib.crc32(seg) & 0xFFFFFFFF)
+
+
+@pytest.mark.parametrize("n", [0, 1, 1023, 4096, 100_001])
+def test_crc32_parallel_matches_zlib(rng, n):
+    blob = make_random(rng, n)
+    assert crc32_parallel(blob) == (zlib.crc32(blob) & 0xFFFFFFFF)

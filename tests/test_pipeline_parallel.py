@@ -1,0 +1,98 @@
+"""Pipeline parallelism over a mesh axis — runs in a subprocess with 4 fake
+host devices (XLA device count is locked at first init, so the main pytest
+process must keep its single CPU device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.distributed.pipeline import pipeline_apply
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4, 1), ("pod", "data"))
+    n_stages, n_micro, B, D = 4, 8, 2, 16
+
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (n_stages, D, D), jnp.float32) * 0.3
+
+    def stage_fn(params, x):
+        return jnp.tanh(x @ params["w"])
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, B, D), jnp.float32)
+
+    out = pipeline_apply(stage_fn, {"w": w}, x, mesh=mesh, axis="pod")
+
+    # sequential reference
+    ref = x
+    for s in range(n_stages):
+        ref = jnp.tanh(ref @ w[s])
+
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    print("PIPELINE_OK")
+    """
+)
+
+
+def test_pipeline_apply_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), timeout=300,
+    )
+    assert "PIPELINE_OK" in proc.stdout, proc.stderr[-3000:]
+
+
+MULTIPOD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import all_configs, smoke_config
+    from repro.distributed import default_rules
+    from repro.launch.mesh import make_mesh
+    from repro.models import build_model
+    from repro.train import AdamWConfig, init_train_state, make_train_step
+
+    # miniature multi-pod mesh: (pod=2, data=2, model=2)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = default_rules(mesh)
+    cfg = smoke_config(all_configs()["deepseek-moe-16b"])
+    model = build_model(cfg)
+    params, opt = init_train_state(model, jax.random.PRNGKey(0))
+    step, _ = make_train_step(model, mesh, rules, AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=20))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (4, 65), dtype=np.int32)}
+    losses = []
+    for _ in range(6):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses))
+    print("MULTIPOD_MOE_OK", [round(l, 3) for l in losses])
+    """
+)
+
+
+def test_multipod_moe_training_executes():
+    """Actually EXECUTE (not just compile) MoE EP training on a (2,2,2) mesh:
+    all-to-alls, ZeRO-1 moments and TP collectives all run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", MULTIPOD_SCRIPT], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), timeout=540,
+    )
+    assert "MULTIPOD_MOE_OK" in proc.stdout, proc.stderr[-3000:]

@@ -1,0 +1,166 @@
+import gzip as _gzip
+import io
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import GzipIndex, ParallelGzipReader
+from repro.core.errors import GzipFooterError
+from repro.core.synth import COMPRESSORS
+
+from conftest import gzip_bytes, make_base64, make_random, make_text
+
+
+@pytest.mark.parametrize("parallelization", [1, 3])
+@pytest.mark.parametrize("kind", ["text", "base64", "random"])
+def test_roundtrip(rng, kind, parallelization):
+    data = {"text": make_text, "base64": make_base64, "random": make_random}[kind](rng, 700_000)
+    comp = gzip_bytes(data, 6)
+    with ParallelGzipReader(comp, parallelization=parallelization, chunk_size=64 * 1024) as r:
+        assert r.read() == data
+
+
+@pytest.mark.parametrize("name", sorted(COMPRESSORS))
+def test_roundtrip_all_compressor_variants(rng, name):
+    data = make_text(rng, 400_000)
+    comp = COMPRESSORS[name](data)
+    assert _gzip.decompress(comp) == data  # sanity: variants are valid gzip
+    with ParallelGzipReader(comp, parallelization=3, chunk_size=48 * 1024) as r:
+        assert r.read() == data
+
+
+def test_indexed_second_pass(rng):
+    data = make_base64(rng, 900_000)
+    comp = gzip_bytes(data, 6)
+    r = ParallelGzipReader(comp, parallelization=3, chunk_size=64 * 1024)
+    assert r.read() == data
+    buf = io.BytesIO()
+    r.export_index(buf)
+    st1 = r.stats()
+    r.close()
+    assert st1["fetcher"]["nominal_tasks"] + st1["fetcher"]["exact_tasks"] > 3
+
+    idx = GzipIndex.from_bytes(buf.getvalue())
+    assert idx.finalized and idx.decompressed_size == len(data)
+    r2 = ParallelGzipReader(comp, parallelization=3, chunk_size=64 * 1024, index=idx)
+    assert r2.read() == data
+    st2 = r2.stats()
+    # Indexed pass delegates to zlib (paper §1.3) — no speculative decoding.
+    assert st2["fetcher"]["zlib_delegations"] > 0
+    assert st2["fetcher"]["nominal_tasks"] == 0
+    r2.close()
+
+
+def test_random_access_and_seek_lazy(rng):
+    data = make_text(rng, 800_000)
+    comp = gzip_bytes(data, 6)
+    with ParallelGzipReader(comp, parallelization=2, chunk_size=64 * 1024) as r:
+        # backwards/forwards seeks at arbitrary offsets
+        for off in [0, 123_457, 700_001, 5, 799_000, 400_000]:
+            r.seek(off)
+            assert r.tell() == off
+            got = r.read(1000)
+            assert got == data[off : off + 1000]
+
+
+def test_size_and_seek_end(rng):
+    data = make_text(rng, 300_000)
+    with ParallelGzipReader(gzip_bytes(data), parallelization=2, chunk_size=64 * 1024) as r:
+        assert r.seek(0, io.SEEK_END) == len(data)
+        assert r.read(10) == b""
+        r.seek(-5, io.SEEK_END)
+        assert r.read() == data[-5:]
+
+
+def test_crc_verification_catches_corruption(rng):
+    data = make_base64(rng, 500_000)
+    comp = bytearray(gzip_bytes(data, 6))
+    comp[-6] ^= 0x5A  # flip a CRC byte
+    with ParallelGzipReader(bytes(comp), parallelization=2, chunk_size=64 * 1024) as r:
+        with pytest.raises(GzipFooterError):
+            r.read()
+    # verify=False tolerates it
+    with ParallelGzipReader(bytes(comp), parallelization=2, chunk_size=64 * 1024, verify=False) as r:
+        assert r.read() == data
+
+
+def test_multi_member_with_index(rng):
+    parts = [make_text(rng, 150_000), make_base64(rng, 200_000), b"x" * 10_000]
+    comp = b"".join(gzip_bytes(p) for p in parts)
+    truth = b"".join(parts)
+    r = ParallelGzipReader(comp, parallelization=3, chunk_size=32 * 1024)
+    assert r.read() == truth
+    buf = io.BytesIO(); r.export_index(buf); r.close()
+    r2 = ParallelGzipReader(comp, parallelization=3, chunk_size=32 * 1024,
+                            index=GzipIndex.from_bytes(buf.getvalue()))
+    r2.seek(140_000)
+    assert r2.read(20_000) == truth[140_000:160_000]
+    r2.close()
+
+
+def test_bgzf_fast_path(rng):
+    from repro.core.synth import bgzf_compress
+
+    data = make_text(rng, 500_000)
+    comp = bgzf_compress(data, 6)
+    with ParallelGzipReader(comp, parallelization=3) as r:
+        assert r.index.finalized  # metadata path: index exists immediately
+        assert r.read() == data
+        st = r.stats()
+        assert st["fetcher"]["zlib_delegations"] > 0
+
+
+def test_concurrent_access_two_offsets(rng):
+    """Paper §3: fast concurrent access at two different offsets (ratarmount)."""
+    data = make_text(rng, 600_000)
+    comp = gzip_bytes(data, 6)
+    r = ParallelGzipReader(comp, parallelization=3, chunk_size=64 * 1024,
+                           access_cache_size=4)
+    r.read()  # build index
+    results = {}
+
+    def reader_thread(name, start, n):
+        # own file-position per thread via independent reader over same index
+        buf = io.BytesIO(); r.index.export_file(buf)
+        r2 = ParallelGzipReader(comp, parallelization=2, chunk_size=64 * 1024,
+                                index=GzipIndex.from_bytes(buf.getvalue()))
+        r2.seek(start)
+        results[name] = r2.read(n)
+        r2.close()
+
+    t1 = threading.Thread(target=reader_thread, args=("a", 10_000, 50_000))
+    t2 = threading.Thread(target=reader_thread, args=("b", 400_000, 50_000))
+    t1.start(); t2.start(); t1.join(); t2.join()
+    assert results["a"] == data[10_000:60_000]
+    assert results["b"] == data[400_000:450_000]
+    r.close()
+
+
+def test_python_file_like_source(rng):
+    data = make_text(rng, 200_000)
+    comp = gzip_bytes(data)
+    fileobj = io.BytesIO(comp)
+    with ParallelGzipReader(fileobj, parallelization=2, chunk_size=64 * 1024) as r:
+        assert r.read() == data
+
+
+def test_index_split_points_bound_spacing(rng):
+    """Interior seek points bound decompressed chunk spans (paper §1.4).
+
+    Splits can only land on deflate block boundaries, so the data uses
+    frequent full-flush blocks (pigz-like) to make fine splitting possible.
+    """
+    from repro.core.synth import pigz_like_compress
+
+    data = make_text(rng, 2_000_000)  # highly compressible -> big ratio
+    comp = pigz_like_compress(data, 6, block_size=16 << 10)
+    r = ParallelGzipReader(comp, parallelization=2, chunk_size=32 * 1024,
+                           index_spacing=100_000)
+    r.read()
+    pts = r.index.points()
+    spans = [b.decompressed_byte - a.decompressed_byte for a, b in zip(pts, pts[1:])]
+    r.close()
+    # spacing bounded up to one block (16 KiB uncompressed) of slack
+    assert len(pts) > 5
+    assert max(spans) < 100_000 + 2 * (16 << 10), spans

@@ -1,0 +1,174 @@
+"""Training substrate: convergence, grad-accum equivalence, ZeRO shardings,
+checkpoint/restore (incl. elastic), gradient compression properties."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from repro.configs import all_configs, smoke_config
+from repro.distributed import default_rules, zero1_spec
+from repro.distributed.compression import compress, decompress, init_error_state, quantize_with_feedback
+from repro.distributed.sharding import batch_partition, fit_spec
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.train import AdamWConfig, init_train_state, lr_schedule, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = default_rules(mesh)
+    cfg = smoke_config(all_configs()["granite-3-2b"])
+    model = build_model(cfg)
+    return mesh, rules, cfg, model
+
+
+def _batch(vocab, B=4, S=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, vocab, (B, S + 1), dtype=np.int32)}
+
+
+def test_loss_decreases(setup):
+    mesh, rules, cfg, model = setup
+    params, opt = init_train_state(model, jax.random.PRNGKey(0))
+    step, _ = make_train_step(model, mesh, rules, AdamWConfig(peak_lr=3e-3, warmup_steps=5, total_steps=100))
+    batch = _batch(cfg.vocab_size)
+    losses = []
+    for _ in range(15):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.7 * losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_grad_accum_equivalence(setup):
+    mesh, rules, cfg, model = setup
+    params, opt = init_train_state(model, jax.random.PRNGKey(1))
+    ocfg = AdamWConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10)
+    step1, _ = make_train_step(model, mesh, rules, ocfg, grad_accum=1)
+    step2, _ = make_train_step(model, mesh, rules, ocfg, grad_accum=2)
+    batch = _batch(cfg.vocab_size, B=4)
+    p1, o1, m1 = step1(jax.tree.map(jnp.copy, params), jax.tree.map(jnp.copy, opt), batch)
+    p2, o2, m2 = step2(jax.tree.map(jnp.copy, params), jax.tree.map(jnp.copy, opt), batch)
+    # same data, same update (up to bf16 accumulation noise)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=3e-2, atol=3e-3
+        )
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100, end_lr_fraction=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3, rel=0.01)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=0.05)
+
+
+def test_zero1_spec_math():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    # data axis size 1: spec must stay valid; divisibility logic exercised
+    s = zero1_spec(P(None, "model"), (64, 128), mesh)
+    assert s[0] in ("data", None)
+    big = make_mesh((1, 1), ("data", "model"))
+    # pure function checks on a fake 16x16 mesh via fit_spec composition
+    s2 = fit_spec(P("model", None), (40, 128), big)
+    # trailing Nones are stripped; size-1 axes always divide
+    assert s2 == P("model")
+
+
+def test_fit_spec_prefix_rules():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    # non-divisible dims fall back to replication on a real 16-wide axis;
+    # with size-1 axes everything divides, so spec is preserved
+    assert fit_spec(P("model"), (40,), mesh) == P("model")
+    assert batch_partition(mesh, 4)[0] == "data"
+
+
+def test_checkpoint_roundtrip_and_rotation(tmp_path, setup):
+    mesh, rules, cfg, model = setup
+    params, opt = init_train_state(model, jax.random.PRNGKey(2))
+    state = {"params": params, "opt": opt, "data": {"shard_idx": 3, "byte_offset": 12345,
+                                                    "buffered_tokens": 0, "pending_buffer": 0}}
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4):
+        save_checkpoint(d, s, state, keep_n=2)
+    assert latest_checkpoint(d).endswith("step_00000004")
+    assert len([x for x in os.listdir(d) if x.startswith("step_")]) == 2
+
+    template = {"params": jax.tree.map(jnp.zeros_like, params),
+                "opt": jax.tree.map(jnp.zeros_like, opt),
+                "data": {"shard_idx": 0, "byte_offset": 0, "buffered_tokens": 0, "pending_buffer": 0}}
+    step, restored = restore_checkpoint(latest_checkpoint(d), template)
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(restored["params"]), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert restored["data"]["byte_offset"] == 12345
+
+
+def test_checkpoint_elastic_resharding(tmp_path, setup):
+    """Restore with explicit shardings (the elastic path)."""
+    mesh, rules, cfg, model = setup
+    params, opt = init_train_state(model, jax.random.PRNGKey(3))
+    d = str(tmp_path / "ckpt2")
+    save_checkpoint(d, 7, {"params": params})
+    from repro.train import param_shardings
+
+    shardings = {"params": param_shardings(model, mesh, rules)}
+    step, restored = restore_checkpoint(latest_checkpoint(d), {"params": params}, shardings=shardings)
+    assert step == 7
+    leaf = jax.tree.leaves(restored["params"])[0]
+    assert leaf.sharding is not None
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3, allow_nan=False), min_size=1, max_size=64))
+def test_compress_bounded_error(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, scale = compress(x)
+    err = np.abs(np.asarray(decompress(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_converges():
+    """With error feedback, the running sum of dequantized grads tracks the
+    running sum of true grads (unbiasedness in the long run)."""
+    rng = np.random.default_rng(0)
+    g_true = [jnp.asarray(rng.normal(size=128).astype(np.float32)) * 0.01 for _ in range(50)]
+    err = init_error_state({"w": g_true[0]})
+    acc_q = np.zeros(128, np.float32)
+    acc_t = np.zeros(128, np.float32)
+    for g in g_true:
+        out, err = quantize_with_feedback({"w": g}, err)
+        acc_q += np.asarray(out["w"])
+        acc_t += np.asarray(g)
+    resid = np.abs(acc_q - acc_t).max()
+    # residual bounded by one quantization step, NOT growing with t
+    assert resid < 0.01
+
+
+def test_compressed_grads_training_still_converges(setup):
+    mesh, rules, cfg, model = setup
+    params, opt = init_train_state(model, jax.random.PRNGKey(4), compress_grads=True)
+    step, _ = make_train_step(
+        model, mesh, rules, AdamWConfig(peak_lr=3e-3, warmup_steps=5, total_steps=100),
+        compress_grads=True,
+    )
+    batch = _batch(cfg.vocab_size)
+    losses = []
+    for _ in range(15):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.75 * losses[0]
