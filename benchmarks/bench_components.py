@@ -23,12 +23,12 @@ from repro.core.block_finder import (
 )
 from repro.core.markers import replace_markers, replacement_table
 
-from .common import DataGen, emit, timeit
+from .common import DataGen, emit, scale, timeit
 
 
 def bench_bitreader(gen: DataGen) -> None:
     """Fig 7: bandwidth vs bits per read call."""
-    data = gen.random(1 << 18)
+    data = gen.random(scale(1 << 18))
     total_bits = len(data) * 8
     for bits in (1, 2, 4, 8, 16, 24, 32, 48, 63):
         def run():
@@ -49,7 +49,7 @@ def bench_filereader(gen: DataGen, tmpdir: str) -> None:
     import os
 
     path = os.path.join(tmpdir, "shared.bin")
-    blob = gen.random(64 << 20)
+    blob = gen.random(scale(64 << 20, floor=1 << 20))
     with open(path, "wb") as f:
         f.write(blob)
     chunk = 128 << 10
@@ -75,7 +75,7 @@ def bench_filereader(gen: DataGen, tmpdir: str) -> None:
 
 def bench_blockfinders(gen: DataGen) -> None:
     """Table 2: DBF zlib / trial / skip-LUT / vectorized, NBF, marker repl."""
-    blob = gen.random(192 << 10)
+    blob = gen.random(scale(192 << 10, floor=16 << 10))
     bits = len(blob) * 8
 
     small = blob[: 2 << 10]  # zlib trial is极slow — tiny input, same metric
@@ -97,12 +97,12 @@ def bench_blockfinders(gen: DataGen) -> None:
     emit("table2_nbf", best * 1e6, f"{len(blob)/best/1e6:.4f}MB/s")
 
     # marker replacement (numpy host path — the Pallas kernel's oracle)
-    syms = gen.rng.integers(0, 256 + 32768, 4 << 20, dtype=np.uint16)
+    syms = gen.rng.integers(0, 256 + 32768, scale(4 << 20), dtype=np.uint16)
     window = gen.random(32768)
     best, _ = timeit(lambda: replace_markers(syms, window), repeats=5, warmup=1)
     emit("table2_marker_replacement", best * 1e6, f"{syms.nbytes/2/best/1e6:.1f}MB/s")
 
-    data = gen.text(4 << 20)
+    data = gen.text(scale(4 << 20))
     best, _ = timeit(lambda: np.frombuffer(data, np.uint8).sum(), repeats=3, warmup=1)
     emit("table2_count_bytes_baseline", best * 1e6, f"{len(data)/best/1e6:.1f}MB/s")
 
@@ -111,7 +111,7 @@ def bench_filter_stats(gen: DataGen) -> None:
     """Table 1: empirical filter frequencies of the DBF cascade."""
     from repro.core.block_finder import FilterStats
 
-    blob = gen.random(1 << 20)  # 8.4M bit positions
+    blob = gen.random(scale(1 << 20))  # 8.4M bit positions (full mode)
     stats = FilterStats()
     list(scan_dynamic_candidates(blob, 0, len(blob) * 8, stats=stats))
     d = stats.as_dict()

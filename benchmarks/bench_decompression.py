@@ -19,7 +19,7 @@ from repro.core import GzipIndex, ParallelGzipReader
 from repro.core.deflate import gzip_decompress_sequential
 from repro.core.synth import COMPRESSORS
 
-from .common import DataGen, emit, gzip_bytes, timeit
+from .common import DataGen, emit, gzip_bytes, scale, timeit
 
 
 def _run_reader(comp: bytes, *, parallelization: int, chunk_size: int, index=None):
@@ -78,7 +78,7 @@ def bench_scaling(gen: DataGen, data_name: str, data: bytes) -> None:
 
 def bench_chunk_size(gen: DataGen) -> None:
     """Fig 12: bandwidth vs chunk size."""
-    data = gen.base64(6 << 20)
+    data = gen.base64(scale(6 << 20, floor=256 << 10))
     comp = gzip_bytes(data, 6)
     for cs_kib in (16, 64, 256, 1024, 4096):
         n, dt, stats = _run_reader(comp, parallelization=4, chunk_size=cs_kib << 10)
@@ -92,7 +92,7 @@ def bench_chunk_size(gen: DataGen) -> None:
 
 def bench_compressors(gen: DataGen) -> None:
     """Table 3: decompression across compressor variants/levels."""
-    data = gen.silesia_like(4 << 20)
+    data = gen.silesia_like(scale(4 << 20, floor=256 << 10))
     for name, fn in sorted(COMPRESSORS.items()):
         comp = fn(data)
         n, dt, stats = _run_reader(comp, parallelization=4, chunk_size=128 << 10)
@@ -107,7 +107,7 @@ def bench_compressors(gen: DataGen) -> None:
 
 def bench_formats(gen: DataGen) -> None:
     """Table 4 analogue: gzip (ours, ours+index, zlib) vs raw memcpy bound."""
-    data = gen.silesia_like(4 << 20)
+    data = gen.silesia_like(scale(4 << 20, floor=256 << 10))
     comp = gzip_bytes(data, 6)
     best, _ = timeit(lambda: zlib.decompress(comp, 31), repeats=3)
     emit("table4_zlib", best * 1e6, f"{len(data)/best/1e6:.1f}MB/s")
@@ -129,7 +129,7 @@ def bench_amdahl(gen: DataGen) -> None:
     from repro.core import BitReader, DeflateChunkDecoder, parse_gzip_header
     from repro.core.markers import propagate_window, replace_markers
 
-    data = gen.silesia_like(4 << 20)
+    data = gen.silesia_like(scale(4 << 20, floor=512 << 10))
     comp = gzip_bytes(data, 6)
     br = BitReader(comp)
     parse_gzip_header(br)
@@ -157,9 +157,10 @@ def bench_amdahl(gen: DataGen) -> None:
 
 def main() -> None:
     gen = DataGen()
-    bench_scaling(gen, "base64", gen.base64(4 << 20))
-    bench_scaling(gen, "silesia", gen.silesia_like(4 << 20))
-    bench_scaling(gen, "fastq", gen.fastq_like(4 << 20))
+    n = scale(4 << 20, floor=256 << 10)
+    bench_scaling(gen, "base64", gen.base64(n))
+    bench_scaling(gen, "silesia", gen.silesia_like(n))
+    bench_scaling(gen, "fastq", gen.fastq_like(n))
     bench_chunk_size(gen)
     bench_compressors(gen)
     bench_formats(gen)

@@ -11,13 +11,14 @@ from repro.kernels.marker_replace import TILE_COLS, TILE_ROWS, marker_replace_ti
 from repro.kernels.ref import make_replacement_table, marker_replace_ref, precode_check_ref
 from repro.kernels.precode_check import BLOCK, precode_check_blocks
 
+from . import common
 from .common import DataGen, emit, timeit
 
 
 def bench_marker_replace(gen: DataGen) -> None:
     window = gen.rng.integers(0, 256, 32768, dtype=np.uint8)
     table = jnp.asarray(make_replacement_table(window))
-    n_tiles = 64
+    n_tiles = 4 if common.SMOKE else 64
     syms = jnp.asarray(
         gen.rng.integers(0, 33024, (n_tiles, TILE_ROWS, TILE_COLS), dtype=np.int64).astype(np.int32)
     )
@@ -39,7 +40,7 @@ def bench_marker_replace(gen: DataGen) -> None:
 
 
 def bench_precode(gen: DataGen) -> None:
-    n_blocks = 32
+    n_blocks = 4 if common.SMOKE else 32
     bits = jnp.asarray(gen.rng.integers(0, 2, ((n_blocks + 1), BLOCK), dtype=np.int64).astype(np.int32))
     n_offsets = n_blocks * BLOCK
 

@@ -1,0 +1,131 @@
+"""Archive-service benchmark: N concurrent clients x M files.
+
+What the single-reader benchmarks cannot show: aggregate throughput when
+many clients hammer overlapping files behind one shared cache budget and one
+fair thread pool, and the cold->warm delta from the persistent IndexStore
+(warm opens skip the speculative first pass entirely — zero nominal tasks).
+
+Emits:
+  service_cold_Nc_Mf      aggregate MB/s, first-pass work accounting
+  service_warm_Nc_Mf      same traffic with a warm IndexStore
+  service_seq_1c_Mf       sequential single-client baseline (fairness cost)
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.service import ArchiveServer, IndexStore
+
+from . import common
+from .common import DataGen, emit, gzip_bytes, scale
+
+
+def _make_files(gen: DataGen, tmpdir: str, n_files: int, size: int):
+    paths, datas = [], []
+    makers = [gen.text, gen.base64, gen.silesia_like, gen.fastq_like]
+    for i in range(n_files):
+        data = makers[i % len(makers)](size)
+        path = os.path.join(tmpdir, f"archive-{i:02d}.gz")
+        with open(path, "wb") as f:
+            f.write(gzip_bytes(data, 6))
+        paths.append(path)
+        datas.append(data)
+    return paths, datas
+
+
+def _client(server, handles, datas, rng_seed: int, n_requests: int, req_size: int, errors):
+    rng = np.random.default_rng(rng_seed)
+    served = 0
+    try:
+        for _ in range(n_requests):
+            i = int(rng.integers(0, len(handles)))
+            off = int(rng.integers(0, max(1, len(datas[i]) - req_size)))
+            got = server.read_range(handles[i], off, req_size)
+            if got != datas[i][off : off + len(got)]:
+                raise AssertionError("byte mismatch at file %d offset %d" % (i, off))
+            served += len(got)
+    except BaseException as exc:  # noqa: BLE001 - surface in the main thread
+        errors.append(exc)
+    return served
+
+
+def _run_fleet(server, handles, datas, *, n_clients: int, n_requests: int, req_size: int):
+    errors: list = []
+    threads = [
+        threading.Thread(
+            target=_client,
+            args=(server, handles, datas, 1000 + c, n_requests, req_size, errors),
+        )
+        for c in range(n_clients)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return dt
+
+
+def main() -> None:
+    gen = DataGen()
+    n_files = 2 if common.SMOKE else 4
+    n_clients = 4 if common.SMOKE else 8
+    n_requests = 8 if common.SMOKE else 64
+    file_size = scale(4 << 20, floor=256 << 10)
+    req_size = 32 << 10
+
+    with tempfile.TemporaryDirectory(prefix="bench_service_") as tmpdir:
+        paths, datas = _make_files(gen, tmpdir, n_files, file_size)
+        store_dir = os.path.join(tmpdir, "indexes")
+        total_req_bytes = n_clients * n_requests * req_size
+
+        for phase in ("cold", "warm"):
+            server = ArchiveServer(
+                max_workers=4,
+                cache_budget_bytes=8 << 20,
+                index_store=IndexStore(store_dir),
+                chunk_size=256 << 10,
+            )
+            handles = [server.open(p, tenant=f"client{i % n_clients}") for i, p in enumerate(paths)]
+            dt = _run_fleet(server, handles, datas,
+                            n_clients=n_clients, n_requests=n_requests, req_size=req_size)
+            m = server.metrics()
+            f = m["fleet"]["fetcher"]
+            emit(
+                f"service_{phase}_{n_clients}c_{n_files}f", dt * 1e6,
+                f"{total_req_bytes/dt/1e6:.1f}MB/s nominal={f['nominal_tasks']} "
+                f"exact={f['exact_tasks']} indexed={f['indexed_tasks']} "
+                f"pool_evictions={sum(t['evictions'] for t in m['cache_pool']['tiers'].values())} "
+                f"store_hits={m['index_store']['hits']}",
+            )
+            for h in handles:
+                server.size(h)  # drive the first pass to EOF so the index finalizes
+            server.close_all()  # persists finalized indexes -> warm phase
+            server.shutdown()
+
+        # single-client sequential baseline over the warm store
+        server = ArchiveServer(
+            max_workers=4, cache_budget_bytes=8 << 20,
+            index_store=IndexStore(store_dir), chunk_size=256 << 10,
+        )
+        handles = [server.open(p) for p in paths]
+        dt = _run_fleet(server, handles, datas,
+                        n_clients=1, n_requests=n_clients * n_requests, req_size=req_size)
+        emit(
+            f"service_seq_1c_{n_files}f", dt * 1e6,
+            f"{total_req_bytes/dt/1e6:.1f}MB/s",
+        )
+        server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

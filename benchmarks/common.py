@@ -8,9 +8,27 @@ from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
+#: Smoke mode (``python -m benchmarks.run --smoke``): every section shrinks
+#: its data through :func:`scale` so the whole harness finishes in <60 s —
+#: a CI-grade "do all benchmarks still execute" check, not a measurement.
+SMOKE = False
+SMOKE_DIVISOR = 32
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
+
+
+def scale(n: int, floor: int = 1 << 12) -> int:
+    """Benchmark size ``n``, shrunk in smoke mode (never below ``floor``)."""
+    return max(floor, n // SMOKE_DIVISOR) if SMOKE else n
+
 
 def timeit(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> Tuple[float, float]:
-    """Returns (best_seconds, mean_seconds)."""
+    """Returns (best_seconds, mean_seconds). Smoke mode: 1 repeat, no warmup."""
+    if SMOKE:
+        repeats, warmup = 1, 0
     for _ in range(warmup):
         fn()
     times = []

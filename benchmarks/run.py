@@ -1,7 +1,11 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (see DESIGN.md §8 for the
-table/figure mapping). ``python -m benchmarks.run [--only sections]``.
+table/figure mapping). ``python -m benchmarks.run [--only sections] [--smoke]``.
+
+``--smoke`` shrinks every section to tiny sizes (common.scale) so the whole
+harness completes in under a minute — a CI check that each benchmark still
+runs, not a measurement.
 """
 
 from __future__ import annotations
@@ -9,14 +13,26 @@ from __future__ import annotations
 import argparse
 import sys
 import tempfile
+import time
 import traceback
+
+from . import common
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="comma list: components,decomp,kernels,roofline")
+    ap.add_argument(
+        "--only", default="",
+        help="comma list: components,decomp,kernels,roofline,service",
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny sizes, 1 repeat: verify every section runs in <60 s total",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        common.set_smoke(True)
 
     sections = []
     if only is None or "components" in only:
@@ -35,8 +51,13 @@ def main() -> None:
         from . import roofline_report
 
         sections.append(("roofline", roofline_report.main))
+    if only is None or "service" in only:
+        from . import bench_service
+
+        sections.append(("service", bench_service.main))
 
     failures = 0
+    t_start = time.perf_counter()
     for name, fn in sections:
         print(f"# === {name} ===")
         try:
@@ -45,6 +66,8 @@ def main() -> None:
             failures += 1
             print(f"# section {name} FAILED", file=sys.stderr)
             traceback.print_exc()
+    if args.smoke:
+        print(f"# smoke total: {time.perf_counter() - t_start:.1f}s")
     if failures:
         raise SystemExit(1)
 

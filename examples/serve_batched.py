@@ -1,10 +1,17 @@
 """Batched serving demo: prefill a batch of prompts, then greedy-decode with
-sharded KV caches (the ``decode_32k``-style serve_step at toy scale).
+sharded KV caches (the ``decode_32k``-style serve_step at toy scale) — while
+the same process serves corpus range-reads out of gzip shards through the
+archive service (retrieval-style traffic: each decoded sequence fetches a
+context document by decompressed offset).
 
     PYTHONPATH=src python examples/serve_batched.py --arch gemma-2b
+    PYTHONPATH=src python examples/serve_batched.py --no-corpus   # model only
 """
 
 import argparse
+import gzip as _gzip
+import os
+import tempfile
 import time
 
 import jax
@@ -16,6 +23,31 @@ from repro.distributed import default_rules
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve import make_serve_steps, prefill_to_decode_caches
+from repro.service import ArchiveServer, IndexStore, format_summary
+
+
+def make_corpus_service(tmpdir: str, *, n_shards: int = 3, shard_mb: float = 1.0):
+    """Gzip corpus shards + an ArchiveServer over them (warm-capable)."""
+    rng = np.random.default_rng(7)
+    words = [b"the", b"quick", b"brown", b"fox", b"rapidgzip", b"serve",
+             b"retrieval", b"document", b"context", b"window"]
+    paths, sizes = [], []
+    for s in range(n_shards):
+        n = int(shard_mb * (1 << 20))
+        doc = b" ".join(words[i] for i in rng.integers(0, len(words), n // 6))[:n]
+        path = os.path.join(tmpdir, f"corpus-{s:02d}.txt.gz")
+        with open(path, "wb") as f:
+            f.write(_gzip.compress(doc, 6))
+        paths.append(path)
+        sizes.append(len(doc))
+    server = ArchiveServer(
+        max_workers=4,
+        cache_budget_bytes=8 << 20,  # far below n_shards x per-reader maxima
+        index_store=IndexStore(os.path.join(tmpdir, "indexes")),
+        chunk_size=256 << 10,
+    )
+    handles = [server.open(p, tenant="serve") for p in paths]
+    return server, handles, sizes
 
 
 def main() -> None:
@@ -24,6 +56,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--no-corpus", action="store_true",
+                    help="skip the archive-service corpus demo")
+    ap.add_argument("--corpus-shards", type=int, default=3)
+    ap.add_argument("--corpus-mb", type=float, default=1.0)
     args = ap.parse_args()
 
     cfg = smoke_config(all_configs()[args.arch])
@@ -55,17 +91,42 @@ def main() -> None:
     t_prefill = time.perf_counter() - t0
     print(f"prefill {B}x{P}: {t_prefill*1e3:.0f} ms")
 
+    corpus = None
+    corpus_dir = None
+    if not args.no_corpus:
+        corpus_dir = tempfile.TemporaryDirectory(prefix="serve_corpus_")
+        corpus = make_corpus_service(
+            corpus_dir.name, n_shards=args.corpus_shards, shard_mb=args.corpus_mb
+        )
+
     generated = [tok]
+    doc_bytes = 0
     t0 = time.perf_counter()
     for t in range(N - 1):
         tok, _, caches = decode_fn(params, tok, caches, jnp.int32(P + prefix + t))
         generated.append(tok)
+        if corpus is not None:
+            # Retrieval-style traffic interleaved with decode: each sequence
+            # pulls a context snippet addressed by decompressed offset.
+            server, handles, sizes = corpus
+            for b in range(B):
+                shard = (b + t) % len(handles)
+                off = int(np.asarray(tok)[b, 0]) * 1009 % max(1, sizes[shard] - 512)
+                doc_bytes += len(server.read_range(handles[shard], off, 512))
     dt = time.perf_counter() - t0
     out = np.concatenate([np.asarray(g) for g in generated], axis=1)
     print(f"decode {N-1} steps: {dt*1e3:.0f} ms "
           f"({B*(N-1)/dt:.1f} tok/s batched, greedy)")
     for b in range(B):
         print(f"  seq {b}: {out[b][:16].tolist()}...")
+
+    if corpus is not None:
+        server, handles, _ = corpus
+        print(f"\ncorpus service: {doc_bytes/1e3:.0f} kB of context served "
+              f"during decode, budget-shared across {len(handles)} shards")
+        print(format_summary(server.metrics()))
+        server.shutdown()
+        corpus_dir.cleanup()
 
 
 if __name__ == "__main__":

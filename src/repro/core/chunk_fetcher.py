@@ -123,6 +123,9 @@ class GzipChunkFetcher:
         prefetch_strategy: Optional[PrefetchStrategy] = None,
         access_cache_size: int = 1,
         max_ratio: int = MAX_COMPRESSION_RATIO,
+        executor=None,
+        access_cache: Optional[LRUCache] = None,
+        prefetch_cache: Optional[LRUCache] = None,
     ):
         if chunk_size < 1 << 10:
             raise ValueError("chunk_size must be >= 1 KiB")
@@ -136,11 +139,24 @@ class GzipChunkFetcher:
         self.total_bits = self.file_size * 8
         self.n_nominal = max(1, -(-self.file_size // chunk_size))
 
-        self.pool = ThreadPoolExecutor(max_workers=self.parallelization)
+        # The executor and both caches are injectable so a fleet of fetchers
+        # can share one thread-pool budget and one memory budget
+        # (service/server.py). An injected executor is externally owned:
+        # shutdown() leaves it alone.
+        self._owns_executor = executor is None
+        self.pool = executor if executor is not None else ThreadPoolExecutor(
+            max_workers=self.parallelization
+        )
         # Separate caches: prefetch traffic must not evict accessed chunks
         # (paper §3.2). Prefetch cache holds 2x parallelism chunks (§1.4).
-        self.access_cache = LRUCache(max(1, access_cache_size))
-        self.prefetch_cache = LRUCache(2 * self.parallelization)
+        # `is None` checks: an injected cache may be empty, and LRUCache
+        # defines __len__, so truthiness would silently drop it.
+        self.access_cache = (
+            access_cache if access_cache is not None else LRUCache(max(1, access_cache_size))
+        )
+        self.prefetch_cache = (
+            prefetch_cache if prefetch_cache is not None else LRUCache(2 * self.parallelization)
+        )
         self.strategy = prefetch_strategy or AdaptivePrefetchStrategy(self.parallelization)
 
         self._lock = threading.Lock()
@@ -460,12 +476,27 @@ class GzipChunkFetcher:
     # ------------------------------------------------------------------
 
     def shutdown(self) -> None:
-        self.pool.shutdown(wait=False, cancel_futures=True)
+        if self._owns_executor:
+            self.pool.shutdown(wait=False, cancel_futures=True)
+        else:
+            # Externally owned executor: never shut it down, but drop our own
+            # queued tasks if the executor offers a scoped cancel (the
+            # service layer's TenantExecutor view does) — otherwise stale
+            # prefetches would run against a closing reader.
+            cancel_pending = getattr(self.pool, "cancel_pending", None)
+            if cancel_pending is not None:
+                cancel_pending()
+        # Injected caches may outlive this fetcher inside a shared pool;
+        # release() deregisters them and returns their bytes to the budget.
+        for cache in (self.access_cache, self.prefetch_cache):
+            release = getattr(cache, "release", None)
+            if release is not None:
+                release()
 
     def cache_report(self) -> dict:
         return {
-            "access": self.access_cache.stats.as_dict(),
-            "prefetch": self.prefetch_cache.stats.as_dict(),
+            "access": self.access_cache.snapshot()["stats"].as_dict(),
+            "prefetch": self.prefetch_cache.snapshot()["stats"].as_dict(),
             "fetcher": self.stats.as_dict(),
         }
 

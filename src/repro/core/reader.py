@@ -68,6 +68,10 @@ class ParallelGzipReader(io.RawIOBase):
         framing: str = "gzip",
         index_spacing: Optional[int] = None,
         access_cache_size: int = 1,
+        executor=None,
+        access_cache=None,
+        prefetch_cache=None,
+        prefetch_strategy=None,
     ):
         super().__init__()
         self._reader = open_file_reader(source)
@@ -89,6 +93,10 @@ class ParallelGzipReader(io.RawIOBase):
             framing=framing,
             index=index,
             access_cache_size=access_cache_size,
+            executor=executor,
+            access_cache=access_cache,
+            prefetch_cache=prefetch_cache,
+            prefetch_strategy=prefetch_strategy,
         )
         self._index = self._fetcher.index
 

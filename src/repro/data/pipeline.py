@@ -15,6 +15,12 @@ In a multi-host deployment every host runs one pipeline over its own shard
 subset (shard_id=process_index) and feeds its addressable devices;
 decompression parallelism comes from the chunk fetcher's thread pool —
 exactly the paper's architecture, one instance per host.
+
+When several pipelines (or a pipeline and a serving path) share one host,
+pass ``cache_pool``/``executor``/``index_store`` (service layer) so all
+shard readers draw from one memory budget and one fair thread pool, and
+shard seek-indexes persist across epochs and restarts instead of being
+rebuilt by a speculative first pass each time the shard is reopened.
 """
 
 from __future__ import annotations
@@ -61,6 +67,10 @@ class GzipCorpusDataset:
         num_shards: int = 1,
         indexes: Optional[Dict[int, GzipIndex]] = None,
         loop: bool = True,
+        cache_pool=None,  # service.CachePool: shared memory budget
+        executor=None,  # service.FairExecutor (or any Executor) to share threads
+        index_store=None,  # service.IndexStore: persistent shard indexes
+        tenant: Optional[str] = None,  # accounting id in the shared pool
     ):
         if not shards:
             raise ValueError("no shards")
@@ -75,6 +85,10 @@ class GzipCorpusDataset:
         self.num_shards = num_shards
         self.indexes = indexes or {}
         self.loop = loop
+        self.cache_pool = cache_pool
+        self.executor = executor
+        self.index_store = index_store
+        self.tenant = tenant or f"pipeline-shard{shard_id}"
 
         self._my_shards = [i for i in range(len(self.shards)) if i % num_shards == shard_id]
         if not self._my_shards:
@@ -91,16 +105,45 @@ class GzipCorpusDataset:
         global_idx = self._my_shards[local_idx % len(self._my_shards)]
         if self._reader is not None and self._reader_shard == global_idx:
             return self._reader
-        if self._reader is not None:
-            self._reader.close()
-        self._reader = ParallelGzipReader(
-            self.shards[global_idx],
-            parallelization=self.parallelization,
-            chunk_size=self.chunk_size,
-            index=self.indexes.get(global_idx),
-        )
+        self._close_reader()
+        index = self.indexes.get(global_idx)
+        if index is None and self.index_store is not None:
+            # Warm open: a stored index skips the speculative first pass.
+            index = self.index_store.get(self.shards[global_idx])
+        access_cache = prefetch_cache = None
+        if self.cache_pool is not None:
+            access_cache, prefetch_cache = self.cache_pool.reader_caches(self.tenant)
+        executor = self.executor
+        if executor is not None and hasattr(executor, "view"):
+            executor = executor.view(self.tenant)
+        try:
+            self._reader = ParallelGzipReader(
+                self.shards[global_idx],
+                parallelization=self.parallelization,
+                chunk_size=self.chunk_size,
+                index=index,
+                executor=executor,
+                access_cache=access_cache,
+                prefetch_cache=prefetch_cache,
+            )
+        except BaseException:
+            # Don't leak pool registrations when a shard fails to open.
+            if access_cache is not None:
+                access_cache.release()
+                prefetch_cache.release()
+            raise
         self._reader_shard = global_idx
         return self._reader
+
+    def _close_reader(self) -> None:
+        """Close the current shard reader, persisting its index if possible."""
+        if self._reader is None:
+            return
+        if self.index_store is not None and self._reader.index.finalized:
+            self.index_store.put(self.shards[self._reader_shard], self._reader.index)
+        self._reader.close()
+        self._reader = None
+        self._reader_shard = None
 
     # -- iteration -------------------------------------------------------------
 
@@ -169,10 +212,7 @@ class GzipCorpusDataset:
         self.state.byte_offset = max(0, self.state.byte_offset - pending)
         self._token_buf = np.empty(0, np.int32)
         self._exhausted = False
-        if self._reader is not None:
-            self._reader.close()
-            self._reader = None
-            self._reader_shard = None
+        self._close_reader()
 
     def export_indexes(self) -> Dict[int, bytes]:
         """Seek indexes of every opened shard (reusable across restarts)."""
@@ -182,6 +222,4 @@ class GzipCorpusDataset:
         return out
 
     def close(self) -> None:
-        if self._reader is not None:
-            self._reader.close()
-            self._reader = None
+        self._close_reader()

@@ -193,7 +193,9 @@ def moe_layer(
             aux = jax.lax.pmean(aux, ep_axis)
         return y.reshape(B_l, S, D).astype(x_l.dtype), aux
 
-    y, aux = jax.shard_map(
+    from ..distributed.sharding import shard_map_compat
+
+    y, aux = shard_map_compat(
         inner,
         mesh=mesh,
         in_specs=(x_spec, r_spec, w_spec, w_spec, w_spec),

@@ -351,7 +351,9 @@ def sharded_embed_lookup(ctx: ModelContext, table: jax.Array, tokens: jax.Array)
         x = jnp.where(ok[..., None], x, jnp.zeros((), x.dtype))
         return jax.lax.psum(x, "model")
 
-    return jax.shard_map(
+    from ..distributed.sharding import shard_map_compat
+
+    return shard_map_compat(
         inner,
         mesh=mesh,
         in_specs=(P("model", None), P(*tok_parts)),

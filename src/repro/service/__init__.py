@@ -1,0 +1,40 @@
+"""Archive service: multi-file, multi-client random-access decompression.
+
+Lifts the paper's single-reader cache/prefetch architecture (§3.2) to a
+fleet: many `ParallelGzipReader`s behind one shared memory budget
+(`CachePool`), one shared decompression thread pool with per-tenant fairness
+(`FairExecutor`), a persistent seek-index store so repeat opens skip the
+speculative first pass (`IndexStore`), and fleet-wide telemetry (`metrics`).
+
+    from repro.service import ArchiveServer, IndexStore
+
+    with ArchiveServer(cache_budget_bytes=32 << 20,
+                       index_store=IndexStore("/var/cache/rpgz")) as srv:
+        h = srv.open("corpus-00.json.gz", tenant="search")
+        page = srv.read_range(h, 10 << 20, 4096)
+"""
+
+from .cache_pool import ACCESS, PREFETCH, CachePool, PooledCache, TenantStats, default_size_of
+from .index_store import IndexStore, IndexStoreStats, file_identity
+from .metrics import aggregate_reader_reports, collect, format_summary
+from .scheduler import FairExecutor, TenantExecutor
+from .server import ArchiveServer, ArchiveStat
+
+__all__ = [
+    "ACCESS",
+    "PREFETCH",
+    "ArchiveServer",
+    "ArchiveStat",
+    "CachePool",
+    "FairExecutor",
+    "IndexStore",
+    "IndexStoreStats",
+    "PooledCache",
+    "TenantExecutor",
+    "TenantStats",
+    "aggregate_reader_reports",
+    "collect",
+    "default_size_of",
+    "file_identity",
+    "format_summary",
+]

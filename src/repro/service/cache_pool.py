@@ -1,0 +1,329 @@
+"""CachePool — one memory budget shared by a fleet of readers.
+
+`core/cache.py` gives every reader two private caches (access + prefetch,
+paper §3.2). That is the right shape for one reader over one file; a service
+multiplexing dozens of `ParallelGzipReader`s cannot let each of them size its
+caches independently — worst-case memory is the *sum* of per-reader maxima.
+
+The pool lifts the paper's two-tier split fleet-wide:
+
+  * one **byte** budget, split into an *access tier* and a *prefetch tier*
+    with separate sub-budgets — prefetch churn from any reader can never
+    evict any reader's explicitly-accessed chunks (the paper's pollution
+    argument, now across files and tenants);
+  * global LRU within each tier: the victim is the least-recently-used entry
+    across *all* member caches of that tier;
+  * per-tenant accounting (bytes held, insertions, evictions suffered/caused)
+    plus soft isolation: a tenant holding more than ``max_tenant_fraction``
+    of a tier evicts its *own* LRU entries first, so one hot client cannot
+    monopolize the pool.
+
+Member caches are `PooledCache` — drop-in `LRUCache` subclasses, so the chunk
+fetcher uses them unchanged via its injectable-cache hooks.
+
+Lock ordering: a member cache always releases its own lock before calling
+into the pool, and the pool releases its lock before touching a member cache
+(victim eviction collects keys under the pool lock, then pops outside it).
+Budget overshoot during the gap is transient and bounded by one entry.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+from ..core.cache import CacheStats, LRUCache
+
+ACCESS = "access"
+PREFETCH = "prefetch"
+
+
+def default_size_of(value: Any) -> int:
+    """Approximate resident bytes of a cached value.
+
+    Cached values are numpy arrays (indexed chunks), DecodeResult objects
+    (first-pass chunks, dominated by their ``data`` array), or bytes.
+    """
+    nbytes = getattr(value, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    data = getattr(value, "data", None)
+    if data is not None and hasattr(data, "nbytes"):
+        return int(data.nbytes) + 256  # DecodeResult bookkeeping overhead
+    try:
+        return len(value)
+    except TypeError:
+        return 1024
+
+
+@dataclass
+class TenantStats:
+    bytes_held: int = 0
+    insertions: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions_suffered: int = 0  # this tenant's entries evicted
+    evictions_caused: int = 0  # evictions triggered by this tenant's inserts
+
+    def as_dict(self) -> Dict[str, int]:
+        return {k: int(getattr(self, k)) for k in self.__dataclass_fields__}
+
+
+@dataclass
+class _Tier:
+    budget: int
+    held: int = 0
+    # (cache_id, key) -> (PooledCache, nbytes); order = LRU .. MRU
+    entries: "OrderedDict[Tuple[int, Hashable], Tuple[Any, int]]" = field(
+        default_factory=OrderedDict
+    )
+    evictions: int = 0
+
+
+class PooledCache(LRUCache):
+    """LRUCache whose contents are charged against a shared CachePool.
+
+    Keeps an (optional) per-cache entry capacity on top of the pool's byte
+    budget — the fetcher still relies on a size-1 access cache meaning
+    "current chunk only".
+    """
+
+    def __init__(self, pool: "CachePool", tier: str, tenant: str, capacity: Optional[int]):
+        super().__init__(capacity if capacity is not None else 1 << 30)
+        self._pool = pool
+        self._tier = tier
+        self.tenant = tenant
+        self._cache_id = pool._next_cache_id()
+
+    # Mutations run the base core under the cache lock, then report to the
+    # pool after releasing it (see lock-ordering note in the module doc).
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            hit, val = self._get_locked(key)
+        self._pool._on_lookup(self, key, hit)
+        return val
+
+    def insert(self, key: Hashable, value: Any) -> None:
+        with self._lock:
+            _, evicted = self._insert_locked(key, value)
+        self._pool._on_insert(self, key, value, evicted)
+
+    def pop(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            val = self._pop_locked(key)
+        if val is not None:
+            self._pool._forget(self, [key])
+        return val
+
+    def clear(self) -> None:
+        with self._lock:
+            keys = list(self._data.keys())
+            self._data.clear()
+        self._pool._forget(self, keys)
+
+    def _evict_for_pool(self, key: Hashable) -> None:
+        """Pool-chosen victim: remove locally without calling back."""
+        with self._lock:
+            if self._data.pop(key, None) is not None:
+                self.stats.evictions += 1
+
+    def release(self) -> None:
+        """Empty this cache and deregister it from the pool.
+
+        Must be called when the owning reader closes (the fetcher's shutdown
+        does) — otherwise dead caches would pin their bytes against the tier
+        budget and accumulate in the pool registry forever.
+        """
+        self.clear()
+        self._pool._deregister(self)
+
+
+class CachePool:
+    def __init__(
+        self,
+        budget_bytes: int,
+        *,
+        access_fraction: float = 0.25,
+        max_tenant_fraction: float = 0.5,
+        size_of=default_size_of,
+    ):
+        if budget_bytes < 1:
+            raise ValueError("budget_bytes must be >= 1")
+        if not 0.0 < access_fraction < 1.0:
+            raise ValueError("access_fraction must be in (0, 1)")
+        self.budget_bytes = budget_bytes
+        self.max_tenant_fraction = max_tenant_fraction
+        self._size_of = size_of
+        self._lock = threading.RLock()
+        self._tiers: Dict[str, _Tier] = {
+            ACCESS: _Tier(max(1, int(budget_bytes * access_fraction))),
+            PREFETCH: _Tier(max(1, budget_bytes - int(budget_bytes * access_fraction))),
+        }
+        self._tenants: Dict[str, TenantStats] = {}
+        self._cache_id_seq = 0
+        self._caches: List[PooledCache] = []
+
+    # -- construction -------------------------------------------------------
+
+    def _next_cache_id(self) -> int:
+        with self._lock:
+            self._cache_id_seq += 1
+            return self._cache_id_seq
+
+    def cache(self, *, tier: str, tenant: str = "default", capacity: Optional[int] = None) -> PooledCache:
+        """New member cache charged to ``tenant`` in ``tier``."""
+        if tier not in self._tiers:
+            raise ValueError("tier must be one of %r" % sorted(self._tiers))
+        c = PooledCache(self, tier, tenant, capacity)
+        with self._lock:
+            self._tenants.setdefault(tenant, TenantStats())
+            self._caches.append(c)
+        return c
+
+    def reader_caches(
+        self, tenant: str, *, access_capacity: int = 4, prefetch_capacity: Optional[int] = None
+    ) -> Tuple[PooledCache, PooledCache]:
+        """(access_cache, prefetch_cache) pair for one ParallelGzipReader."""
+        return (
+            self.cache(tier=ACCESS, tenant=tenant, capacity=access_capacity),
+            self.cache(tier=PREFETCH, tenant=tenant, capacity=prefetch_capacity),
+        )
+
+    # -- member-cache callbacks --------------------------------------------
+
+    def _on_lookup(self, cache: PooledCache, key: Hashable, hit: bool) -> None:
+        with self._lock:
+            tier = self._tiers[cache._tier]
+            stats = self._tenants.setdefault(cache.tenant, TenantStats())
+            if hit:
+                stats.hits += 1
+                entry = tier.entries.pop((cache._cache_id, key), None)
+                if entry is not None:
+                    tier.entries[(cache._cache_id, key)] = entry  # move to MRU
+            else:
+                stats.misses += 1
+
+    def _on_insert(
+        self,
+        cache: PooledCache,
+        key: Hashable,
+        value: Any,
+        evicted: List[Tuple[Hashable, Any]],
+    ) -> None:
+        size = self._size_of(value)
+        victims: List[Tuple[PooledCache, Hashable]] = []
+        with self._lock:
+            tier = self._tiers[cache._tier]
+            stats = self._tenants.setdefault(cache.tenant, TenantStats())
+            for k, _ in evicted:  # entry-capacity evictions inside the cache
+                self._forget_locked(tier, cache, k)
+            # Unconditionally decharge any prior ledger entry for this key —
+            # not just when `replaced` says so: two same-key inserts can race
+            # in the gap between the cache lock and this pool lock, and an
+            # overwrite without decharge would leak bytes into tier.held
+            # permanently.
+            self._forget_locked(tier, cache, key)
+            tier.entries[(cache._cache_id, key)] = (cache, size)
+            tier.held += size
+            stats.bytes_held += size
+            stats.insertions += 1
+            victims = self._select_victims_locked(tier, cache, key, stats)
+        for victim_cache, victim_key in victims:
+            victim_cache._evict_for_pool(victim_key)
+
+    def _select_victims_locked(
+        self, tier: _Tier, cache: PooledCache, new_key: Hashable, inserter: TenantStats
+    ) -> List[Tuple[PooledCache, Hashable]]:
+        victims: List[Tuple[PooledCache, Hashable]] = []
+
+        def take(pred) -> bool:
+            for (cid, k), (c, sz) in tier.entries.items():
+                if (cid, k) == (cache._cache_id, new_key):
+                    continue  # never evict the entry being inserted
+                if pred(c):
+                    del tier.entries[(cid, k)]
+                    tier.held -= sz
+                    owner = self._tenants.setdefault(c.tenant, TenantStats())
+                    owner.bytes_held -= sz
+                    owner.evictions_suffered += 1
+                    inserter.evictions_caused += 1
+                    tier.evictions += 1
+                    victims.append((c, k))
+                    return True
+            return False
+
+        # Soft isolation: a tenant over its fair share sheds its own LRU
+        # entries before anyone else's.
+        tenant_cap = int(tier.budget * self.max_tenant_fraction)
+        while inserter.bytes_held > tenant_cap and tier.held > tier.budget:
+            if not take(lambda c: c.tenant == cache.tenant):
+                break
+        while tier.held > tier.budget:
+            if not take(lambda c: True):
+                break  # only the new entry remains; let it stay
+        return victims
+
+    def _forget(self, cache: PooledCache, keys: List[Hashable]) -> None:
+        with self._lock:
+            tier = self._tiers[cache._tier]
+            for k in keys:
+                self._forget_locked(tier, cache, k)
+
+    def _deregister(self, cache: PooledCache) -> None:
+        """Remove a released cache (and any ledger remnants) from the pool."""
+        with self._lock:
+            tier = self._tiers[cache._tier]
+            stale = [key for key in tier.entries if key[0] == cache._cache_id]
+            for key in stale:
+                self._forget_locked(tier, cache, key[1])
+            try:
+                self._caches.remove(cache)
+            except ValueError:
+                pass
+
+    def _forget_locked(self, tier: _Tier, cache: PooledCache, key: Hashable) -> None:
+        entry = tier.entries.pop((cache._cache_id, key), None)
+        if entry is not None:
+            _, size = entry
+            tier.held -= size
+            owner = self._tenants.setdefault(cache.tenant, TenantStats())
+            owner.bytes_held -= size
+
+    # -- introspection ------------------------------------------------------
+
+    def bytes_held(self, tier: Optional[str] = None) -> int:
+        with self._lock:
+            if tier is not None:
+                return self._tiers[tier].held
+            return sum(t.held for t in self._tiers.values())
+
+    def tenant_stats(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            return {name: s.as_dict() for name, s in self._tenants.items()}
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Atomic pool-wide view: tier occupancy + per-tenant accounting +
+        merged member-cache stats (via CacheStats.merge)."""
+        with self._lock:
+            tiers = {
+                name: {
+                    "budget": t.budget,
+                    "held": t.held,
+                    "entries": len(t.entries),
+                    "evictions": t.evictions,
+                }
+                for name, t in self._tiers.items()
+            }
+            tenants = {name: s.as_dict() for name, s in self._tenants.items()}
+            caches = list(self._caches)
+        merged = CacheStats().merge(*(c.snapshot()["stats"] for c in caches))
+        return {
+            "budget_bytes": self.budget_bytes,
+            "tiers": tiers,
+            "tenants": tenants,
+            "merged_cache_stats": merged.as_dict(),
+            "n_caches": len(caches),
+        }

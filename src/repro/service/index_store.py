@@ -1,0 +1,168 @@
+"""IndexStore — persistent seek-index blobs keyed by file identity.
+
+The paper's index (§1.3/§3.3) is built on the fly during the first pass and
+can be exported/imported; with an imported index every read is an indexed
+read and the speculative first pass is skipped entirely (paper Fig 9 "with
+index"). For a service that reopens the same archives across requests and
+restarts, that import path is the difference between O(file) and O(range)
+work on every open — so the store makes it automatic: `ArchiveServer`
+consults the store on open and persists finalized indexes on close.
+
+Identity is content-addressed cheaply: path + size + mtime_ns for on-disk
+files (an edited file gets a new key and a cold first pass — stale indexes
+age out of the directory unreferenced), and a head/tail content digest for
+in-memory buffers. Blobs are the existing `GzipIndex` binary format, one
+file per key under ``root`` (or an in-memory dict when ``root=None``).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from dataclasses import dataclass
+from typing import Dict, Optional, Union
+
+from ..core.filereader import FileReader
+from ..core.index import GzipIndex
+
+_EXT = ".rpgzidx"
+
+
+def file_identity(source: Union[str, os.PathLike, bytes, bytearray, memoryview, FileReader]) -> str:
+    """Stable hex key for a gzip source.
+
+    Paths hash (realpath, size, mtime_ns) — no content reads, safe for huge
+    archives. Byte buffers hash (len, head 64 KiB, tail 64 KiB).
+    """
+    h = hashlib.sha256()
+    if isinstance(source, (str, os.PathLike)):
+        path = os.path.realpath(os.fspath(source))
+        st = os.stat(path)
+        h.update(b"path\0")
+        h.update(path.encode())
+        h.update(str(st.st_size).encode())
+        h.update(str(st.st_mtime_ns).encode())
+        return h.hexdigest()
+    if isinstance(source, (bytes, bytearray, memoryview)):
+        data = bytes(source)
+        h.update(b"bytes\0")
+        h.update(str(len(data)).encode())
+        h.update(data[: 64 << 10])
+        h.update(data[-(64 << 10):])
+        return h.hexdigest()
+    if isinstance(source, FileReader):
+        size = source.size()
+        h.update(b"reader\0")
+        h.update(str(size).encode())
+        h.update(source.pread(0, 64 << 10))
+        h.update(source.pread(max(0, size - (64 << 10)), 64 << 10))
+        return h.hexdigest()
+    raise TypeError("unsupported source type for identity: %r" % type(source))
+
+
+@dataclass
+class IndexStoreStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+    rejected: int = 0  # non-finalized indexes refused
+
+    def as_dict(self) -> Dict[str, int]:
+        return {k: int(getattr(self, k)) for k in self.__dataclass_fields__}
+
+
+class IndexStore:
+    """Get/put of finalized GzipIndex blobs by source identity.
+
+    ``root=None`` keeps blobs in memory (useful for tests and single-process
+    services); a path persists them across restarts.
+    """
+
+    def __init__(self, root: Optional[Union[str, os.PathLike]] = None):
+        self.root = os.fspath(root) if root is not None else None
+        if self.root is not None:
+            os.makedirs(self.root, exist_ok=True)
+        self._mem: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self.stats = IndexStoreStats()
+
+    # -- keys ---------------------------------------------------------------
+
+    def key_for(self, source) -> str:
+        return source if isinstance(source, str) and _is_key(source) else file_identity(source)
+
+    def _path(self, key: str) -> str:
+        assert self.root is not None
+        return os.path.join(self.root, key + _EXT)
+
+    # -- get/put ------------------------------------------------------------
+
+    def get(self, source) -> Optional[GzipIndex]:
+        key = self.key_for(source)
+        blob: Optional[bytes] = None
+        if self.root is None:
+            with self._lock:
+                blob = self._mem.get(key)
+        else:
+            try:
+                with open(self._path(key), "rb") as f:
+                    blob = f.read()
+            except FileNotFoundError:
+                blob = None
+        with self._lock:
+            if blob is None:
+                self.stats.misses += 1
+            else:
+                self.stats.hits += 1
+        return GzipIndex.from_bytes(blob) if blob is not None else None
+
+    def put(self, source, index: GzipIndex) -> Optional[str]:
+        """Persist a *finalized* index; returns its key (None if refused)."""
+        if not index.finalized:
+            with self._lock:
+                self.stats.rejected += 1
+            return None
+        key = self.key_for(source)
+        blob = index.to_bytes()
+        if self.root is None:
+            with self._lock:
+                self._mem[key] = blob
+        else:
+            tmp = self._path(key) + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, self._path(key))  # atomic: readers never see partial blobs
+        with self._lock:
+            self.stats.puts += 1
+        return key
+
+    def __contains__(self, source) -> bool:
+        key = self.key_for(source)
+        if self.root is None:
+            with self._lock:
+                return key in self._mem
+        return os.path.exists(self._path(key))
+
+    def keys(self):
+        if self.root is None:
+            with self._lock:
+                return list(self._mem.keys())
+        return [
+            name[: -len(_EXT)]
+            for name in os.listdir(self.root)
+            if name.endswith(_EXT)
+        ]
+
+    def clear(self) -> None:
+        if self.root is None:
+            with self._lock:
+                self._mem.clear()
+            return
+        for name in os.listdir(self.root):
+            if name.endswith(_EXT):
+                os.unlink(os.path.join(self.root, name))
+
+
+def _is_key(s: str) -> bool:
+    return len(s) == 64 and all(c in "0123456789abcdef" for c in s)

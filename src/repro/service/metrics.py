@@ -1,0 +1,115 @@
+"""Fleet telemetry: aggregate per-reader stats into one service snapshot.
+
+Every `ParallelGzipReader` already reports its own cache/fetcher counters
+(`reader.stats()`: access/prefetch `CacheStats` plus `FetcherStats`). A
+service runs dozens of readers — operators need the *fleet* view: total
+speculative work, fleet hit rates, pool occupancy against budget, scheduler
+fairness, per-tenant consumption. `collect()` produces that as one plain
+dict (JSON-serializable, stable keys), using `CacheStats.merge` so cache
+counters aggregate without racing the fetcher threads (each member cache is
+snapshotted atomically; sums are computed from the snapshots).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+from ..core.cache import CacheStats
+from ..core.chunk_fetcher import FetcherStats
+
+#: FetcherStats fields summed across readers — derived from the dataclass so
+#: a new core counter can never be silently dropped from fleet aggregation.
+_FETCHER_COUNTERS = tuple(FetcherStats.__dataclass_fields__)
+
+
+def aggregate_reader_reports(reports: Mapping[str, Mapping[str, Any]]) -> Dict[str, Any]:
+    """Sum many ``reader.stats()`` dicts into fleet totals."""
+    access = CacheStats()
+    prefetch = CacheStats()
+    fetcher = {k: 0 for k in _FETCHER_COUNTERS}
+    for rep in reports.values():
+        access = access.merge(rep.get("access", {}))
+        prefetch = prefetch.merge(rep.get("prefetch", {}))
+        f = rep.get("fetcher", {})
+        for k in _FETCHER_COUNTERS:
+            fetcher[k] += int(f.get(k, 0))
+    return {
+        "readers": len(reports),
+        "access": access.as_dict(),
+        "access_hit_rate": access.hit_rate,
+        "prefetch": prefetch.as_dict(),
+        "prefetch_hit_rate": prefetch.hit_rate,
+        "fetcher": fetcher,
+    }
+
+
+def collect(
+    *,
+    reader_reports: Mapping[str, Mapping[str, Any]],
+    per_file: Optional[Mapping[str, Mapping[str, Any]]] = None,
+    pool=None,
+    executor=None,
+    index_store=None,
+) -> Dict[str, Any]:
+    """One service-wide snapshot. All sections are optional except readers."""
+    out: Dict[str, Any] = {
+        "fleet": aggregate_reader_reports(reader_reports),
+        "per_file": {h: dict(v) for h, v in (per_file or {}).items()},
+        "per_reader": {h: dict(v) for h, v in reader_reports.items()},
+    }
+    if pool is not None:
+        out["cache_pool"] = pool.snapshot()
+    if executor is not None:
+        out["scheduler"] = executor.snapshot()
+    if index_store is not None:
+        out["index_store"] = index_store.stats.as_dict()
+    return out
+
+
+def format_summary(snapshot: Mapping[str, Any]) -> str:
+    """Human-readable one-screen summary of a `collect()` snapshot."""
+    lines = []
+    fleet = snapshot.get("fleet", {})
+    f = fleet.get("fetcher", {})
+    lines.append(
+        "fleet: %d readers, %.1f MiB decompressed, tasks nominal=%d exact=%d indexed=%d"
+        % (
+            fleet.get("readers", 0),
+            f.get("bytes_decompressed", 0) / (1 << 20),
+            f.get("nominal_tasks", 0),
+            f.get("exact_tasks", 0),
+            f.get("indexed_tasks", 0),
+        )
+    )
+    lines.append(
+        "caches: access hit-rate %.2f, prefetch hit-rate %.2f"
+        % (fleet.get("access_hit_rate", 0.0), fleet.get("prefetch_hit_rate", 0.0))
+    )
+    pool = snapshot.get("cache_pool")
+    if pool:
+        for tier, t in sorted(pool.get("tiers", {}).items()):
+            lines.append(
+                "pool[%s]: %.1f/%.1f MiB, %d entries, %d evictions"
+                % (tier, t["held"] / (1 << 20), t["budget"] / (1 << 20),
+                   t["entries"], t["evictions"])
+            )
+        for tenant, t in sorted(pool.get("tenants", {}).items()):
+            lines.append(
+                "tenant[%s]: %.1f MiB held, %d hits, %d misses, evictions -%d/+%d"
+                % (tenant, t["bytes_held"] / (1 << 20), t["hits"], t["misses"],
+                   t["evictions_suffered"], t["evictions_caused"])
+            )
+    sched = snapshot.get("scheduler")
+    if sched:
+        lines.append(
+            "scheduler: %d workers, %d/%d tasks done, %d queued, dispatch=%s"
+            % (sched["max_workers"], sched["done"], sched["submitted"],
+               sched["queued"], sched["dispatch_per_tenant"])
+        )
+    store = snapshot.get("index_store")
+    if store is not None:
+        lines.append(
+            "index store: %d hits, %d misses, %d puts"
+            % (store["hits"], store["misses"], store["puts"])
+        )
+    return "\n".join(lines)

@@ -1,0 +1,200 @@
+"""FairExecutor — one decompression thread-pool budget, many tenants.
+
+`GzipChunkFetcher` assumes it owns a private ThreadPoolExecutor; a service
+hosting dozens of readers cannot hand each one `parallelization` threads
+(worst case: tenants x parallelization threads), nor share one plain FIFO
+pool — a hot tenant streaming prefetches would queue ahead of everyone
+else's first byte.
+
+FairExecutor keeps one fixed worker pool and a run-queue *per tenant*,
+serviced round-robin: each free worker takes the next task from the next
+non-empty tenant queue after the last one served. A tenant with 1000 queued
+prefetch tasks and a tenant with 1 queued read each get a worker on the next
+two dispatches. That is the paper's dynamic work distribution (§4.2) with a
+fairness layer on top.
+
+Readers receive a `TenantExecutor` view: submit-compatible with
+ThreadPoolExecutor (the fetcher calls only ``submit``/``shutdown``), tagging
+every task with its tenant. ``shutdown`` on a view cancels that tenant's
+queued tasks but never touches the shared workers — the server owns those.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from typing import Any, Callable, Deque, Dict, Optional, Tuple
+
+
+class FairExecutor:
+    def __init__(self, max_workers: int, *, thread_name_prefix: str = "archive"):
+        if max_workers < 1:
+            raise ValueError("max_workers must be >= 1")
+        self.max_workers = max_workers
+        self._cond = threading.Condition()
+        # tenant -> queue of (Future, fn, args, kwargs, view); OrderedDict
+        # gives a stable round-robin order with O(1) membership.
+        self._queues: "OrderedDict[str, Deque[Tuple[Future, Callable, tuple, dict, object]]]" = OrderedDict()
+        self._rr_last: Optional[str] = None
+        self._shutdown = False
+        self._tasks_done = 0
+        self._tasks_submitted = 0
+        self._dispatch_per_tenant: Dict[str, int] = {}
+        self._threads = [
+            threading.Thread(
+                target=self._worker, name=f"{thread_name_prefix}-{i}", daemon=True
+            )
+            for i in range(max_workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(
+        self, tenant: str, fn: Callable, *args: Any, _view: object = None, **kwargs: Any
+    ) -> Future:
+        fut: Future = Future()
+        with self._cond:
+            if self._shutdown:
+                raise RuntimeError("cannot submit after shutdown")
+            self._queues.setdefault(tenant, deque()).append((fut, fn, args, kwargs, _view))
+            self._tasks_submitted += 1
+            self._cond.notify()
+        return fut
+
+    def view(self, tenant: str) -> "TenantExecutor":
+        return TenantExecutor(self, tenant)
+
+    # -- worker loop --------------------------------------------------------
+
+    def _next_task_locked(self):
+        """Round-robin pick: first non-empty tenant queue after _rr_last."""
+        if not self._queues:
+            return None
+        tenants = list(self._queues.keys())
+        start = 0
+        if self._rr_last in self._queues:
+            start = tenants.index(self._rr_last) + 1
+        n = len(tenants)
+        for i in range(n):
+            tenant = tenants[(start + i) % n]
+            q = self._queues[tenant]
+            if q:
+                self._rr_last = tenant
+                self._dispatch_per_tenant[tenant] = (
+                    self._dispatch_per_tenant.get(tenant, 0) + 1
+                )
+                return q.popleft()
+            # Drop empty queues so dead tenants don't slow the scan.
+            del self._queues[tenant]
+        return None
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                task = self._next_task_locked()
+                while task is None:
+                    if self._shutdown:
+                        return
+                    self._cond.wait()
+                    task = self._next_task_locked()
+            fut, fn, args, kwargs, _view = task
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                result = fn(*args, **kwargs)
+            except BaseException as exc:  # noqa: BLE001 - mirror Executor semantics
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+            with self._cond:
+                self._tasks_done += 1
+
+    # -- teardown & introspection ------------------------------------------
+
+    def cancel_tenant(self, tenant: str) -> int:
+        """Cancel all *queued* (not yet running) tasks of one tenant."""
+        cancelled = 0
+        with self._cond:
+            q = self._queues.get(tenant)
+            if q:
+                for item in q:
+                    if item[0].cancel():
+                        cancelled += 1
+                q.clear()
+        return cancelled
+
+    def cancel_view(self, view: object) -> int:
+        """Cancel queued tasks submitted through one TenantExecutor view.
+
+        Scoped narrower than cancel_tenant: a tenant may have several
+        readers open; closing one must not cancel the others' work.
+        """
+        cancelled = 0
+        with self._cond:
+            for q in self._queues.values():
+                keep = [item for item in q if item[4] is not view]
+                if len(keep) != len(q):
+                    for item in q:
+                        if item[4] is view and item[0].cancel():
+                            cancelled += 1
+                    q.clear()
+                    q.extend(keep)
+        return cancelled
+
+    def shutdown(self, wait: bool = True, cancel_futures: bool = False) -> None:
+        with self._cond:
+            self._shutdown = True
+            if cancel_futures:
+                for q in self._queues.values():
+                    for item in q:
+                        item[0].cancel()
+                    q.clear()
+            self._cond.notify_all()
+        if wait:
+            for t in self._threads:
+                t.join()
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._cond:
+            return {
+                "max_workers": self.max_workers,
+                "submitted": self._tasks_submitted,
+                "done": self._tasks_done,
+                "queued": sum(len(q) for q in self._queues.values()),
+                "dispatch_per_tenant": dict(self._dispatch_per_tenant),
+            }
+
+    def __enter__(self) -> "FairExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(wait=False, cancel_futures=True)
+
+
+class TenantExecutor:
+    """ThreadPoolExecutor-shaped view binding one tenant id.
+
+    This is what gets injected into `GzipChunkFetcher`: the fetcher keeps
+    calling ``pool.submit(fn, *args)`` exactly as before, unaware that its
+    tasks now compete fairly with every other reader's.
+    """
+
+    def __init__(self, parent: FairExecutor, tenant: str):
+        self._parent = parent
+        self.tenant = tenant
+
+    def submit(self, fn: Callable, *args: Any, **kwargs: Any) -> Future:
+        return self._parent.submit(self.tenant, fn, *args, _view=self, **kwargs)
+
+    def shutdown(self, wait: bool = True, cancel_futures: bool = False) -> None:
+        # The shared pool is server-owned; a reader closing only drains its
+        # own queued work.
+        if cancel_futures:
+            self._parent.cancel_view(self)
+
+    def cancel_pending(self) -> int:
+        """Cancel this view's queued tasks (fetcher shutdown hook)."""
+        return self._parent.cancel_view(self)

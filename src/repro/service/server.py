@@ -1,0 +1,281 @@
+"""ArchiveServer — many gzip files, many clients, one resource budget.
+
+The paper's architecture (cache + prefetcher + thread pool, §3.2) serves one
+reader over one file. This server multiplexes a registry of
+`ParallelGzipReader`s behind a single shared budget:
+
+  * **memory** — every reader's access/prefetch caches are `PooledCache`s
+    drawn from one `CachePool`, so fleet memory is bounded by the pool
+    budget, not by (readers x per-reader maxima);
+  * **CPU** — every reader's fetcher submits into one `FairExecutor`, so a
+    hot tenant's prefetch stream cannot starve another tenant's first read;
+  * **index reuse** — opens consult an `IndexStore`; a warm hit skips the
+    speculative first pass entirely (zero nominal tasks), closes persist
+    finalized indexes back.
+
+API: ``open(source) -> handle``, ``read_range(handle, offset, size)``,
+``stat(handle)``, ``close(handle)``. Readers are opened lazily on first use;
+`read_range` is thread-safe (per-handle position lock; decompression
+parallelism lives in the shared executor underneath).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from ..core.reader import ParallelGzipReader
+from . import metrics as _metrics
+from .cache_pool import CachePool
+from .index_store import IndexStore, file_identity
+from .scheduler import FairExecutor
+
+
+@dataclass
+class ArchiveStat:
+    handle: str
+    tenant: str
+    opened: bool
+    compressed_size: Optional[int]
+    decompressed_size: Optional[int]  # None until the index is finalized
+    index_points: int
+    index_finalized: bool
+    index_was_warm: bool  # True when the open hit the IndexStore
+    reads: int
+    bytes_served: int
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
+class _Entry:
+    def __init__(self, handle: str, source, tenant: str):
+        self.handle = handle
+        self.source = source
+        self.tenant = tenant
+        self.lock = threading.RLock()  # serializes seek+read on the reader
+        self.reader: Optional[ParallelGzipReader] = None
+        self.identity: Optional[str] = None
+        self.index_was_warm = False
+        self.reads = 0
+        self.bytes_served = 0
+        self.closed = False
+
+
+class ArchiveServer:
+    def __init__(
+        self,
+        *,
+        max_workers: int = 8,
+        cache_budget_bytes: int = 64 << 20,
+        access_fraction: float = 0.25,
+        max_tenant_fraction: float = 0.5,
+        index_store: Optional[IndexStore] = None,
+        chunk_size: int = 1 << 20,
+        reader_parallelization: int = 4,
+        access_cache_entries: int = 4,
+        verify: bool = True,
+    ):
+        self.cache_pool = CachePool(
+            cache_budget_bytes,
+            access_fraction=access_fraction,
+            max_tenant_fraction=max_tenant_fraction,
+        )
+        self.executor = FairExecutor(max_workers)
+        self.index_store = index_store if index_store is not None else IndexStore()
+        self.chunk_size = chunk_size
+        self.reader_parallelization = reader_parallelization
+        self.access_cache_entries = access_cache_entries
+        self.verify = verify
+
+        self._lock = threading.Lock()
+        self._entries: Dict[str, _Entry] = {}
+        self._handle_seq = 0
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # registry
+    # ------------------------------------------------------------------
+
+    def open(self, source, *, tenant: str = "default") -> str:
+        """Register a gzip source; the reader is created lazily on first use.
+
+        ``source`` is anything `ParallelGzipReader` accepts: a path, bytes,
+        or a FileReader.
+        """
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("server is closed")
+            self._handle_seq += 1
+            handle = "f%d" % self._handle_seq
+            self._entries[handle] = _Entry(handle, source, tenant)
+        return handle
+
+    def _entry(self, handle: str) -> _Entry:
+        with self._lock:
+            entry = self._entries.get(handle)
+        if entry is None or entry.closed:
+            raise KeyError("unknown or closed handle %r" % handle)
+        return entry
+
+    def _ensure_reader(self, entry: _Entry) -> ParallelGzipReader:
+        with entry.lock:
+            # Re-check under the entry lock: a concurrent close() may have
+            # won the race after our registry lookup. Without this, a lazy
+            # open here would build a reader (and register pooled caches)
+            # that nothing ever closes.
+            if entry.closed:
+                raise KeyError("unknown or closed handle %r" % entry.handle)
+            if entry.reader is not None:
+                return entry.reader
+            entry.identity = file_identity(entry.source)
+            index = self.index_store.get(entry.identity)
+            entry.index_was_warm = index is not None
+            access_cache, prefetch_cache = self.cache_pool.reader_caches(
+                entry.tenant, access_capacity=self.access_cache_entries
+            )
+            try:
+                entry.reader = ParallelGzipReader(
+                    entry.source,
+                    parallelization=self.reader_parallelization,
+                    chunk_size=self.chunk_size,
+                    index=index,
+                    verify=self.verify,
+                    executor=self.executor.view(entry.tenant),
+                    access_cache=access_cache,
+                    prefetch_cache=prefetch_cache,
+                )
+            except BaseException:
+                # Corrupt/non-gzip source: return the caches to the pool, or
+                # client retries would grow the registry without bound.
+                access_cache.release()
+                prefetch_cache.release()
+                raise
+            return entry.reader
+
+    # ------------------------------------------------------------------
+    # request API
+    # ------------------------------------------------------------------
+
+    def read_range(self, handle: str, offset: int, size: int) -> bytes:
+        """Decompressed bytes [offset, offset+size) — short at EOF."""
+        if offset < 0 or size < 0:
+            raise ValueError("offset and size must be non-negative")
+        entry = self._entry(handle)
+        with entry.lock:
+            reader = self._ensure_reader(entry)
+            reader.seek(offset)
+            data = reader.read(size)
+            entry.reads += 1
+            entry.bytes_served += len(data)
+        return data
+
+    def stat(self, handle: str) -> ArchiveStat:
+        entry = self._entry(handle)
+        with entry.lock:
+            reader = entry.reader
+            index = reader.index if reader is not None else None
+            return ArchiveStat(
+                handle=handle,
+                tenant=entry.tenant,
+                opened=reader is not None,
+                compressed_size=(
+                    index.compressed_size if index is not None else None
+                ),
+                decompressed_size=(
+                    index.decompressed_size if index is not None else None
+                ),
+                index_points=len(index) if index is not None else 0,
+                index_finalized=bool(index.finalized) if index is not None else False,
+                index_was_warm=entry.index_was_warm,
+                reads=entry.reads,
+                bytes_served=entry.bytes_served,
+            )
+
+    def size(self, handle: str) -> int:
+        """Decompressed size (drives the first pass to completion)."""
+        entry = self._entry(handle)
+        with entry.lock:
+            return self._ensure_reader(entry).size()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    def persist_index(self, handle: str) -> Optional[str]:
+        """Store the handle's index if finalized; returns the store key."""
+        entry = self._entry(handle)
+        with entry.lock:
+            if entry.reader is None or not entry.reader.index.finalized:
+                return None
+            return self.index_store.put(entry.identity, entry.reader.index)
+
+    def close(self, handle: str, *, persist_index: bool = True) -> None:
+        entry = self._entry(handle)
+        with entry.lock:
+            if entry.closed:
+                return
+            if entry.reader is not None:
+                if persist_index and entry.reader.index.finalized:
+                    self.index_store.put(entry.identity, entry.reader.index)
+                # Reader close cancels its own queued tasks (view-scoped —
+                # the tenant may have other files open), releases its pooled
+                # caches back to the budget, and leaves the server-owned
+                # executor running.
+                entry.reader.close()
+            entry.closed = True
+        with self._lock:
+            self._entries.pop(handle, None)
+
+    def close_all(self, *, persist_indexes: bool = True) -> None:
+        with self._lock:
+            handles = list(self._entries)
+        for h in handles:
+            try:
+                self.close(h, persist_index=persist_indexes)
+            except KeyError:
+                pass
+
+    def shutdown(self) -> None:
+        self.close_all()
+        with self._lock:
+            self._closed = True
+        self.executor.shutdown(wait=False, cancel_futures=True)
+
+    def __enter__(self) -> "ArchiveServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+
+    def metrics(self) -> Dict[str, Any]:
+        """Fleet-wide snapshot (see service/metrics.py for the layout)."""
+        reports: Dict[str, Dict[str, Any]] = {}
+        per_file: Dict[str, Dict[str, Any]] = {}
+        with self._lock:
+            entries = list(self._entries.values())
+        for entry in entries:
+            with entry.lock:
+                if entry.closed:
+                    continue
+                if entry.reader is not None:
+                    reports[entry.handle] = entry.reader.stats()
+                per_file[entry.handle] = {
+                    "tenant": entry.tenant,
+                    "reads": entry.reads,
+                    "bytes_served": entry.bytes_served,
+                    "index_was_warm": entry.index_was_warm,
+                    "opened": entry.reader is not None,
+                }
+        return _metrics.collect(
+            reader_reports=reports,
+            per_file=per_file,
+            pool=self.cache_pool,
+            executor=self.executor,
+            index_store=self.index_store,
+        )

@@ -1,7 +1,61 @@
 import gzip as _gzip
+import sys
+import types
 
 import numpy as np
 import pytest
+
+# ---------------------------------------------------------------------------
+# Optional hypothesis: property tests require it, but the bare container does
+# not ship it (see requirements-test.txt). Install a minimal stub so the test
+# modules still *collect*; @given-decorated tests are skipped at runtime.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+
+    class _AnyStrategy:
+        """Catch-all stand-in for hypothesis strategy objects."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def _stub_given(*_args, **_kwargs):
+        def decorate(fn):
+            def skipper():
+                pytest.skip("hypothesis is not installed (see requirements-test.txt)")
+
+            # No functools.wraps: pytest follows __wrapped__ for signatures
+            # and would then demand fixtures named after the strategies.
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+
+        return decorate
+
+    def _stub_settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    _stub = types.ModuleType("hypothesis")
+    _stub.given = _stub_given
+    _stub.settings = _stub_settings
+    _stub.assume = lambda *a, **k: True
+    _stub.example = _stub_settings
+    _stub.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None
+    )
+    _strategies = types.ModuleType("hypothesis.strategies")
+    _strategies.__getattr__ = lambda name: _AnyStrategy()
+    _stub.strategies = _strategies
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _strategies
 
 
 @pytest.fixture(scope="session")

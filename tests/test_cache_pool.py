@@ -1,0 +1,229 @@
+"""CachePool / CacheStats.merge / LRUCache.snapshot (service memory budget)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheStats, LRUCache
+from repro.service.cache_pool import ACCESS, PREFETCH, CachePool, default_size_of
+
+
+# ---------------------------------------------------------------------------
+# CacheStats.merge / LRUCache.snapshot (satellite: metrics aggregation)
+# ---------------------------------------------------------------------------
+
+def test_cache_stats_merge_sums_and_does_not_mutate():
+    a = CacheStats(hits=3, misses=1, insertions=2, evictions=0)
+    b = CacheStats(hits=10, misses=4, insertions=7, evictions=5)
+    c = a.merge(b)
+    assert c.as_dict() == {"hits": 13, "misses": 5, "insertions": 9, "evictions": 5}
+    assert a.hits == 3 and b.hits == 10  # operands untouched
+    # dict operands (reader.stats() reports) merge too
+    d = c.merge({"hits": 1, "misses": 1, "insertions": 0, "evictions": 0})
+    assert d.hits == 14 and d.misses == 6
+    assert CacheStats().merge() .as_dict() == CacheStats().as_dict()
+
+
+def test_lru_snapshot_is_consistent_under_concurrent_traffic():
+    cache = LRUCache(64)
+    stop = threading.Event()
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            k = int(rng.integers(0, 128))
+            if rng.random() < 0.5:
+                cache.insert(k, bytes(16))
+            else:
+                cache.get(k)
+
+    threads = [threading.Thread(target=hammer, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(50):
+            snap = cache.snapshot()
+            s = snap["stats"]
+            # A torn read would show impossible combinations; the atomic
+            # snapshot guarantees len <= capacity and non-negative counters.
+            assert 0 <= snap["len"] <= snap["capacity"]
+            assert s.insertions >= s.evictions
+            assert min(s.hits, s.misses, s.insertions, s.evictions) >= 0
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+
+
+# ---------------------------------------------------------------------------
+# CachePool: budget, tiers, tenants
+# ---------------------------------------------------------------------------
+
+def test_pool_enforces_byte_budget_with_global_lru():
+    # max_tenant_fraction=1.0 disables soft isolation: pure global LRU
+    pool = CachePool(1000, access_fraction=0.5, max_tenant_fraction=1.0)
+    c1 = pool.cache(tier=PREFETCH, tenant="a")
+    c2 = pool.cache(tier=PREFETCH, tenant="b")
+    # prefetch tier budget = 500 bytes; each entry 100 bytes
+    for i in range(4):
+        c1.insert(("k", i), bytes(100))
+    for i in range(4):
+        c2.insert(("k", i), bytes(100))
+    held = pool.bytes_held(PREFETCH)
+    assert held <= 500
+    # oldest entries (c1's) were evicted from the pool AND from their cache
+    assert ("k", 0) not in c1 and ("k", 1) not in c1
+    assert ("k", 3) in c2
+    snap = pool.snapshot()
+    assert snap["tiers"][PREFETCH]["evictions"] >= 3
+    assert snap["tenants"]["a"]["evictions_suffered"] >= 3
+
+
+def test_pool_tier_isolation_prefetch_cannot_evict_access():
+    pool = CachePool(1000, access_fraction=0.3)  # access budget 300
+    acc = pool.cache(tier=ACCESS, tenant="t")
+    pre = pool.cache(tier=PREFETCH, tenant="t")
+    acc.insert("hot", bytes(200))
+    for i in range(50):  # massive prefetch churn
+        pre.insert(i, bytes(100))
+    assert acc.get("hot") is not None  # pollution isolation, fleet-wide
+    assert pool.bytes_held(ACCESS) == 200
+    assert pool.bytes_held(PREFETCH) <= 700
+
+
+def test_pool_lru_order_respects_recent_gets():
+    pool = CachePool(400, access_fraction=0.25)  # prefetch budget 300
+    c = pool.cache(tier=PREFETCH, tenant="t")
+    c.insert("a", bytes(100))
+    c.insert("b", bytes(100))
+    c.insert("c", bytes(100))
+    assert c.get("a") is not None  # touch: "a" becomes MRU
+    c.insert("d", bytes(100))  # over budget -> evict LRU = "b"
+    assert "b" not in c
+    assert c.get("a") is not None and c.get("d") is not None
+
+
+def test_pool_soft_tenant_isolation_hog_evicts_itself_first():
+    pool = CachePool(1000, access_fraction=0.2, max_tenant_fraction=0.5)
+    hog = pool.cache(tier=PREFETCH, tenant="hog")
+    small = pool.cache(tier=PREFETCH, tenant="small")
+    small.insert("s", bytes(100))
+    for i in range(20):
+        hog.insert(i, bytes(100))
+    # The hog is over its 50% share: its own LRU entries go first, the small
+    # tenant's single entry survives.
+    assert small.get("s") is not None
+    stats = pool.tenant_stats()
+    assert stats["hog"]["evictions_suffered"] > 0
+    assert stats["small"]["evictions_suffered"] == 0
+
+
+def test_pool_replacement_and_pop_update_accounting():
+    pool = CachePool(10_000)
+    c = pool.cache(tier=PREFETCH, tenant="t")
+    c.insert("k", bytes(1000))
+    assert pool.bytes_held(PREFETCH) == 1000
+    c.insert("k", bytes(200))  # replace: decharge 1000, charge 200
+    assert pool.bytes_held(PREFETCH) == 200
+    assert c.pop("k") is not None
+    assert pool.bytes_held(PREFETCH) == 0
+    c.insert("x", bytes(300))
+    c.clear()
+    assert pool.bytes_held(PREFETCH) == 0
+    assert len(c) == 0
+
+
+def test_pool_entry_capacity_still_applies():
+    """Per-cache entry caps survive pooling (access cache size semantics)."""
+    pool = CachePool(1 << 20)
+    c = pool.cache(tier=ACCESS, tenant="t", capacity=2)
+    c.insert("a", bytes(10))
+    c.insert("b", bytes(10))
+    c.insert("c", bytes(10))
+    assert len(c) == 2 and "a" not in c
+    assert pool.bytes_held(ACCESS) == 20  # evicted entry was decharged
+
+
+def test_pool_rejects_bad_config():
+    with pytest.raises(ValueError):
+        CachePool(0)
+    with pytest.raises(ValueError):
+        CachePool(100, access_fraction=1.5)
+    with pytest.raises(ValueError):
+        CachePool(100).cache(tier="bogus")
+
+
+def test_default_size_of_understands_cached_value_shapes():
+    assert default_size_of(np.zeros(100, np.uint8)) == 100
+    assert default_size_of(b"12345") == 5
+
+    class FakeDecodeResult:
+        data = np.zeros(50, np.uint16)
+
+    assert default_size_of(FakeDecodeResult()) == 100 + 256
+    assert default_size_of(object()) == 1024
+
+
+def test_pool_concurrent_inserts_keep_ledger_consistent():
+    pool = CachePool(50_000, access_fraction=0.5)
+    caches = [pool.cache(tier=PREFETCH, tenant=f"t{i}") for i in range(4)]
+
+    def worker(c, seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(300):
+            k = int(rng.integers(0, 64))
+            if rng.random() < 0.7:
+                c.insert(k, bytes(int(rng.integers(1, 500))))
+            elif rng.random() < 0.5:
+                c.get(k)
+            else:
+                c.pop(k)
+
+    threads = [threading.Thread(target=worker, args=(c, i)) for i, c in enumerate(caches)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # Ledger agrees with reality: held == sum of live entry sizes; within
+    # budget (steady state, no in-flight inserts).
+    snap = pool.snapshot()
+    assert pool.bytes_held(PREFETCH) <= snap["tiers"][PREFETCH]["budget"]
+    total = sum(s["bytes_held"] for s in snap["tenants"].values())
+    assert total == pool.bytes_held()
+    assert total >= 0
+
+
+def test_release_deregisters_and_returns_budget():
+    pool = CachePool(10_000)
+    c1 = pool.cache(tier=PREFETCH, tenant="t")
+    c2 = pool.cache(tier=PREFETCH, tenant="t")
+    c1.insert("a", bytes(1000))
+    c2.insert("b", bytes(500))
+    assert pool.snapshot()["n_caches"] == 2
+    c1.release()
+    assert pool.bytes_held(PREFETCH) == 500
+    assert pool.snapshot()["n_caches"] == 1
+    assert pool.tenant_stats()["t"]["bytes_held"] == 500
+    c1.release()  # idempotent
+
+
+def test_reader_close_releases_pooled_caches(rng):
+    """A closed reader must not pin pool budget or registry entries
+    (long-running services open/close readers constantly)."""
+    import gzip as _gz
+
+    from repro.core import ParallelGzipReader
+
+    pool = CachePool(8 << 20)
+    data = bytes(make_text := b"hello rapidgzip " * 20_000)
+    comp = _gz.compress(data, 6)
+    for _ in range(3):
+        acc, pre = pool.reader_caches("svc")
+        r = ParallelGzipReader(comp, parallelization=2, chunk_size=64 << 10,
+                               access_cache=acc, prefetch_cache=pre)
+        assert r.read() == data
+        assert pool.bytes_held() > 0
+        r.close()
+        assert pool.bytes_held() == 0
+        assert pool.snapshot()["n_caches"] == 0

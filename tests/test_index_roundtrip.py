@@ -1,0 +1,139 @@
+"""GzipIndex export/import across *separate* reader instances.
+
+The roundtrip was previously only exercised implicitly (export -> from_bytes
+in reader tests). These tests pin the serialization contract itself: every
+SeekPoint field — including the FLAG_ZLIB_UNSAFE and
+FLAG_HAS_INTERIOR_MEMBER_END flags the indexed fetcher dispatches on — must
+survive a file roundtrip, and a fresh reader built from the imported file
+must behave identically to the builder.
+"""
+
+import io
+import os
+
+import pytest
+
+from repro.core import GzipIndex, ParallelGzipReader
+from repro.core.index import (
+    FLAG_HAS_INTERIOR_MEMBER_END,
+    FLAG_STORED_BLOCK,
+    FLAG_STREAM_START,
+    FLAG_ZLIB_UNSAFE,
+    SeekPoint,
+)
+from repro.core.synth import multistream_gzip, stored_only_compress
+
+from conftest import gzip_bytes, make_base64, make_text
+
+
+def test_synthetic_index_roundtrip_preserves_every_field(tmp_path):
+    """All flag combinations + windows + finalization metadata."""
+    idx = GzipIndex()
+    flag_sets = [
+        0,
+        FLAG_STREAM_START,
+        FLAG_HAS_INTERIOR_MEMBER_END,
+        FLAG_STORED_BLOCK,
+        FLAG_ZLIB_UNSAFE,
+        FLAG_ZLIB_UNSAFE | FLAG_HAS_INTERIOR_MEMBER_END,
+        FLAG_STREAM_START | FLAG_STORED_BLOCK | FLAG_ZLIB_UNSAFE,
+    ]
+    for i, flags in enumerate(flag_sets):
+        window = bytes(range(256)) * 128 if i % 2 else b""
+        idx.add_point(SeekPoint(i * 1000 + 3, i * 50_000, window, flags))
+    idx.finalize(len(flag_sets) * 50_000, 123_456)
+
+    path = os.path.join(tmp_path, "round.rpgzidx")
+    idx.export_file(path)
+    back = GzipIndex.import_file(path)
+
+    assert back.finalized
+    assert back.decompressed_size == idx.decompressed_size
+    assert back.compressed_size == idx.compressed_size
+    assert len(back) == len(idx)
+    for a, b in zip(idx.points(), back.points()):
+        assert a.compressed_bit == b.compressed_bit
+        assert a.decompressed_byte == b.decompressed_byte
+        assert a.flags == b.flags
+        assert (a.window or b"") == (b.window or b"")
+
+
+def test_multi_member_flags_survive_roundtrip_across_readers(rng, tmp_path):
+    """Real multi-member gzip: FLAG_HAS_INTERIOR_MEMBER_END must survive the
+    file roundtrip, because the second reader's fetcher uses it to refuse
+    zlib delegation across member boundaries."""
+    data = make_text(rng, 600_000)
+    comp = multistream_gzip(data, 6, stream_size=100_000)
+
+    r1 = ParallelGzipReader(comp, parallelization=2, chunk_size=256 << 10)
+    assert r1.read() == data
+    member_flags = [
+        p.flags & FLAG_HAS_INTERIOR_MEMBER_END for p in r1.index.points()
+    ]
+    assert any(member_flags), "multi-member data must set interior-member-end flags"
+    path = os.path.join(tmp_path, "multi.rpgzidx")
+    r1.export_index(path)
+    r1.close()
+
+    imported = GzipIndex.import_file(path)
+    assert [
+        p.flags & FLAG_HAS_INTERIOR_MEMBER_END for p in imported.points()
+    ] == member_flags
+
+    r2 = ParallelGzipReader(comp, parallelization=2, chunk_size=256 << 10, index=path)
+    # Fresh instance, imported index: no first pass, identical bytes.
+    for off in (0, 99_990, 150_000, 599_000):
+        r2.seek(off)
+        assert r2.read(2000) == data[off : off + 2000]
+    st = r2.stats()
+    assert st["fetcher"]["nominal_tasks"] == 0
+    assert st["fetcher"]["exact_tasks"] == 0
+    r2.close()
+
+
+def test_stored_block_zlib_unsafe_flags_survive_roundtrip(rng, tmp_path):
+    """Stored-only deflate with interior split points exercises the
+    FLAG_ZLIB_UNSAFE / FLAG_STORED_BLOCK path; a reader over the imported
+    index must still produce exact bytes (unsafe chunks use the custom
+    decoder, not zlib)."""
+    data = make_base64(rng, 400_000)
+    comp = stored_only_compress(data)
+
+    # Big chunks + small spacing: several stored blocks per chunk, so the
+    # interior split points land on stored-block boundaries.
+    r1 = ParallelGzipReader(comp, parallelization=2, chunk_size=256 << 10,
+                            index_spacing=60_000)
+    assert r1.read() == data
+    flags1 = [p.flags for p in r1.index.points()]
+    assert any(f & FLAG_STORED_BLOCK for f in flags1)
+    buf = io.BytesIO()
+    r1.export_index(buf)
+    r1.close()
+
+    imported = GzipIndex.from_bytes(buf.getvalue())
+    assert [p.flags for p in imported.points()] == flags1
+
+    r2 = ParallelGzipReader(comp, parallelization=3, chunk_size=64 << 10,
+                            index=imported)
+    assert r2.read() == data
+    r2.seek(123_456)
+    assert r2.read(10_000) == data[123_456:133_456]
+    r2.close()
+
+
+def test_unfinalized_index_roundtrip(tmp_path):
+    idx = GzipIndex()
+    idx.add_point(SeekPoint(100, 0, b"", FLAG_STREAM_START))
+    buf = io.BytesIO()
+    idx.export_file(buf)
+    back = GzipIndex.from_bytes(buf.getvalue())
+    assert not back.finalized
+    assert back.decompressed_size is None
+    assert len(back) == 1
+
+
+def test_import_rejects_bad_magic():
+    from repro.core.errors import IndexError_
+
+    with pytest.raises(IndexError_):
+        GzipIndex.from_bytes(b"NOTANIDX" + b"\0" * 32)

@@ -1,0 +1,262 @@
+"""ArchiveServer: multi-file, multi-client random access (service layer).
+
+Acceptance demo from the issue: >= 8 concurrent client threads over >= 3
+distinct gzip files must return byte-exact ranges under a shared cache
+budget smaller than the sum of per-reader defaults, and a warm IndexStore
+reopen must perform zero speculative (nominal) chunk tasks, verified via
+the aggregated fleet stats.
+"""
+
+import gzip as _gzip
+import threading
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.service import (
+    ArchiveServer,
+    FairExecutor,
+    IndexStore,
+    file_identity,
+)
+
+from conftest import gzip_bytes, make_base64, make_random, make_text
+
+N_FILES = 3
+N_CLIENTS = 8
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0xA11CE)
+    datas = [
+        make_text(rng, 500_000),
+        make_base64(rng, 400_000),
+        make_random(rng, 200_000) + make_text(rng, 200_000),
+    ]
+    comps = [gzip_bytes(d, 6) for d in datas]
+    # sanity: zlib ground truth
+    for d, c in zip(datas, comps):
+        assert zlib.decompress(c, 31) == d
+    return datas, comps
+
+
+def _hammer(server, handles, datas, seed, n_requests, errors, req_size=20_000):
+    rng = np.random.default_rng(seed)
+    try:
+        for _ in range(n_requests):
+            i = int(rng.integers(0, len(handles)))
+            off = int(rng.integers(0, len(datas[i])))
+            got = server.read_range(handles[i], off, req_size)
+            want = datas[i][off : off + req_size]
+            if got != want:
+                raise AssertionError(
+                    "mismatch file=%d off=%d got=%d want=%d" % (i, off, len(got), len(want))
+                )
+    except BaseException as exc:  # noqa: BLE001
+        errors.append(exc)
+
+
+def test_concurrent_clients_byte_exact_under_shared_budget(corpus, tmp_path):
+    datas, comps = corpus
+    # Per-reader defaults would be ~2*parallelization chunks each, i.e.
+    # N_FILES * 8 * chunk_bytes >> this budget: 2 MiB for the whole fleet.
+    store = IndexStore(str(tmp_path / "indexes"))
+    server = ArchiveServer(
+        max_workers=4,
+        cache_budget_bytes=2 << 20,
+        index_store=store,
+        chunk_size=128 << 10,
+        reader_parallelization=4,
+    )
+    with server:
+        handles = [
+            server.open(c, tenant="client%d" % (i % 4)) for i, c in enumerate(comps)
+        ]
+        errors: list = []
+        threads = [
+            threading.Thread(
+                target=_hammer, args=(server, handles, datas, 100 + t, 12, errors)
+            )
+            for t in range(N_CLIENTS)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors[0]
+
+        m = server.metrics()
+        assert m["fleet"]["readers"] == N_FILES
+        # The budget was respected while serving all that traffic.
+        pool = m["cache_pool"]
+        assert pool["tiers"]["access"]["held"] <= pool["tiers"]["access"]["budget"]
+        assert pool["tiers"]["prefetch"]["held"] <= pool["tiers"]["prefetch"]["budget"]
+        # Work actually flowed through the shared scheduler.
+        assert m["scheduler"]["done"] > 0
+        assert m["scheduler"]["queued"] == 0
+        assert m["fleet"]["fetcher"]["bytes_decompressed"] > 0
+
+        # Finalize + persist every index for the warm test below.
+        for h in handles:
+            server.size(h)
+        server.close_all()
+    assert len(store.keys()) == N_FILES
+
+
+def test_warm_index_store_reopen_zero_nominal_tasks(corpus, tmp_path):
+    datas, comps = corpus
+    store_dir = str(tmp_path / "indexes")
+
+    # Cold pass: build + persist indexes.
+    with ArchiveServer(
+        max_workers=4, cache_budget_bytes=2 << 20,
+        index_store=IndexStore(store_dir), chunk_size=128 << 10,
+    ) as server:
+        for c in comps:
+            h = server.open(c)
+            server.size(h)
+            server.close(h)
+        cold = server.metrics()
+
+    # Warm pass: fresh server, fresh readers — same traffic, zero
+    # speculative work (the issue's acceptance criterion).
+    with ArchiveServer(
+        max_workers=4, cache_budget_bytes=2 << 20,
+        index_store=IndexStore(store_dir), chunk_size=128 << 10,
+    ) as server:
+        handles = [server.open(c) for c in comps]
+        errors: list = []
+        threads = [
+            threading.Thread(
+                target=_hammer, args=(server, handles, datas, 500 + t, 8, errors)
+            )
+            for t in range(N_CLIENTS)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors[0]
+
+        m = server.metrics()
+        f = m["fleet"]["fetcher"]
+        assert f["nominal_tasks"] == 0, "warm reopen must skip the speculative pass"
+        assert f["exact_tasks"] == 0
+        assert f["indexed_tasks"] > 0
+        assert m["index_store"]["hits"] == N_FILES
+        for h in handles:
+            assert server.stat(h).index_was_warm
+
+
+def test_stat_and_lazy_open(corpus):
+    _, comps = corpus
+    with ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2) as server:
+        h = server.open(comps[0])
+        st = server.stat(h)
+        assert not st.opened and st.reads == 0  # nothing read yet: lazy
+        data = server.read_range(h, 0, 100)
+        assert len(data) == 100
+        st = server.stat(h)
+        assert st.opened and st.reads == 1 and st.bytes_served == 100
+        server.close(h)
+        with pytest.raises(KeyError):
+            server.read_range(h, 0, 1)
+
+
+def test_read_range_validates_arguments(corpus):
+    _, comps = corpus
+    with ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2) as server:
+        h = server.open(comps[0])
+        with pytest.raises(ValueError):
+            server.read_range(h, -1, 10)
+        with pytest.raises(ValueError):
+            server.read_range(h, 0, -10)
+        assert server.read_range(h, 10**12, 100) == b""  # past EOF: empty
+
+
+def test_fair_executor_round_robin_and_teardown():
+    ex = FairExecutor(2)
+    order: list = []
+    lock = threading.Lock()
+
+    def task(tag):
+        with lock:
+            order.append(tag)
+
+    # Queue a burst for a hog tenant, then one task for a small tenant; the
+    # round-robin dispatcher must not serve all 20 hog tasks first.
+    futs = [ex.submit("hog", task, ("hog", i)) for i in range(20)]
+    futs.append(ex.submit("small", task, ("small", 0)))
+    for f in futs:
+        f.result()
+    small_pos = order.index(("small", 0))
+    assert small_pos < 10, f"small tenant starved: position {small_pos}"
+
+    snap = ex.snapshot()
+    assert snap["done"] == 21
+    assert snap["dispatch_per_tenant"]["small"] == 1
+    ex.shutdown(wait=True)
+    with pytest.raises(RuntimeError):
+        ex.submit("hog", task, ("hog", 99))
+
+
+def test_tenant_view_shutdown_cancels_only_own_queue():
+    ex = FairExecutor(1)
+    release = threading.Event()
+    started = threading.Event()
+
+    def blocker():
+        started.set()
+        release.wait(5)
+
+    # Two views of the same tenant: closing one reader must not cancel the
+    # tenant's other readers' queued work.
+    va, va2 = ex.view("a"), ex.view("a")
+    ex.submit("a", blocker)
+    started.wait(5)
+    fa = va.submit(lambda: "a2")
+    fa2 = va2.submit(lambda: "a3")
+    fb = ex.submit("b", lambda: "b1")
+    va.shutdown(wait=False, cancel_futures=True)
+    release.set()
+    assert fb.result(5) == "b1"
+    assert fa.cancelled()
+    assert fa2.result(5) == "a3"
+    ex.shutdown(wait=True)
+
+
+def test_file_identity_distinguishes_sources(tmp_path):
+    k1 = file_identity(b"x" * 100_000)
+    k2 = file_identity(b"x" * 100_000)
+    k3 = file_identity(b"y" * 100_000)
+    assert k1 == k2 != k3
+    p = tmp_path / "a.gz"
+    p.write_bytes(_gzip.compress(b"hello"))
+    kp = file_identity(str(p))
+    assert kp == file_identity(str(p))
+    assert kp != k1
+
+
+def test_corrupt_source_does_not_leak_pool_registrations():
+    with ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2) as server:
+        h = server.open(b"this is not gzip data at all")
+        for _ in range(5):  # client retries must not grow the pool registry
+            with pytest.raises(Exception):
+                server.read_range(h, 0, 100)
+        snap = server.cache_pool.snapshot()
+        assert snap["n_caches"] == 0
+        assert server.cache_pool.bytes_held() == 0
+
+
+def test_close_then_read_raises_cleanly(corpus):
+    _, comps = corpus
+    with ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2) as server:
+        h = server.open(comps[0])
+        server.read_range(h, 0, 10)
+        server.close(h)
+        with pytest.raises(KeyError):
+            server.read_range(h, 0, 10)
+        # closed reader released its caches back to the pool
+        assert server.cache_pool.snapshot()["n_caches"] == 0
