@@ -66,12 +66,15 @@ class LRUCache:
 
     # -- core mutations (hold the lock; report what changed) ---------------
 
-    def _get_locked(self, key: Hashable) -> Tuple[bool, Optional[Any]]:
+    def _get_locked(
+        self, key: Hashable, record_miss: bool = True
+    ) -> Tuple[bool, Optional[Any]]:
         if key in self._data:
             self._data.move_to_end(key)
             self.stats.hits += 1
             return True, self._data[key]
-        self.stats.misses += 1
+        if record_miss:
+            self.stats.misses += 1
         return False, None
 
     def _insert_locked(
@@ -97,8 +100,18 @@ class LRUCache:
     # -- public interface ---------------------------------------------------
 
     def get(self, key: Hashable) -> Optional[Any]:
+        return self.lookup(key)
+
+    def lookup(self, key: Hashable, *, record_miss: bool = True) -> Optional[Any]:
+        """get() that optionally skips miss accounting.
+
+        One *logical* lookup that probes several caches in sequence (access
+        then prefetch, `GzipChunkFetcher._cache_lookup`) must record exactly
+        one hit or one miss fleet-wide; probing the first cache with
+        ``record_miss=False`` lets the later cache own the miss.
+        """
         with self._lock:
-            _, val = self._get_locked(key)
+            _, val = self._get_locked(key, record_miss=record_miss)
             return val
 
     def peek(self, key: Hashable) -> Optional[Any]:
@@ -109,6 +122,17 @@ class LRUCache:
     def insert(self, key: Hashable, value: Any) -> None:
         with self._lock:
             self._insert_locked(key, value)
+
+    def insert_hinted(
+        self, key: Hashable, value: Any, *, recompute_cost: Optional[int] = None
+    ) -> None:
+        """insert() carrying an estimated cost (bytes of work) to recompute
+        the value if evicted. The plain LRU ignores it; pool-backed caches
+        (service/cache_pool.py) use it for cost-aware victim selection —
+        cheap zlib-delegable chunks go before expensive marker-mode ones.
+        """
+        del recompute_cost
+        self.insert(key, value)
 
     def pop(self, key: Hashable) -> Optional[Any]:
         with self._lock:

@@ -41,7 +41,7 @@ from .deflate import (
     WINDOW_SIZE,
 )
 from .errors import BlockNotFoundError, DeflateError, EndOfStream, RapidgzipError
-from .filereader import BytesFileReader, FileReader
+from .filereader import FileReader
 from .index import (
     FLAG_HAS_INTERIOR_MEMBER_END,
     FLAG_STREAM_START,
@@ -170,8 +170,9 @@ class GzipChunkFetcher:
 
     def _buffer(self, start_byte: int, end_byte: int) -> Tuple[bytes, int]:
         """Return (buffer, base_byte). Zero-copy for in-memory sources."""
-        if isinstance(self.reader, BytesFileReader):
-            return self.reader._data, 0
+        whole = self.reader.view()
+        if whole is not None:
+            return whole, 0
         end_byte = min(end_byte, self.file_size)
         return self.reader.pread(start_byte, end_byte - start_byte), start_byte
 
@@ -180,22 +181,78 @@ class GzipChunkFetcher:
     # ------------------------------------------------------------------
 
     def _cache_lookup(self, key):
-        val = self.access_cache.get(key)
+        # One logical lookup, exactly one hit or miss fleet-wide: the access
+        # probe suppresses its miss so a prefetch hit right after is not also
+        # counted as an access miss (that skew deflated the aggregated
+        # hit-rate in service/metrics.py). Feature-detected: a duck-typed
+        # injected cache without lookup() keeps the old double-count
+        # behavior rather than breaking.
+        lookup = getattr(self.access_cache, "lookup", None)
+        if lookup is not None:
+            val = lookup(key, record_miss=False)
+        else:
+            val = self.access_cache.get(key)
         if val is not None:
             return val
-        val = self.prefetch_cache.get(key)
+        val = self.prefetch_cache.get(key)  # owns the hit-or-miss record
         if val is not None:
-            self.access_cache.insert(key, val)  # promote
+            # Promote with the recompute-cost hint intact, or the access
+            # tier would rank an expensive marker-mode chunk as cheaply
+            # evictable as a zlib-delegable one.
+            self._insert_hinted(self.access_cache, key, val,
+                                recompute_cost=self._value_cost(val))
         return val
 
-    def _submit(self, key, fn, *args) -> Future:
+    def _pool_submit(self, fn, *args, cost: Optional[int], priority: bool) -> Future:
+        """Submit to the executor, forwarding scheduling hints when it is
+        hint-aware (the service layer's TenantExecutor); a plain
+        ThreadPoolExecutor gets the vanilla submit."""
+        submit_hinted = getattr(self.pool, "submit_hinted", None)
+        if submit_hinted is not None:
+            return submit_hinted(fn, *args, cost=cost, priority=priority)
+        return self.pool.submit(fn, *args)
+
+    def _boost(self, fut: Future) -> None:
+        """Upgrade an already-queued task to the priority lane (no-op for
+        executors without lanes)."""
+        boost = getattr(self.pool, "boost", None)
+        if boost is not None:
+            boost(fut)
+
+    def _submit(self, key, fn, *args, cost: Optional[int] = None, priority: bool = False) -> Future:
         with self._lock:
             fut = self._in_flight.get(key)
             if fut is not None:
+                if priority:
+                    # An interactive read joined an already-queued batch task
+                    # (typically its own earlier prefetch): upgrade its lane
+                    # or the dedup would quietly drop the priority hint.
+                    self._boost(fut)
                 return fut
-            fut = self.pool.submit(self._run_task, key, fn, *args)
+            fut = self._pool_submit(self._run_task, key, fn, *args,
+                                    cost=cost, priority=priority)
             self._in_flight[key] = fut
             return fut
+
+    def _insert_hinted(self, cache, key, value, recompute_cost: int) -> None:
+        """Cache insert carrying a recompute-cost hint when supported."""
+        insert_hinted = getattr(cache, "insert_hinted", None)
+        if insert_hinted is not None:
+            insert_hinted(key, value, recompute_cost=recompute_cost)
+        else:
+            cache.insert(key, value)
+
+    def _value_cost(self, value) -> int:
+        """Recompute-cost estimate for an arbitrary cached value."""
+        if isinstance(value, DecodeResult):
+            return self._result_cost(value)
+        nbytes = getattr(value, "nbytes", None)
+        if nbytes is not None:
+            return max(1, int(nbytes))
+        try:
+            return max(1, len(value))
+        except TypeError:
+            return 1
 
     def _run_task(self, key, fn, *args):
         try:
@@ -214,16 +271,35 @@ class GzipChunkFetcher:
     def _nominal_stop_bit(self, k: int) -> int:
         return min((k + 1) * self.chunk_size * 8, self.total_bits)
 
+    # Cost model for scheduling hints (estimated bytes of decompression
+    # work): marker-mode two-stage decode costs >2x a zlib delegation over
+    # the same span (paper §1.3) — charge it 2x the chunk size.
+    MARKER_COST_FACTOR = 2
+
+    def _nominal_cost(self) -> int:
+        return self.MARKER_COST_FACTOR * self.chunk_size
+
+    def _result_cost(self, result: DecodeResult) -> int:
+        """Recompute cost of a first-pass chunk result: marker-mode chunks
+        need the full two-stage pipeline again (decode + replacement);
+        window-known chunks only a single custom-decoder pass."""
+        factor = 1 + self.MARKER_COST_FACTOR if result.marker_mode else self.MARKER_COST_FACTOR
+        return factor * max(1, result.size)
+
     def trigger_prefetch(self, k: int) -> None:
         """Dispatch speculative tasks per the prefetch strategy (paper §3.1:
-        access triggers the prefetcher even on a cache hit)."""
+        access triggers the prefetcher even on a cache hit). Prefetches ride
+        the batch lane: they must never delay any tenant's blocking read."""
         for j in self.strategy.on_access(k):
             if j < 0 or j >= self.n_nominal:
                 continue
             with self._lock:
                 if j in self._nominal_done or ("nom", j) in self._in_flight:
                     continue
-            self._submit(("nom", j), self._task_nominal, j)
+            self._submit(
+                ("nom", j), self._task_nominal, j,
+                cost=self._nominal_cost(), priority=False,
+            )
 
     def get_chunk_at(self, bit_offset: int, window: Optional[bytes] = None) -> DecodeResult:
         """Fetch the chunk starting exactly at ``bit_offset`` (first pass).
@@ -247,13 +323,21 @@ class GzipChunkFetcher:
         with self._lock:
             nom_fut = self._in_flight.get(("nom", k))
         if nom_fut is not None:
+            # About to block an interactive read on it: pull it out of the
+            # batch backlog (same inversion _submit's dedup path fixes).
+            self._boost(nom_fut)
             nom_res = nom_fut.result()
             if nom_res is not None and nom_res.start_bit == bit_offset:
                 return nom_res
             with self._lock:
                 self.stats.redispatches += 1
 
-        fut = self._submit(key, self._task_exact, bit_offset, window)
+        # The caller blocks on this task: interactive lane, so it bypasses
+        # this tenant's own queued prefetch backlog. Known window -> single
+        # stage; unknown -> marker mode at 2x cost.
+        cost = self.chunk_size if window is not None else self._nominal_cost()
+        fut = self._submit(key, self._task_exact, bit_offset, window,
+                           cost=cost, priority=True)
         res = fut.result()
         if res is None:
             raise RapidgzipError("exact chunk decode failed at bit %d" % bit_offset)
@@ -323,7 +407,10 @@ class GzipChunkFetcher:
         with self._lock:
             self._nominal_done[k] = result.start_bit if result is not None else None
         if result is not None:
-            self.prefetch_cache.insert(("fp", result.start_bit), result)
+            self._insert_hinted(
+                self.prefetch_cache, ("fp", result.start_bit), result,
+                recompute_cost=self._result_cost(result),
+            )
             with self._lock:
                 if result.contains_markers():
                     self.stats.chunks_with_markers += 1
@@ -351,7 +438,10 @@ class GzipChunkFetcher:
                     continue
                 raise
             res = _offset_result(res, base_bits)
-            self.prefetch_cache.insert(("fp", bit_offset), res)
+            self._insert_hinted(
+                self.prefetch_cache, ("fp", bit_offset), res,
+                recompute_cost=self._result_cost(res),
+            )
             with self._lock:
                 self._nominal_done.setdefault(k, res.start_bit)
                 if res.contains_markers():
@@ -379,7 +469,13 @@ class GzipChunkFetcher:
             result=result,
         )
         if result.marker_mode:
-            fc._bytes_future = self.pool.submit(self._task_replace, result, window)
+            # Replacement sits on the read critical path (the caller's
+            # bytes() blocks on it): interactive lane, cost ~ one linear
+            # pass over the chunk's output.
+            fc._bytes_future = self._pool_submit(
+                self._task_replace, result, window,
+                cost=max(1, result.size), priority=True,
+            )
         else:
             fc._bytes = result.data
         with self._lock:
@@ -395,6 +491,10 @@ class GzipChunkFetcher:
     # indexed mode (second pass / imported index / BGZF)
     # ------------------------------------------------------------------
 
+    def _indexed_cost(self, i: int) -> int:
+        out_size = self.index.chunk_output_size(i)
+        return out_size if out_size else self.chunk_size
+
     def get_indexed(self, i: int) -> np.ndarray:
         """Decompressed bytes of index chunk ``i`` (seek point i .. i+1)."""
         for j in self.strategy.on_access(i):
@@ -404,13 +504,16 @@ class GzipChunkFetcher:
                         continue
                 if ("ix", j) in self.prefetch_cache or ("ix", j) in self.access_cache:
                     continue
-                self._submit(("ix", j), self._task_indexed, j)
+                self._submit(("ix", j), self._task_indexed, j,
+                             cost=self._indexed_cost(j), priority=False)
 
         key = ("ix", i)
         val = self._cache_lookup(key)
         if val is not None:
             return val
-        fut = self._submit(key, self._task_indexed, i)
+        # Blocking fetch: interactive lane (jumps this tenant's prefetches).
+        fut = self._submit(key, self._task_indexed, i,
+                           cost=self._indexed_cost(i), priority=True)
         return fut.result()
 
     def put_indexed(self, i: int, data: np.ndarray) -> None:
@@ -419,7 +522,8 @@ class GzipChunkFetcher:
         Goes to the prefetch cache (2x parallelism entries): the access cache
         may be sized 1 and a chunk can hand over several split slices.
         """
-        self.prefetch_cache.insert(("ix", i), data)
+        self._insert_hinted(self.prefetch_cache, ("ix", i), data,
+                            recompute_cost=int(data.nbytes))
 
     def _task_indexed(self, i: int) -> np.ndarray:
         with self._lock:
@@ -457,7 +561,9 @@ class GzipChunkFetcher:
             data = res.data[:out_size]
             if data.shape[0] < out_size:
                 raise DeflateError("indexed chunk %d produced too few bytes" % i)
-            self.prefetch_cache.insert(("ix", i), data)
+            # Custom-decoder path: ~2x the recompute cost of a delegation.
+            self._insert_hinted(self.prefetch_cache, ("ix", i), data,
+                                recompute_cost=self.MARKER_COST_FACTOR * out_size)
             return data
 
         with self._lock:
@@ -470,7 +576,10 @@ class GzipChunkFetcher:
             max_input_bytes=comp_span + 2,
         )
         data = np.frombuffer(raw, dtype=np.uint8)
-        self.prefetch_cache.insert(("ix", i), data)
+        # zlib-delegable: the cheapest entry class in the pool — recompute
+        # is a single delegation over out_size bytes.
+        self._insert_hinted(self.prefetch_cache, ("ix", i), data,
+                            recompute_cost=out_size)
         return data
 
     # ------------------------------------------------------------------
@@ -494,9 +603,17 @@ class GzipChunkFetcher:
                 release()
 
     def cache_report(self) -> dict:
+        def stats_of(cache) -> dict:
+            # Same duck-typed contract as the lookup/insert hooks: a cache
+            # without the atomic snapshot() still reports via .stats.
+            snapshot = getattr(cache, "snapshot", None)
+            if snapshot is not None:
+                return snapshot()["stats"].as_dict()
+            return cache.stats.as_dict()
+
         return {
-            "access": self.access_cache.snapshot()["stats"].as_dict(),
-            "prefetch": self.prefetch_cache.snapshot()["stats"].as_dict(),
+            "access": stats_of(self.access_cache),
+            "prefetch": stats_of(self.prefetch_cache),
             "fetcher": self.stats.as_dict(),
         }
 

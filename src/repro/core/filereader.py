@@ -27,6 +27,17 @@ class FileReader:
         """Read up to ``size`` bytes at absolute ``offset`` (thread-safe)."""
         raise NotImplementedError
 
+    def view(self) -> Optional[memoryview]:
+        """Zero-copy view of the whole source, or None when unavailable.
+
+        In-memory sources return a read-only ``memoryview`` so the chunk
+        fetcher can scan without copying; file- and network-backed readers
+        return None and are served via ``pread``. Public so callers never
+        need to sniff concrete reader types for the fast path — a remote
+        backend that cannot offer a view simply inherits this default.
+        """
+        return None
+
     def close(self) -> None:  # pragma: no cover - trivial
         pass
 
@@ -50,6 +61,9 @@ class BytesFileReader(FileReader):
         if offset >= len(self._data):
             return b""
         return self._data[offset : offset + size]
+
+    def view(self) -> Optional[memoryview]:
+        return memoryview(self._data)
 
 
 class SharedFileReader(FileReader):

@@ -11,12 +11,22 @@ The pool lifts the paper's two-tier split fleet-wide:
     with separate sub-budgets — prefetch churn from any reader can never
     evict any reader's explicitly-accessed chunks (the paper's pollution
     argument, now across files and tenants);
-  * global LRU within each tier: the victim is the least-recently-used entry
-    across *all* member caches of that tier;
-  * per-tenant accounting (bytes held, insertions, evictions suffered/caused)
-    plus soft isolation: a tenant holding more than ``max_tenant_fraction``
-    of a tier evicts its *own* LRU entries first, so one hot client cannot
-    monopolize the pool.
+  * **cost-aware LRU** within each tier: candidates come from the LRU end,
+    but within a small recency window the victim is the entry with the
+    lowest *recompute cost per byte* — a zlib-delegable indexed chunk
+    (re-decodable >2x faster than two-stage, paper §1.3) goes before a
+    marker-mode first-pass chunk of similar age. Inserters declare the cost
+    via ``insert_hinted``; unhinted entries default to cost == size, which
+    degrades to plain global LRU. Aging bounds the bias: an entry passed
+    over ``EVICTION_WINDOW`` times without a hit is evicted regardless of
+    cost, so cold expensive entries cannot pin the tier;
+  * per-tenant accounting (bytes held, insertions, evictions suffered/caused,
+    cumulative recompute cost of evicted entries) plus soft isolation with
+    **weighted shares**: a tenant holding more than
+    ``max_tenant_fraction * weight(tenant)`` of a tier evicts its *own*
+    entries first, so one hot client cannot monopolize the pool, and
+    operators can grant paying tenants a larger slice
+    (``set_tenant_weight``).
 
 Member caches are `PooledCache` — drop-in `LRUCache` subclasses, so the chunk
 fetcher uses them unchanged via its injectable-cache hooks.
@@ -38,6 +48,11 @@ from ..core.cache import CacheStats, LRUCache
 
 ACCESS = "access"
 PREFETCH = "prefetch"
+
+#: How many LRU-end entries compete per victim selection. Small: recency
+#: stays the primary signal, cost only breaks near-ties — a hot expensive
+#: entry is never outlived by a cold cheap one outside the window.
+EVICTION_WINDOW = 8
 
 
 def default_size_of(value: Any) -> int:
@@ -66,20 +81,32 @@ class TenantStats:
     misses: int = 0
     evictions_suffered: int = 0  # this tenant's entries evicted
     evictions_caused: int = 0  # evictions triggered by this tenant's inserts
+    eviction_cost_suffered: int = 0  # recompute cost of this tenant's victims
+    eviction_cost_caused: int = 0  # recompute cost this tenant's inserts evicted
 
     def as_dict(self) -> Dict[str, int]:
         return {k: int(getattr(self, k)) for k in self.__dataclass_fields__}
 
 
 @dataclass
+class _Entry:
+    cache: Any  # PooledCache
+    size: int
+    cost: int  # estimated bytes-of-work to recompute the value if evicted
+    skips: int = 0  # times passed over for a cheaper, younger victim
+
+
+@dataclass
 class _Tier:
     budget: int
     held: int = 0
-    # (cache_id, key) -> (PooledCache, nbytes); order = LRU .. MRU
-    entries: "OrderedDict[Tuple[int, Hashable], Tuple[Any, int]]" = field(
+    # (cache_id, key) -> _Entry; order = LRU .. MRU
+    entries: "OrderedDict[Tuple[int, Hashable], _Entry]" = field(
         default_factory=OrderedDict
     )
     evictions: int = 0
+    evicted_bytes: int = 0
+    evicted_cost: int = 0
 
 
 class PooledCache(LRUCache):
@@ -101,15 +128,23 @@ class PooledCache(LRUCache):
     # pool after releasing it (see lock-ordering note in the module doc).
 
     def get(self, key: Hashable) -> Optional[Any]:
+        return self.lookup(key)
+
+    def lookup(self, key: Hashable, *, record_miss: bool = True) -> Optional[Any]:
         with self._lock:
-            hit, val = self._get_locked(key)
-        self._pool._on_lookup(self, key, hit)
+            hit, val = self._get_locked(key, record_miss=record_miss)
+        self._pool._on_lookup(self, key, hit, record_miss=record_miss)
         return val
 
     def insert(self, key: Hashable, value: Any) -> None:
+        self.insert_hinted(key, value)
+
+    def insert_hinted(
+        self, key: Hashable, value: Any, *, recompute_cost: Optional[int] = None
+    ) -> None:
         with self._lock:
             _, evicted = self._insert_locked(key, value)
-        self._pool._on_insert(self, key, value, evicted)
+        self._pool._on_insert(self, key, value, evicted, recompute_cost=recompute_cost)
 
     def pop(self, key: Hashable) -> Optional[Any]:
         with self._lock:
@@ -163,8 +198,17 @@ class CachePool:
             PREFETCH: _Tier(max(1, budget_bytes - int(budget_bytes * access_fraction))),
         }
         self._tenants: Dict[str, TenantStats] = {}
+        self._tenant_weights: Dict[str, float] = {}
         self._cache_id_seq = 0
         self._caches: List[PooledCache] = []
+
+    def set_tenant_weight(self, tenant: str, weight: float) -> None:
+        """Scale ``tenant``'s soft-isolation share: its per-tier cap becomes
+        ``budget * max_tenant_fraction * weight`` (default weight 1.0)."""
+        if weight <= 0:
+            raise ValueError("weight must be > 0")
+        with self._lock:
+            self._tenant_weights[tenant] = float(weight)
 
     # -- construction -------------------------------------------------------
 
@@ -194,7 +238,9 @@ class CachePool:
 
     # -- member-cache callbacks --------------------------------------------
 
-    def _on_lookup(self, cache: PooledCache, key: Hashable, hit: bool) -> None:
+    def _on_lookup(
+        self, cache: PooledCache, key: Hashable, hit: bool, record_miss: bool = True
+    ) -> None:
         with self._lock:
             tier = self._tiers[cache._tier]
             stats = self._tenants.setdefault(cache.tenant, TenantStats())
@@ -202,8 +248,9 @@ class CachePool:
                 stats.hits += 1
                 entry = tier.entries.pop((cache._cache_id, key), None)
                 if entry is not None:
+                    entry.skips = 0  # re-accessed: young again for aging
                     tier.entries[(cache._cache_id, key)] = entry  # move to MRU
-            else:
+            elif record_miss:
                 stats.misses += 1
 
     def _on_insert(
@@ -212,8 +259,12 @@ class CachePool:
         key: Hashable,
         value: Any,
         evicted: List[Tuple[Hashable, Any]],
+        recompute_cost: Optional[int] = None,
     ) -> None:
         size = self._size_of(value)
+        # Unhinted entries cost exactly their size: uniform cost density, so
+        # victim selection degrades to plain global LRU.
+        cost = size if recompute_cost is None else max(0, int(recompute_cost))
         victims: List[Tuple[PooledCache, Hashable]] = []
         with self._lock:
             tier = self._tiers[cache._tier]
@@ -226,7 +277,7 @@ class CachePool:
             # overwrite without decharge would leak bytes into tier.held
             # permanently.
             self._forget_locked(tier, cache, key)
-            tier.entries[(cache._cache_id, key)] = (cache, size)
+            tier.entries[(cache._cache_id, key)] = _Entry(cache, size, cost)
             tier.held += size
             stats.bytes_held += size
             stats.insertions += 1
@@ -234,30 +285,64 @@ class CachePool:
         for victim_cache, victim_key in victims:
             victim_cache._evict_for_pool(victim_key)
 
+    def _tenant_cap_locked(self, tier: _Tier, tenant: str) -> int:
+        weight = self._tenant_weights.get(tenant, 1.0)
+        return int(tier.budget * self.max_tenant_fraction * weight)
+
     def _select_victims_locked(
         self, tier: _Tier, cache: PooledCache, new_key: Hashable, inserter: TenantStats
     ) -> List[Tuple[PooledCache, Hashable]]:
         victims: List[Tuple[PooledCache, Hashable]] = []
 
         def take(pred) -> bool:
-            for (cid, k), (c, sz) in tier.entries.items():
+            # Cost-aware LRU: among the first EVICTION_WINDOW matching
+            # entries from the LRU end, evict the one cheapest to recompute
+            # per byte. Ties (and unhinted entries, cost == size) fall back
+            # to strict LRU order. Aging keeps expensive entries mortal: an
+            # entry passed over EVICTION_WINDOW times — a full window of
+            # younger victims died around it without it being re-accessed —
+            # is evicted regardless of cost (a lookup resets the counter).
+            best_key = None
+            best_density = None
+            scanned = []
+            for (cid, k), e in tier.entries.items():
                 if (cid, k) == (cache._cache_id, new_key):
                     continue  # never evict the entry being inserted
-                if pred(c):
-                    del tier.entries[(cid, k)]
-                    tier.held -= sz
-                    owner = self._tenants.setdefault(c.tenant, TenantStats())
-                    owner.bytes_held -= sz
-                    owner.evictions_suffered += 1
-                    inserter.evictions_caused += 1
-                    tier.evictions += 1
-                    victims.append((c, k))
-                    return True
-            return False
+                if not pred(e.cache):
+                    continue
+                if e.skips >= EVICTION_WINDOW:
+                    best_key = (cid, k)
+                    break
+                density = e.cost / max(1, e.size)
+                if best_density is None or density < best_density:
+                    best_key = (cid, k)
+                    best_density = density
+                scanned.append(((cid, k), e))
+                if len(scanned) >= EVICTION_WINDOW:
+                    break
+            if best_key is None:
+                return False
+            for key_e, e in scanned:  # only entries older than the victim age
+                if key_e == best_key:
+                    break
+                e.skips += 1
+            e = tier.entries.pop(best_key)
+            tier.held -= e.size
+            tier.evictions += 1
+            tier.evicted_bytes += e.size
+            tier.evicted_cost += e.cost
+            owner = self._tenants.setdefault(e.cache.tenant, TenantStats())
+            owner.bytes_held -= e.size
+            owner.evictions_suffered += 1
+            owner.eviction_cost_suffered += e.cost
+            inserter.evictions_caused += 1
+            inserter.eviction_cost_caused += e.cost
+            victims.append((e.cache, best_key[1]))
+            return True
 
-        # Soft isolation: a tenant over its fair share sheds its own LRU
-        # entries before anyone else's.
-        tenant_cap = int(tier.budget * self.max_tenant_fraction)
+        # Soft isolation: a tenant over its (weighted) fair share sheds its
+        # own entries before anyone else's.
+        tenant_cap = self._tenant_cap_locked(tier, cache.tenant)
         while inserter.bytes_held > tenant_cap and tier.held > tier.budget:
             if not take(lambda c: c.tenant == cache.tenant):
                 break
@@ -287,10 +372,9 @@ class CachePool:
     def _forget_locked(self, tier: _Tier, cache: PooledCache, key: Hashable) -> None:
         entry = tier.entries.pop((cache._cache_id, key), None)
         if entry is not None:
-            _, size = entry
-            tier.held -= size
+            tier.held -= entry.size
             owner = self._tenants.setdefault(cache.tenant, TenantStats())
-            owner.bytes_held -= size
+            owner.bytes_held -= entry.size
 
     # -- introspection ------------------------------------------------------
 
@@ -314,16 +398,20 @@ class CachePool:
                     "held": t.held,
                     "entries": len(t.entries),
                     "evictions": t.evictions,
+                    "evicted_bytes": t.evicted_bytes,
+                    "evicted_cost": t.evicted_cost,
                 }
                 for name, t in self._tiers.items()
             }
             tenants = {name: s.as_dict() for name, s in self._tenants.items()}
+            weights = dict(self._tenant_weights)
             caches = list(self._caches)
         merged = CacheStats().merge(*(c.snapshot()["stats"] for c in caches))
         return {
             "budget_bytes": self.budget_bytes,
             "tiers": tiers,
             "tenants": tenants,
+            "tenant_weights": weights,
             "merged_cache_stats": merged.as_dict(),
             "n_caches": len(caches),
         }

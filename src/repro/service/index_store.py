@@ -129,7 +129,11 @@ class IndexStore:
             with self._lock:
                 self._mem[key] = blob
         else:
-            tmp = self._path(key) + ".tmp"
+            # Unique tmp per writer: two threads closing handles on the same
+            # archive race put() for the same key, and a shared '<key>.tmp'
+            # would interleave their writes before the rename, installing a
+            # torn blob despite the atomic replace.
+            tmp = "%s.%d.%x.tmp" % (self._path(key), os.getpid(), threading.get_ident())
             with open(tmp, "wb") as f:
                 f.write(blob)
             os.replace(tmp, self._path(key))  # atomic: readers never see partial blobs

@@ -33,12 +33,20 @@ def aggregate_reader_reports(reports: Mapping[str, Mapping[str, Any]]) -> Dict[s
         f = rep.get("fetcher", {})
         for k in _FETCHER_COUNTERS:
             fetcher[k] += int(f.get(k, 0))
+    # The fetcher's combined-stats lookup records exactly one hit or miss
+    # per *logical* lookup across the two tiers (access misses are
+    # suppressed when the prefetch tier still gets probed), so the
+    # meaningful fleet number is the combined rate; per-tier dicts keep the
+    # raw counters.
+    combined = access.merge(prefetch)
     return {
         "readers": len(reports),
         "access": access.as_dict(),
         "access_hit_rate": access.hit_rate,
         "prefetch": prefetch.as_dict(),
         "prefetch_hit_rate": prefetch.hit_rate,
+        "hit_rate": combined.hit_rate,
+        "lookups": combined.hits + combined.misses,
         "fetcher": fetcher,
     }
 
@@ -82,30 +90,49 @@ def format_summary(snapshot: Mapping[str, Any]) -> str:
         )
     )
     lines.append(
-        "caches: access hit-rate %.2f, prefetch hit-rate %.2f"
-        % (fleet.get("access_hit_rate", 0.0), fleet.get("prefetch_hit_rate", 0.0))
+        "caches: hit-rate %.2f over %d logical lookups"
+        " (access hits %d, prefetch hit-rate %.2f)"
+        % (fleet.get("hit_rate", 0.0), fleet.get("lookups", 0),
+           fleet.get("access", {}).get("hits", 0),
+           fleet.get("prefetch_hit_rate", 0.0))
     )
     pool = snapshot.get("cache_pool")
     if pool:
         for tier, t in sorted(pool.get("tiers", {}).items()):
             lines.append(
                 "pool[%s]: %.1f/%.1f MiB, %d entries, %d evictions"
+                " (%.1f MiB, recompute cost %.1f MiB)"
                 % (tier, t["held"] / (1 << 20), t["budget"] / (1 << 20),
-                   t["entries"], t["evictions"])
+                   t["entries"], t["evictions"],
+                   t.get("evicted_bytes", 0) / (1 << 20),
+                   t.get("evicted_cost", 0) / (1 << 20))
             )
         for tenant, t in sorted(pool.get("tenants", {}).items()):
             lines.append(
-                "tenant[%s]: %.1f MiB held, %d hits, %d misses, evictions -%d/+%d"
+                "tenant[%s]: %.1f MiB held, %d hits, %d misses, evictions"
+                " -%d/+%d (cost -%.1f/+%.1f MiB)"
                 % (tenant, t["bytes_held"] / (1 << 20), t["hits"], t["misses"],
-                   t["evictions_suffered"], t["evictions_caused"])
+                   t["evictions_suffered"], t["evictions_caused"],
+                   t.get("eviction_cost_suffered", 0) / (1 << 20),
+                   t.get("eviction_cost_caused", 0) / (1 << 20))
             )
     sched = snapshot.get("scheduler")
     if sched:
         lines.append(
-            "scheduler: %d workers, %d/%d tasks done, %d queued, dispatch=%s"
-            % (sched["max_workers"], sched["done"], sched["submitted"],
-               sched["queued"], sched["dispatch_per_tenant"])
+            "scheduler[%s]: %d workers, %d/%d tasks done, %d queued,"
+            " %d priority dispatches, dispatch=%s"
+            % (sched.get("fairness", "drr"), sched["max_workers"],
+               sched["done"], sched["submitted"], sched["queued"],
+               sched.get("priority_dispatches", 0), sched["dispatch_per_tenant"])
         )
+        db = sched.get("dispatched_bytes_per_tenant", {})
+        if db:
+            lines.append(
+                "scheduler bytes: "
+                + ", ".join(
+                    "%s=%.1fMiB" % (t, b / (1 << 20)) for t, b in sorted(db.items())
+                )
+            )
     store = snapshot.get("index_store")
     if store is not None:
         lines.append(

@@ -7,16 +7,35 @@ pool — a hot tenant streaming prefetches would queue ahead of everyone
 else's first byte.
 
 FairExecutor keeps one fixed worker pool and a run-queue *per tenant*,
-serviced round-robin: each free worker takes the next task from the next
-non-empty tenant queue after the last one served. A tenant with 1000 queued
-prefetch tasks and a tenant with 1 queued read each get a worker on the next
-two dispatches. That is the paper's dynamic work distribution (§4.2) with a
-fairness layer on top.
+serviced by **deficit round-robin over byte-weighted quanta** (DRR, Shreedhar
+& Varghese): every task carries an estimated byte cost (how much
+decompression work it represents), every tenant queue carries a deficit
+counter replenished in quanta, and a task dispatches only when its tenant
+has banked enough deficit to pay for it. Task-count round-robin is *not*
+fair here — the paper's own measurements (§1.3) put a marker-mode trial
+decode at >2x the work of a zlib-delegated indexed chunk of the same size,
+and chunks themselves differ by orders of magnitude; a tenant submitting
+4 MiB speculative decodes would receive orders of magnitude more CPU than
+one submitting 32 KiB indexed reads while "fairly" alternating with it.
+
+On top of DRR, each tenant has a **priority lane**: interactive tasks
+(`read_range`'s blocking fetch, finalization on the read path) dispatch
+before that tenant's queued batch prefetches. Cross-tenant arbitration is
+unchanged — priority cuts the line only within its own tenant, so a tenant
+cannot buy extra bandwidth by marking everything interactive (its deficit
+still pays full byte cost).
+
+``fairness="task_rr"`` restores the legacy task-count round-robin (costs and
+lanes ignored) so the two disciplines can be A/B-measured — see
+benchmarks/bench_service.py's skewed-tenant scenario.
 
 Readers receive a `TenantExecutor` view: submit-compatible with
 ThreadPoolExecutor (the fetcher calls only ``submit``/``shutdown``), tagging
-every task with its tenant. ``shutdown`` on a view cancels that tenant's
-queued tasks but never touches the shared workers — the server owns those.
+every task with its tenant. Cost/priority hints travel via ``submit_hinted``
+— callers that don't know about hints keep calling ``submit`` and get
+neutral defaults (one quantum, batch lane). ``shutdown`` on a view cancels
+that tenant's queued tasks but never touches the shared workers — the
+server owns those.
 """
 
 from __future__ import annotations
@@ -24,23 +43,90 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict, deque
 from concurrent.futures import Future
+from dataclasses import dataclass
 from typing import Any, Callable, Deque, Dict, Optional, Tuple
+
+#: Default deficit replenishment per round-robin visit. One quantum ~ one
+#: small indexed-chunk task, so light tenants dispatch every visit while a
+#: 4 MiB speculative decode must bank ~16 visits worth of credit.
+DEFAULT_QUANTUM_BYTES = 256 << 10
+
+
+@dataclass
+class _Task:
+    seq: int  # global submission order (task_rr FIFO + stable ties)
+    future: Future
+    fn: Callable
+    args: tuple
+    kwargs: dict
+    view: object
+    cost: int
+    priority: bool
+
+
+class _TenantQueue:
+    __slots__ = ("pri", "batch", "deficit")
+
+    def __init__(self) -> None:
+        self.pri: Deque[_Task] = deque()
+        self.batch: Deque[_Task] = deque()
+        self.deficit: int = 0
+
+    def __len__(self) -> int:
+        return len(self.pri) + len(self.batch)
+
+    def head(self, fairness: str) -> _Task:
+        """Next task: priority lane first under DRR, submission order under
+        the legacy task_rr discipline (which predates lanes)."""
+        if fairness == "task_rr":
+            if self.pri and self.batch:
+                return self.pri[0] if self.pri[0].seq < self.batch[0].seq else self.batch[0]
+        if self.pri:
+            return self.pri[0]
+        return self.batch[0]
+
+    def pop(self, task: _Task) -> None:
+        if self.pri and self.pri[0] is task:
+            self.pri.popleft()
+        else:
+            self.batch.popleft()
+
+    def drain(self) -> list:
+        tasks = list(self.pri) + list(self.batch)
+        self.pri.clear()
+        self.batch.clear()
+        return tasks
 
 
 class FairExecutor:
-    def __init__(self, max_workers: int, *, thread_name_prefix: str = "archive"):
+    def __init__(
+        self,
+        max_workers: int,
+        *,
+        thread_name_prefix: str = "archive",
+        quantum_bytes: int = DEFAULT_QUANTUM_BYTES,
+        fairness: str = "drr",
+    ):
         if max_workers < 1:
             raise ValueError("max_workers must be >= 1")
+        if quantum_bytes < 1:
+            raise ValueError("quantum_bytes must be >= 1")
+        if fairness not in ("drr", "task_rr"):
+            raise ValueError("fairness must be 'drr' or 'task_rr'")
         self.max_workers = max_workers
+        self.quantum_bytes = quantum_bytes
+        self.fairness = fairness
         self._cond = threading.Condition()
-        # tenant -> queue of (Future, fn, args, kwargs, view); OrderedDict
-        # gives a stable round-robin order with O(1) membership.
-        self._queues: "OrderedDict[str, Deque[Tuple[Future, Callable, tuple, dict, object]]]" = OrderedDict()
+        # OrderedDict gives a stable round-robin order with O(1) membership.
+        self._queues: "OrderedDict[str, _TenantQueue]" = OrderedDict()
         self._rr_last: Optional[str] = None
         self._shutdown = False
+        self._seq = 0
         self._tasks_done = 0
         self._tasks_submitted = 0
+        self._priority_dispatches = 0
         self._dispatch_per_tenant: Dict[str, int] = {}
+        self._dispatched_bytes_per_tenant: Dict[str, int] = {}
         self._threads = [
             threading.Thread(
                 target=self._worker, name=f"{thread_name_prefix}-{i}", daemon=True
@@ -53,13 +139,26 @@ class FairExecutor:
     # -- submission ---------------------------------------------------------
 
     def submit(
-        self, tenant: str, fn: Callable, *args: Any, _view: object = None, **kwargs: Any
+        self,
+        tenant: str,
+        fn: Callable,
+        *args: Any,
+        _view: object = None,
+        _cost: Optional[int] = None,
+        _priority: bool = False,
+        **kwargs: Any,
     ) -> Future:
         fut: Future = Future()
+        # A cost-less task is charged one quantum: neutral under DRR (one
+        # dispatch per visit, exactly the legacy task-count behavior).
+        cost = self.quantum_bytes if _cost is None else max(1, int(_cost))
         with self._cond:
             if self._shutdown:
                 raise RuntimeError("cannot submit after shutdown")
-            self._queues.setdefault(tenant, deque()).append((fut, fn, args, kwargs, _view))
+            self._seq += 1
+            task = _Task(self._seq, fut, fn, args, kwargs, _view, cost, _priority)
+            q = self._queues.setdefault(tenant, _TenantQueue())
+            (q.pri if _priority else q.batch).append(task)
             self._tasks_submitted += 1
             self._cond.notify()
         return fut
@@ -67,10 +166,47 @@ class FairExecutor:
     def view(self, tenant: str) -> "TenantExecutor":
         return TenantExecutor(self, tenant)
 
+    def boost(self, fut: Future, tenant: Optional[str] = None) -> bool:
+        """Move a still-queued task into its tenant's priority lane.
+
+        Dedup makes this necessary: when a blocking read joins an already-
+        queued batch prefetch for the same chunk, the caller gets the old
+        future back — without the upgrade it would wait behind the whole
+        batch backlog despite being interactive (priority inversion).
+        ``tenant`` narrows the scan to one queue (a view always boosts its
+        own tenant's work; a fruitless full scan of a deep batch backlog
+        would stall dispatch, since this holds the scheduler lock). The
+        remaining per-tenant scan is linear, bounded in practice by the
+        fetcher's in-flight dedup (distinct chunks, not request volume).
+        Returns True if the task was found queued and promoted.
+        """
+        with self._cond:
+            if tenant is not None:
+                q = self._queues.get(tenant)
+                queues = [q] if q is not None else []
+            else:
+                queues = list(self._queues.values())
+            for q in queues:
+                for i, task in enumerate(q.batch):
+                    if task.future is fut:
+                        del q.batch[i]
+                        task.priority = True
+                        q.pri.append(task)
+                        return True
+        return False
+
     # -- worker loop --------------------------------------------------------
 
     def _next_task_locked(self):
-        """Round-robin pick: first non-empty tenant queue after _rr_last."""
+        """DRR pick over per-tenant queues (legacy task-count RR in task_rr).
+
+        Equivalent to the textbook multi-pass DRR — each pass credits every
+        non-empty queue one quantum until some head task is affordable — but
+        computed in one O(tenants) scan: the winner is the queue needing the
+        fewest replenishment passes for its head (ties broken in round-robin
+        order after ``_rr_last``), and every scanned queue is credited that
+        many passes' worth of quanta.
+        """
         if not self._queues:
             return None
         tenants = list(self._queues.keys())
@@ -78,18 +214,57 @@ class FairExecutor:
         if self._rr_last in self._queues:
             start = tenants.index(self._rr_last) + 1
         n = len(tenants)
+        best: Optional[Tuple[int, str]] = None  # (passes_needed, tenant)
+        nonempty = []
         for i in range(n):
             tenant = tenants[(start + i) % n]
             q = self._queues[tenant]
-            if q:
-                self._rr_last = tenant
-                self._dispatch_per_tenant[tenant] = (
-                    self._dispatch_per_tenant.get(tenant, 0) + 1
-                )
-                return q.popleft()
-            # Drop empty queues so dead tenants don't slow the scan.
-            del self._queues[tenant]
-        return None
+            if not len(q):
+                # Drop empty queues so dead tenants don't slow the scan.
+                del self._queues[tenant]
+                continue
+            nonempty.append(tenant)
+            if self.fairness == "task_rr":
+                best = (0, tenant)
+                break
+            head = q.head(self.fairness)
+            passes = max(0, -(-(head.cost - q.deficit) // self.quantum_bytes))
+            if passes == 0:
+                best = (0, tenant)
+                break  # affordable now, and first in RR order
+            if best is None or passes < best[0]:
+                best = (passes, tenant)
+        if best is None:
+            return None
+        passes, tenant = best
+        if passes:
+            for t in nonempty:
+                self._queues[t].deficit += passes * self.quantum_bytes
+        q = self._queues[tenant]
+        task = q.head(self.fairness)
+        q.pop(task)
+        # A task cancelled while queued never runs: don't debit the tenant's
+        # deficit or book its bytes, or cancelled prefetches would eat real
+        # bandwidth credit (the worker still receives it to close the done
+        # count).
+        cancelled = task.future.cancelled()
+        if self.fairness != "task_rr" and not cancelled:
+            q.deficit = max(0, q.deficit - task.cost)
+        if not len(q):
+            # Classic DRR: an emptied queue forfeits banked credit, so an
+            # idle tenant cannot hoard a burst allowance.
+            q.deficit = 0
+        self._rr_last = tenant
+        if not cancelled:
+            self._dispatch_per_tenant[tenant] = (
+                self._dispatch_per_tenant.get(tenant, 0) + 1
+            )
+            self._dispatched_bytes_per_tenant[tenant] = (
+                self._dispatched_bytes_per_tenant.get(tenant, 0) + task.cost
+            )
+            if task.priority:
+                self._priority_dispatches += 1
+        return task
 
     def _worker(self) -> None:
         while True:
@@ -100,11 +275,15 @@ class FairExecutor:
                         return
                     self._cond.wait()
                     task = self._next_task_locked()
-            fut, fn, args, kwargs, _view = task
+            fut = task.future
             if not fut.set_running_or_notify_cancel():
+                # Cancelled while queued: still a terminal outcome — count it
+                # as done or snapshot()'s submitted/done/queued books drift.
+                with self._cond:
+                    self._tasks_done += 1
                 continue
             try:
-                result = fn(*args, **kwargs)
+                result = task.fn(*task.args, **task.kwargs)
             except BaseException as exc:  # noqa: BLE001 - mirror Executor semantics
                 fut.set_exception(exc)
             else:
@@ -120,10 +299,12 @@ class FairExecutor:
         with self._cond:
             q = self._queues.get(tenant)
             if q:
-                for item in q:
-                    if item[0].cancel():
+                for task in q.drain():
+                    if task.future.cancel():
                         cancelled += 1
-                q.clear()
+                    # Dequeued without running: terminal either way — count
+                    # it done or snapshot()'s books drift.
+                    self._tasks_done += 1
         return cancelled
 
     def cancel_view(self, view: object) -> int:
@@ -135,13 +316,19 @@ class FairExecutor:
         cancelled = 0
         with self._cond:
             for q in self._queues.values():
-                keep = [item for item in q if item[4] is not view]
-                if len(keep) != len(q):
-                    for item in q:
-                        if item[4] is view and item[0].cancel():
-                            cancelled += 1
-                    q.clear()
-                    q.extend(keep)
+                for lane in (q.pri, q.batch):
+                    if not any(task.view is view for task in lane):
+                        continue
+                    keep = []
+                    for task in lane:
+                        if task.view is view:
+                            if task.future.cancel():
+                                cancelled += 1
+                            self._tasks_done += 1  # removed from queue: terminal
+                        else:
+                            keep.append(task)
+                    lane.clear()
+                    lane.extend(keep)
         return cancelled
 
     def shutdown(self, wait: bool = True, cancel_futures: bool = False) -> None:
@@ -149,9 +336,9 @@ class FairExecutor:
             self._shutdown = True
             if cancel_futures:
                 for q in self._queues.values():
-                    for item in q:
-                        item[0].cancel()
-                    q.clear()
+                    for task in q.drain():
+                        task.future.cancel()
+                        self._tasks_done += 1
             self._cond.notify_all()
         if wait:
             for t in self._threads:
@@ -161,10 +348,17 @@ class FairExecutor:
         with self._cond:
             return {
                 "max_workers": self.max_workers,
+                "fairness": self.fairness,
+                "quantum_bytes": self.quantum_bytes,
                 "submitted": self._tasks_submitted,
                 "done": self._tasks_done,
                 "queued": sum(len(q) for q in self._queues.values()),
+                "priority_dispatches": self._priority_dispatches,
                 "dispatch_per_tenant": dict(self._dispatch_per_tenant),
+                "dispatched_bytes_per_tenant": dict(self._dispatched_bytes_per_tenant),
+                "deficit_per_tenant": {
+                    t: q.deficit for t, q in self._queues.items() if len(q)
+                },
             }
 
     def __enter__(self) -> "FairExecutor":
@@ -179,7 +373,10 @@ class TenantExecutor:
 
     This is what gets injected into `GzipChunkFetcher`: the fetcher keeps
     calling ``pool.submit(fn, *args)`` exactly as before, unaware that its
-    tasks now compete fairly with every other reader's.
+    tasks now compete fairly with every other reader's. Hint-aware callers
+    use ``submit_hinted`` to declare byte cost and interactivity; its
+    presence is feature-detected (``getattr``), so the same fetcher code
+    also runs against a plain ThreadPoolExecutor.
     """
 
     def __init__(self, parent: FairExecutor, tenant: str):
@@ -188,6 +385,26 @@ class TenantExecutor:
 
     def submit(self, fn: Callable, *args: Any, **kwargs: Any) -> Future:
         return self._parent.submit(self.tenant, fn, *args, _view=self, **kwargs)
+
+    def submit_hinted(
+        self,
+        fn: Callable,
+        *args: Any,
+        cost: Optional[int] = None,
+        priority: bool = False,
+        **kwargs: Any,
+    ) -> Future:
+        """submit() plus scheduling hints: estimated byte ``cost`` (DRR
+        deficit charge) and ``priority`` (interactive lane, jumps this
+        tenant's batch backlog only)."""
+        return self._parent.submit(
+            self.tenant, fn, *args, _view=self, _cost=cost, _priority=priority, **kwargs
+        )
+
+    def boost(self, fut: Future) -> bool:
+        """Promote a queued task of this tenant to the priority lane (see
+        FairExecutor.boost)."""
+        return self._parent.boost(fut, tenant=self.tenant)
 
     def shutdown(self, wait: bool = True, cancel_futures: bool = False) -> None:
         # The shared pool is server-owned; a reader closing only drains its

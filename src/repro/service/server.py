@@ -7,8 +7,10 @@ reader over one file. This server multiplexes a registry of
   * **memory** — every reader's access/prefetch caches are `PooledCache`s
     drawn from one `CachePool`, so fleet memory is bounded by the pool
     budget, not by (readers x per-reader maxima);
-  * **CPU** — every reader's fetcher submits into one `FairExecutor`, so a
-    hot tenant's prefetch stream cannot starve another tenant's first read;
+  * **CPU** — every reader's fetcher submits into one `FairExecutor`
+    (byte-weighted deficit round-robin + per-tenant priority lanes), so a
+    hot tenant's prefetch stream cannot starve another tenant's first read,
+    measured in bytes of decompression work rather than task counts;
   * **index reuse** — opens consult an `IndexStore`; a warm hit skips the
     speculative first pass entirely (zero nominal tasks), closes persist
     finalized indexes back.
@@ -76,13 +78,25 @@ class ArchiveServer:
         reader_parallelization: int = 4,
         access_cache_entries: int = 4,
         verify: bool = True,
+        fairness: str = "drr",
+        quantum_bytes: Optional[int] = None,
+        tenant_weights: Optional[Dict[str, float]] = None,
     ):
         self.cache_pool = CachePool(
             cache_budget_bytes,
             access_fraction=access_fraction,
             max_tenant_fraction=max_tenant_fraction,
         )
-        self.executor = FairExecutor(max_workers)
+        for tenant, weight in (tenant_weights or {}).items():
+            self.cache_pool.set_tenant_weight(tenant, weight)
+        # Quantum defaults to a quarter chunk: a zlib-delegated indexed task
+        # dispatches nearly every round-robin visit while a marker-mode
+        # speculative decode (2x chunk) banks ~8 visits of deficit first.
+        self.executor = FairExecutor(
+            max_workers,
+            fairness=fairness,
+            quantum_bytes=quantum_bytes if quantum_bytes is not None else max(1, chunk_size // 4),
+        )
         self.index_store = index_store if index_store is not None else IndexStore()
         self.chunk_size = chunk_size
         self.reader_parallelization = reader_parallelization
@@ -238,9 +252,12 @@ class ArchiveServer:
                 pass
 
     def shutdown(self) -> None:
-        self.close_all()
+        # Refuse new opens *before* draining the registry: an open() racing
+        # into the gap would register an entry nothing ever closes, and its
+        # reads would hit the shut-down executor.
         with self._lock:
             self._closed = True
+        self.close_all()
         self.executor.shutdown(wait=False, cancel_futures=True)
 
     def __enter__(self) -> "ArchiveServer":

@@ -145,6 +145,96 @@ def test_pool_entry_capacity_still_applies():
     assert pool.bytes_held(ACCESS) == 20  # evicted entry was decharged
 
 
+def test_cost_aware_eviction_prefers_cheap_to_recompute_victims():
+    """At similar recency, a zlib-delegable ('ix') entry goes before an older
+    marker-mode ('fp') entry that costs far more to recompute."""
+    pool = CachePool(1000, access_fraction=0.5)  # prefetch budget 500
+    c = pool.cache(tier=PREFETCH, tenant="t")
+    # Oldest entry is expensive (marker-mode: 3x recompute), newer one cheap.
+    c.insert_hinted(("fp", 1), bytes(200), recompute_cost=600)
+    c.insert_hinted(("ix", 1), bytes(200), recompute_cost=200)
+    c.insert_hinted(("ix", 2), bytes(200), recompute_cost=200)  # overflows
+    assert ("fp", 1) in c, "expensive marker-mode entry was evicted first"
+    assert ("ix", 1) not in c, "cheap zlib-delegable entry should be the victim"
+    assert ("ix", 2) in c
+    snap = pool.snapshot()
+    assert snap["tiers"][PREFETCH]["evicted_cost"] == 200
+    assert snap["tiers"][PREFETCH]["evicted_bytes"] == 200
+    t = snap["tenants"]["t"]
+    assert t["eviction_cost_suffered"] == 200
+    assert t["eviction_cost_caused"] == 200
+
+
+def test_cost_aware_eviction_ages_out_cold_expensive_entries():
+    """Cost bias is bounded: an expensive entry passed over for a full
+    window of younger victims without being re-accessed is evicted anyway —
+    cold marker-mode chunks are not immortal."""
+    from repro.service.cache_pool import EVICTION_WINDOW
+
+    pool = CachePool(10_000, access_fraction=0.5)  # prefetch budget 5000
+    c = pool.cache(tier=PREFETCH, tenant="t")
+    c.insert_hinted(("fp", 0), bytes(400), recompute_cost=1600)  # oldest, pricey
+    # 24 cheap entries behind it -> 13 evictions; the fp entry survives the
+    # first EVICTION_WINDOW of them on cost, then ages out.
+    for i in range(24):
+        c.insert_hinted(("ix", i), bytes(400), recompute_cost=400)
+    assert ("fp", 0) not in c
+    assert ("ix", 23) in c
+    assert pool.bytes_held(PREFETCH) <= 5000
+    # ...but a *re-accessed* expensive entry stays: the lookup resets aging.
+    pool2 = CachePool(10_000, access_fraction=0.5)
+    c2 = pool2.cache(tier=PREFETCH, tenant="t")
+    c2.insert_hinted(("fp", 0), bytes(400), recompute_cost=1600)
+    for i in range(24):
+        assert c2.get(("fp", 0)) is not None  # hot entry, touched constantly
+        c2.insert_hinted(("ix", i), bytes(400), recompute_cost=400)
+    assert ("fp", 0) in c2
+
+
+def test_unhinted_inserts_degrade_to_plain_lru():
+    pool = CachePool(400, access_fraction=0.25)  # prefetch budget 300
+    c = pool.cache(tier=PREFETCH, tenant="t")
+    c.insert("a", bytes(100))
+    c.insert("b", bytes(100))
+    c.insert("c", bytes(100))
+    c.insert("d", bytes(100))
+    assert "a" not in c and "b" in c and "c" in c and "d" in c
+
+
+def test_weighted_tenant_shares_shrink_and_grow_soft_isolation():
+    # Base share is 50%; the demoted tenant's weight 0.4 caps it at 20%.
+    pool = CachePool(1000, access_fraction=0.2, max_tenant_fraction=0.5)
+    pool.set_tenant_weight("demoted", 0.4)
+    demoted = pool.cache(tier=PREFETCH, tenant="demoted")
+    small = pool.cache(tier=PREFETCH, tenant="small")
+    small.insert("s", bytes(100))
+    for i in range(20):
+        demoted.insert(i, bytes(100))
+    # Over budget with the demoted tenant over its weighted cap: it sheds its
+    # own entries, the small tenant's entry survives.
+    assert small.get("s") is not None
+    stats = pool.tenant_stats()
+    assert stats["demoted"]["evictions_suffered"] > 0
+    assert stats["small"]["evictions_suffered"] == 0
+    snap = pool.snapshot()
+    assert snap["tenant_weights"] == {"demoted": 0.4}
+    with pytest.raises(ValueError):
+        pool.set_tenant_weight("x", 0)
+
+
+def test_pooled_cache_lookup_respects_record_miss_flag():
+    pool = CachePool(10_000)
+    c = pool.cache(tier=ACCESS, tenant="t")
+    assert c.lookup("nope", record_miss=False) is None
+    assert pool.tenant_stats()["t"]["misses"] == 0
+    assert c.snapshot()["stats"].misses == 0
+    assert c.lookup("nope") is None
+    assert pool.tenant_stats()["t"]["misses"] == 1
+    c.insert("k", b"v")
+    assert c.lookup("k", record_miss=False) == b"v"
+    assert pool.tenant_stats()["t"]["hits"] == 1
+
+
 def test_pool_rejects_bad_config():
     with pytest.raises(ValueError):
         CachePool(0)

@@ -137,3 +137,43 @@ def test_import_rejects_bad_magic():
 
     with pytest.raises(IndexError_):
         GzipIndex.from_bytes(b"NOTANIDX" + b"\0" * 32)
+
+
+def test_index_store_concurrent_same_key_puts_never_tear(rng, tmp_path):
+    """Racing put() calls for the same identity (two handles on one archive
+    closed concurrently) must each write their own tmp file — a shared tmp
+    path could interleave writes and os.replace a torn blob into the store."""
+    import threading
+
+    from conftest import gzip_bytes, make_text
+    from repro.service import IndexStore
+
+    data = make_text(rng, 300_000)
+    comp = gzip_bytes(data, 6)
+    with ParallelGzipReader(comp, parallelization=2, chunk_size=64 << 10) as r:
+        r.read()
+        index = r.index
+
+    store = IndexStore(str(tmp_path / "idx"))
+    barrier = threading.Barrier(6)
+    errors = []
+
+    def put():
+        try:
+            barrier.wait(5)
+            for _ in range(10):
+                assert store.put(comp, index) is not None
+        except BaseException as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=put) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    got = store.get(comp)  # a torn blob would fail to parse here
+    assert got is not None and len(got) == len(index)
+    # no stray tmp files left behind
+    leftovers = [f for f in os.listdir(tmp_path / "idx") if f.endswith(".tmp")]
+    assert leftovers == []

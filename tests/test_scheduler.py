@@ -1,0 +1,328 @@
+"""FairExecutor: byte-weighted DRR, priority lanes, cancel accounting.
+
+The scheduler is task-count fair no more: tasks declare byte costs, tenant
+queues bank deficit in quanta, interactive tasks jump their own tenant's
+batch backlog. These tests pin the arbitration semantics the service layer
+relies on (see src/repro/service/scheduler.py).
+"""
+
+import threading
+import time
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.service import FairExecutor
+
+Q = 1000  # quantum for these tests: small ints keep the math readable
+
+
+def _gated_executor(tenant="light", **kwargs):
+    """FairExecutor(1) whose single worker is parked on a gate task, so
+    everything submitted afterwards queues up and dispatches in one
+    deterministic burst once the gate opens."""
+    ex = FairExecutor(1, quantum_bytes=Q, **kwargs)
+    gate = threading.Event()
+    started = threading.Event()
+
+    def blocker():
+        started.set()
+        gate.wait(10)
+
+    ex.submit(tenant, blocker)
+    assert started.wait(5)
+    return ex, gate
+
+
+def test_drr_byte_skew_heavy_tenant_bounded_by_share():
+    """100:1 byte skew: a heavy tenant's dispatched bytes can never lead the
+    light tenant's by more than one task plus one quantum while both queues
+    are non-empty."""
+    ex, gate = _gated_executor()
+    order = []
+    lock = threading.Lock()
+
+    def run(tenant, cost):
+        with lock:
+            order.append((tenant, cost))
+
+    heavy_cost = 100 * Q
+    futs = []
+    # Heavy queue first: under task-count RR it would get every other slot.
+    for _ in range(5):
+        futs.append(ex.submit("heavy", run, "heavy", heavy_cost, _cost=heavy_cost))
+    for _ in range(600):
+        futs.append(ex.submit("light", run, "light", Q, _cost=Q))
+    gate.set()
+    for f in futs:
+        f.result(30)
+
+    # Prefix invariant at every heavy dispatch: by the time a heavy task is
+    # granted 100Q of work, the light tenant must have received within one
+    # task+quantum as much.
+    heavy_bytes = light_bytes = 0
+    heavy_seen = 0
+    for tenant, cost in order:
+        if tenant == "heavy":
+            heavy_bytes += cost
+            heavy_seen += 1
+            if heavy_seen <= 5 and light_bytes + heavy_cost + Q < heavy_bytes:
+                raise AssertionError(
+                    "heavy tenant over its byte share: heavy=%d light=%d"
+                    % (heavy_bytes, light_bytes)
+                )
+        else:
+            light_bytes += cost
+    # And the first heavy dispatch had to bank ~100 quanta of deficit first.
+    first_heavy = next(i for i, (t, _) in enumerate(order) if t == "heavy")
+    assert first_heavy >= 50, f"heavy dispatched too early: position {first_heavy}"
+
+    snap = ex.snapshot()
+    assert snap["dispatched_bytes_per_tenant"]["heavy"] == 5 * heavy_cost
+    assert snap["dispatched_bytes_per_tenant"]["light"] >= 600 * Q
+    ex.shutdown(wait=True)
+
+
+def test_task_rr_mode_restores_legacy_task_count_fairness():
+    """fairness='task_rr' ignores costs: heavy and light alternate."""
+    ex, gate = _gated_executor(fairness="task_rr")
+    order = []
+    lock = threading.Lock()
+
+    def run(tag):
+        with lock:
+            order.append(tag)
+
+    futs = [ex.submit("heavy", run, "h", _cost=100 * Q) for _ in range(10)]
+    futs += [ex.submit("light2", run, "l", _cost=Q) for _ in range(10)]
+    gate.set()
+    for f in futs:
+        f.result(10)
+    # Legacy RR alternates tenants task-by-task regardless of cost.
+    assert order.index("h") <= 2
+    ex.shutdown(wait=True)
+
+
+def test_priority_lane_jumps_own_tenant_batch_backlog():
+    ex, gate = _gated_executor(tenant="t")
+    order = []
+    lock = threading.Lock()
+
+    def run(tag):
+        with lock:
+            order.append(tag)
+
+    view = ex.view("t")
+    view.submit_hinted(run, "batch1", cost=Q, priority=False)
+    view.submit_hinted(run, "batch2", cost=Q, priority=False)
+    view.submit_hinted(run, "interactive", cost=Q, priority=True)
+    gate.set()
+    time.sleep(0)
+    for _ in range(100):
+        with lock:
+            if len(order) == 3:
+                break
+        time.sleep(0.05)
+    assert order == ["interactive", "batch1", "batch2"]
+    ex.shutdown(wait=True)
+
+
+def test_boost_promotes_queued_batch_task_to_priority_lane():
+    """A blocking read that joins an already-queued batch prefetch upgrades
+    it in place (dedup would otherwise drop the priority hint)."""
+    ex, gate = _gated_executor(tenant="t")
+    order = []
+    lock = threading.Lock()
+
+    def run(tag):
+        with lock:
+            order.append(tag)
+
+    view = ex.view("t")
+    b1 = view.submit_hinted(run, "b1", cost=Q, priority=False)
+    shared = view.submit_hinted(run, "shared", cost=Q, priority=False)
+    assert view.boost(shared) is True
+    assert view.boost(shared) is False  # already in the priority lane
+    gate.set()
+    shared.result(5)
+    b1.result(5)
+    assert order[0] == "shared"
+    done = object()
+    fut_done = ex.submit("t", lambda: done)
+    assert fut_done.result(5) is done
+    assert ex.boost(fut_done) is False  # finished tasks cannot be promoted
+    ex.shutdown(wait=True)
+
+
+def test_priority_does_not_buy_cross_tenant_bandwidth():
+    """A tenant cannot starve others by marking everything interactive: the
+    lane only reorders within the tenant; DRR still charges full cost."""
+    ex, gate = _gated_executor()
+    order = []
+    lock = threading.Lock()
+
+    def run(tag):
+        with lock:
+            order.append(tag)
+
+    vh = ex.view("hog")
+    for i in range(5):
+        vh.submit_hinted(run, ("hog", i), cost=100 * Q, priority=True)
+    for i in range(200):
+        ex.submit("light", run, ("light", i), _cost=Q)
+    gate.set()
+    ex_futs_done = threading.Event()
+
+    def wait_done():
+        while True:
+            with lock:
+                if len(order) == 205:
+                    ex_futs_done.set()
+                    return
+            time.sleep(0.02)
+
+    threading.Thread(target=wait_done, daemon=True).start()
+    assert ex_futs_done.wait(30)
+    first_hog = next(i for i, t in enumerate(order) if t[0] == "hog")
+    assert first_hog >= 50, "priority lane leaked across tenants"
+    ex.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# cancel accounting: submitted == done + queued, always
+# ---------------------------------------------------------------------------
+
+def _books(ex):
+    snap = ex.snapshot()
+    return snap["submitted"], snap["done"], snap["queued"]
+
+
+def _drain(ex, timeout=5.0):
+    """Wait until nothing is queued or running."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        snap = ex.snapshot()
+        if snap["submitted"] == snap["done"] + snap["queued"]:
+            return snap
+        time.sleep(0.01)
+    return ex.snapshot()
+
+
+def test_snapshot_books_balance_after_cancel_view():
+    ex, gate = _gated_executor(tenant="t")
+    view = ex.view("t")
+    futs = [view.submit(lambda: None) for _ in range(7)]
+    other = ex.submit("u", lambda: "u-ran")
+    cancelled = view.cancel_pending()
+    assert cancelled == 7
+    gate.set()
+    assert other.result(5) == "u-ran"
+    snap = _drain(ex)
+    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    assert snap["queued"] == 0
+    assert all(f.cancelled() for f in futs)
+    ex.shutdown(wait=True)
+
+
+def test_snapshot_books_balance_after_cancel_tenant():
+    ex, gate = _gated_executor(tenant="t")
+    for _ in range(5):
+        ex.submit("victim", lambda: None)
+    keep = ex.submit("t", lambda: "kept")
+    assert ex.cancel_tenant("victim") == 5
+    gate.set()
+    assert keep.result(5) == "kept"
+    snap = _drain(ex)
+    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    ex.shutdown(wait=True)
+
+
+def test_snapshot_books_balance_after_direct_future_cancel():
+    """A future cancelled by its owner while queued still reaches a worker
+    (set_running_or_notify_cancel -> False) and must be counted done."""
+    ex, gate = _gated_executor(tenant="t")
+    fut = ex.submit("t", lambda: "never")
+    assert fut.cancel()
+    gate.set()
+    snap = _drain(ex)
+    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    assert snap["queued"] == 0
+    ex.shutdown(wait=True)
+
+
+def test_snapshot_books_balance_after_arbitrary_cancel_sequence():
+    ex, gate = _gated_executor(tenant="seed")
+    views = [ex.view("a"), ex.view("a"), ex.view("b")]
+    futs = []
+    for i in range(30):
+        v = views[i % 3]
+        if i % 4 == 0:
+            futs.append(v.submit_hinted(lambda: None, cost=(i + 1) * 100, priority=bool(i % 2)))
+        else:
+            futs.append(v.submit(lambda: None))
+    views[0].cancel_pending()
+    ex.cancel_tenant("b")
+    for f in futs[::5]:
+        f.cancel()
+    gate.set()
+    snap = _drain(ex)
+    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    assert snap["queued"] == 0
+    ex.shutdown(wait=True)
+    # shutdown(cancel_futures) path also keeps the books closed
+    ex2 = FairExecutor(1, quantum_bytes=Q)
+    ev = threading.Event()
+    ex2.submit("x", ev.wait, 5)
+    for _ in range(4):
+        ex2.submit("x", lambda: None)
+    time.sleep(0.05)
+    ex2.shutdown(wait=False, cancel_futures=True)
+    ev.set()
+    snap = _drain(ex2)
+    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+
+
+# ---------------------------------------------------------------------------
+# property: DRR never starves a non-empty queue
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    st.lists(
+        st.tuples(
+            st.sampled_from(["a", "b", "c"]),
+            st.integers(min_value=1, max_value=20 * Q),
+            st.booleans(),
+        ),
+        min_size=1,
+        max_size=80,
+    )
+)
+def test_drr_never_starves_any_queue(tasks):
+    """Whatever the mix of tenants, costs, and lanes, every submitted task
+    eventually dispatches (DRR credits every non-empty queue each pass, so a
+    huge head-of-line task only delays, never blocks)."""
+    ex = FairExecutor(2, quantum_bytes=Q)
+    try:
+        futs = [
+            ex.submit(tenant, lambda: True, _cost=cost, _priority=pri)
+            for tenant, cost, pri in tasks
+        ]
+        for f in futs:
+            assert f.result(20) is True
+        snap = ex.snapshot()
+        assert snap["submitted"] == snap["done"] + snap["queued"]
+        assert snap["queued"] == 0
+    finally:
+        ex.shutdown(wait=False, cancel_futures=True)
+
+
+def test_rejects_bad_config():
+    with pytest.raises(ValueError):
+        FairExecutor(0)
+    with pytest.raises(ValueError):
+        FairExecutor(1, quantum_bytes=0)
+    with pytest.raises(ValueError):
+        FairExecutor(1, fairness="priority-inversion")
