@@ -14,6 +14,10 @@ Emits:
                           priority lanes; value = interactive first-byte p99
                           us, derived includes p50 and the dispatched-bytes
                           split (acceptance: p99_drr < p99_task_rr)
+
+`bench_remote` (its own section in run.py) measures the remote range-GET
+backend against a latency-injected loopback server: cold vs warm index and
+a prefetch-degree sweep — see its docstring.
 """
 
 from __future__ import annotations
@@ -202,6 +206,102 @@ def _skewed_tenants(gen: DataGen, tmpdir: str) -> None:
         (results.get("task_rr", 0) - results.get("drr", 0)) * 1e6,
         f"drr_beats_task_rr={better}",
     )
+
+
+def bench_remote() -> None:
+    """Remote range-GET backend over a latency-injected loopback server.
+
+    What the local benchmarks cannot show: how well the chunk prefetcher
+    hides *network* round trips (paper §3.2's latency-hiding argument
+    transferred from decompression to range-GETs). Sweeps the prefetch
+    degree (reader parallelization) cold (speculative first pass over the
+    wire) and warm (imported index, O(range) zlib-delegated reads), plus a
+    warm random-access probe where only the touched chunks travel.
+
+    Emits:
+      remote_cold_p{P}    sequential full read, no index
+      remote_warm_p{P}    same traffic with an imported seek index
+      remote_warm_seek    32 random 64 KiB reads through the warm index;
+                          derived reports bytes fetched vs archive size
+    """
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from tests._range_server import RangeHTTPServer
+
+    from repro.core import GzipIndex, ParallelGzipReader
+    from repro.core.remote import RemoteFileReader
+
+    gen = DataGen()
+    size = scale(8 << 20, floor=512 << 10)
+    data = gen.base64(size)  # low ratio: many compressed chunks in flight
+    blob = gzip_bytes(data, 6)
+    latency = 0.0005 if common.SMOKE else 0.005  # injected per-request RTT
+    chunk_size = 128 << 10
+    block_size = 128 << 10
+    degrees = (1, 4) if common.SMOKE else (1, 2, 4, 8)
+
+    with RangeHTTPServer(blob, latency=latency) as srv:
+
+        def open_reader(p: int, index=None) -> ParallelGzipReader:
+            return ParallelGzipReader(
+                RemoteFileReader(srv.url, block_size=block_size, cache_blocks=16),
+                parallelization=p,
+                chunk_size=chunk_size,
+                index=index,
+            )
+
+        index_blob = None
+        for p in degrees:
+            t0 = time.perf_counter()
+            r = open_reader(p)
+            got = r.read()
+            dt = time.perf_counter() - t0
+            assert got == data, "remote cold read mismatch"
+            if index_blob is None:
+                index_blob = r.build_full_index().to_bytes()
+            rs = r._reader.stats  # noqa: SLF001 - benchmark introspection
+            r.close()
+            emit(
+                f"remote_cold_p{p}", dt * 1e6,
+                f"{len(data)/dt/1e6:.1f}MB/s requests={rs.requests} "
+                f"fetched={rs.bytes_fetched} retries={rs.retries}",
+            )
+
+        for p in degrees:
+            idx = GzipIndex.from_bytes(index_blob)
+            t0 = time.perf_counter()
+            r = open_reader(p, index=idx)
+            got = r.read()
+            dt = time.perf_counter() - t0
+            assert got == data, "remote warm read mismatch"
+            rs = r._reader.stats  # noqa: SLF001
+            r.close()
+            emit(
+                f"remote_warm_p{p}", dt * 1e6,
+                f"{len(data)/dt/1e6:.1f}MB/s requests={rs.requests} "
+                f"fetched={rs.bytes_fetched}",
+            )
+
+        # Warm random access: the indexed path's O(range) promise — only the
+        # compressed spans of touched chunks cross the wire.
+        rng = np.random.default_rng(7)
+        n_seeks = 8 if common.SMOKE else 32
+        req = 64 << 10
+        r = open_reader(4, index=GzipIndex.from_bytes(index_blob))
+        t0 = time.perf_counter()
+        for _ in range(n_seeks):
+            off = int(rng.integers(0, max(1, len(data) - req)))
+            r.seek(off)
+            assert r.read(req) == data[off : off + req]
+        dt = time.perf_counter() - t0
+        rs = r._reader.stats  # noqa: SLF001
+        r.close()
+        emit(
+            "remote_warm_seek", dt / n_seeks * 1e6,
+            f"fetched={rs.bytes_fetched} of archive={len(blob)} "
+            f"({rs.bytes_fetched/len(blob):.2f}x) requests={rs.requests}",
+        )
 
 
 def main() -> None:

@@ -23,7 +23,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default="",
-        help="comma list: components,decomp,kernels,roofline,service",
+        help="comma list: components,decomp,kernels,roofline,service,remote",
     )
     ap.add_argument(
         "--smoke", action="store_true",
@@ -55,6 +55,12 @@ def main() -> None:
         from . import bench_service
 
         sections.append(("service", bench_service.main))
+    if only is None or "remote" in only:
+        from . import bench_service as _bench_remote_mod
+
+        # Hermetic: latency-injected loopback HTTP server, no external
+        # network — safe under --smoke in CI.
+        sections.append(("remote", _bench_remote_mod.bench_remote))
 
     failures = 0
     t_start = time.perf_counter()

@@ -32,6 +32,8 @@ from .errors import (
     GzipFooterError,
     GzipHeaderError,
     RapidgzipError,
+    RemoteFileChangedError,
+    RemoteIOError,
 )
 from .filereader import (
     BytesFileReader,
@@ -40,6 +42,7 @@ from .filereader import (
     SharedFileReader,
     open_file_reader,
 )
+from .remote import RemoteFileReader, is_remote_url, remote_identity
 from .gzip_format import detect_bgzf, parse_gzip_header, scan_bgzf_members
 from .index import GzipIndex, SeekPoint
 from .markers import propagate_window, replace_markers, replacement_table
@@ -69,6 +72,9 @@ __all__ = [
     "ParallelGzipReader",
     "PythonFileReader",
     "RapidgzipError",
+    "RemoteFileChangedError",
+    "RemoteFileReader",
+    "RemoteIOError",
     "RunningCRC",
     "SeekPoint",
     "SharedFileReader",
@@ -80,7 +86,9 @@ __all__ = [
     "find_dynamic_trial",
     "gzip_decompress_sequential",
     "inflate_raw",
+    "is_remote_url",
     "open_file_reader",
+    "remote_identity",
     "parse_gzip_header",
     "propagate_window",
     "replace_markers",

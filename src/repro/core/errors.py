@@ -31,3 +31,13 @@ class IndexError_(RapidgzipError):
 
 class EndOfStream(RapidgzipError):
     """Ran out of compressed input mid-decode (not necessarily fatal for trials)."""
+
+
+class RemoteIOError(RapidgzipError):
+    """A remote range-GET failed after bounded retries (network/server fault)."""
+
+
+class RemoteFileChangedError(RapidgzipError):
+    """The remote object changed underneath us (ETag/Last-Modified/size
+    mismatch between open-time validators and a later response). Never
+    retried: serving a mix of old and new bytes would corrupt the stream."""

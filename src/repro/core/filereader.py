@@ -17,6 +17,21 @@ import threading
 from typing import Optional, Union
 
 
+def check_pread_args(offset: int, size: int) -> None:
+    """Shared argument contract for every ``pread`` implementation.
+
+    A negative offset must raise rather than fall through to Python slicing
+    (which would silently serve bytes from the *end* of an in-memory buffer)
+    or to ``os.pread``/HTTP ranges (which fail with backend-specific errors).
+    All backends agree: negative offset or size -> ValueError; reads at or
+    past EOF -> b""; reads straddling EOF -> short result.
+    """
+    if offset < 0:
+        raise ValueError("pread offset must be non-negative, got %d" % offset)
+    if size < 0:
+        raise ValueError("pread size must be non-negative, got %d" % size)
+
+
 class FileReader:
     """Stateless positioned-read interface over a byte source."""
 
@@ -24,8 +39,24 @@ class FileReader:
         raise NotImplementedError
 
     def pread(self, offset: int, size: int) -> bytes:
-        """Read up to ``size`` bytes at absolute ``offset`` (thread-safe)."""
+        """Read up to ``size`` bytes at absolute ``offset`` (thread-safe).
+
+        Contract (enforced by ``check_pread_args`` + the backend): negative
+        ``offset``/``size`` raise ValueError; ``offset >= size()`` returns
+        b""; a read straddling EOF returns the short tail; a short read from
+        the underlying source never silently truncates mid-file.
+        """
         raise NotImplementedError
+
+    def identity(self) -> Optional[str]:
+        """Cheap stable identity string for index caching, or None.
+
+        Backends whose content identity is knowable without reading data
+        (e.g. a remote object's URL + ETag + size) return it here so
+        ``service.index_store.file_identity`` can key warm seek-indexes
+        without downloading head/tail bytes.
+        """
+        return None
 
     def view(self) -> Optional[memoryview]:
         """Zero-copy view of the whole source, or None when unavailable.
@@ -58,6 +89,7 @@ class BytesFileReader(FileReader):
         return len(self._data)
 
     def pread(self, offset: int, size: int) -> bytes:
+        check_pread_args(offset, size)
         if offset >= len(self._data):
             return b""
         return self._data[offset : offset + size]
@@ -83,7 +115,8 @@ class SharedFileReader(FileReader):
         return self._size
 
     def pread(self, offset: int, size: int) -> bytes:
-        if offset >= self._size or size <= 0:
+        check_pread_args(offset, size)
+        if offset >= self._size or size == 0:
             return b""
         out = []
         remaining = min(size, self._size - offset)
@@ -111,10 +144,12 @@ class PythonFileReader(FileReader):
     gzip-in-gzip access, paper §3).
     """
 
-    def __init__(self, fileobj):
+    def __init__(self, fileobj, *, close_fileobj: bool = False):
         if not (hasattr(fileobj, "read") and hasattr(fileobj, "seek")):
             raise TypeError("fileobj must support read() and seek()")
         self._f = fileobj
+        self._close_fileobj = close_fileobj
+        self._closed = False
         self._lock = threading.Lock()
         with self._lock:
             pos = self._f.tell()
@@ -126,9 +161,27 @@ class PythonFileReader(FileReader):
         return self._size
 
     def pread(self, offset: int, size: int) -> bytes:
+        check_pread_args(offset, size)
         with self._lock:
             self._f.seek(offset)
-            return self._f.read(size)
+            # read(n) may legally return fewer than n bytes before EOF
+            # (sockets, pipes, BufferedReader subclasses); loop so a short
+            # read never silently truncates a chunk mid-file — a truncated
+            # buffer poisons trial decompression downstream.
+            out = []
+            remaining = size
+            while remaining > 0:
+                chunk = self._f.read(remaining)
+                if not chunk:
+                    break
+                out.append(chunk)
+                remaining -= len(chunk)
+            return b"".join(out)
+
+    def close(self) -> None:
+        if self._close_fileobj and not self._closed:
+            self._f.close()
+        self._closed = True
 
 
 def open_file_reader(
@@ -139,6 +192,10 @@ def open_file_reader(
         return source
     if isinstance(source, (bytes, bytearray, memoryview)):
         return BytesFileReader(source)
+    if isinstance(source, str) and source.startswith(("http://", "https://")):
+        from .remote import RemoteFileReader  # local import: avoids cycle
+
+        return RemoteFileReader(source)
     if isinstance(source, (str, os.PathLike)):
         return SharedFileReader(source)
     return PythonFileReader(source)

@@ -40,7 +40,7 @@ from .deflate import (
     WINDOW_SIZE,
     canonical_stored_offset,
 )
-from .errors import GzipFooterError, RapidgzipError
+from .errors import EndOfStream, GzipFooterError, GzipHeaderError, RapidgzipError
 from .filereader import open_file_reader
 from .gzip_format import parse_gzip_header, scan_bgzf_members, detect_bgzf
 from .index import (
@@ -121,13 +121,36 @@ class ParallelGzipReader(io.RawIOBase):
     # setup
     # ------------------------------------------------------------------
 
+    #: Largest leading gzip header we accept: FEXTRA (2+65535) + FNAME and
+    #: FCOMMENT (64 KiB each, the parser's own cap) + fixed fields fit well
+    #: under 1 MiB; anything bigger is malformed, not merely large.
+    _MAX_HEADER_BYTES = 1 << 20
+
     def _parse_leading_header(self) -> None:
         if self._framing == "raw":
             self._frontier_bit = 0
             return
-        head = self._reader.pread(0, 1 << 16)
-        hdr = parse_gzip_header(BitReader(head))
-        self._frontier_bit = hdr.header_bits
+        # A fixed-size pread truncates headers with large FEXTRA/FNAME
+        # fields; on a truncation (EndOfStream under the parser's
+        # GzipHeaderError) retry with a doubled read while the file still
+        # has bytes to give, capped with a clean error.
+        read_size = 1 << 16
+        while True:
+            head = self._reader.pread(0, read_size)
+            try:
+                hdr = parse_gzip_header(BitReader(head))
+            except GzipHeaderError as exc:
+                truncated = isinstance(exc.__cause__, EndOfStream)
+                if truncated and len(head) == read_size:
+                    if read_size >= self._MAX_HEADER_BYTES:
+                        raise GzipHeaderError(
+                            "gzip header exceeds %d bytes" % self._MAX_HEADER_BYTES
+                        ) from exc
+                    read_size *= 2
+                    continue
+                raise
+            self._frontier_bit = hdr.header_bits
+            return
 
     def _build_bgzf_index(self) -> None:
         """BGZF fast path: member boundaries from metadata (paper §3.4.4)."""

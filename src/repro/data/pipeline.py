@@ -4,6 +4,10 @@
 through ``ParallelGzipReader`` (speculative parallel decompression +
 prefetch), tokenizes, and packs fixed-length LM sequences. This is the
 deployment the paper motivates (§1.1: Common-Crawl-scale ML pipelines).
+Shards may be local paths, in-memory bytes, or ``http(s)://`` URLs —
+remote shards stream through range-GET preads (core/remote.py) and are
+never fully downloaded; with a warm ``index_store`` a restore seeks in
+O(range) network traffic.
 
 Fault tolerance: the iterator state is (shard index, *decompressed byte
 offset*, partial-buffer digest) — restoring seeks in O(1) through the seek
@@ -33,6 +37,7 @@ import numpy as np
 
 from ..core.index import GzipIndex
 from ..core.reader import ParallelGzipReader
+from ..core.remote import RemoteFileReader, is_remote_url
 from .tokenizer import ByteTokenizer, EOS
 
 
@@ -55,7 +60,7 @@ class GzipCorpusDataset:
 
     def __init__(
         self,
-        shards: Sequence[str],  # paths or bytes objects of .gz shards
+        shards: Sequence[str],  # paths, http(s):// URLs, or bytes of .gz shards
         *,
         tokenizer: Optional[ByteTokenizer] = None,
         seq_len: int = 1024,
@@ -71,6 +76,7 @@ class GzipCorpusDataset:
         executor=None,  # service.FairExecutor (or any Executor) to share threads
         index_store=None,  # service.IndexStore: persistent shard indexes
         tenant: Optional[str] = None,  # accounting id in the shared pool
+        remote_options: Optional[Dict] = None,  # RemoteFileReader kwargs for URL shards
     ):
         if not shards:
             raise ValueError("no shards")
@@ -89,6 +95,7 @@ class GzipCorpusDataset:
         self.executor = executor
         self.index_store = index_store
         self.tenant = tenant or f"pipeline-shard{shard_id}"
+        self.remote_options = dict(remote_options or {})
 
         self._my_shards = [i for i in range(len(self.shards)) if i % num_shards == shard_id]
         if not self._my_shards:
@@ -96,6 +103,7 @@ class GzipCorpusDataset:
         self.state = PipelineState(0, 0, 0)
         self._reader: Optional[ParallelGzipReader] = None
         self._reader_shard: Optional[int] = None
+        self._reader_key: Optional[str] = None  # index-store key at open time
         self._token_buf = np.empty(0, np.int32)
         self._exhausted = False
 
@@ -106,19 +114,30 @@ class GzipCorpusDataset:
         if self._reader is not None and self._reader_shard == global_idx:
             return self._reader
         self._close_reader()
-        index = self.indexes.get(global_idx)
-        if index is None and self.index_store is not None:
-            # Warm open: a stored index skips the speculative first pass.
-            index = self.index_store.get(self.shards[global_idx])
+        source = self.shards[global_idx]
+        if is_remote_url(source):
+            # Open the remote backend once: the identity used for the warm
+            # index lookup and the reader's reads then share one set of
+            # open-time validators (one HEAD total), and the close-time put
+            # below keys the index by the version that was actually read —
+            # not by a fresh probe that could see a replaced object.
+            source = RemoteFileReader(source, **self.remote_options)
         access_cache = prefetch_cache = None
-        if self.cache_pool is not None:
-            access_cache, prefetch_cache = self.cache_pool.reader_caches(self.tenant)
-        executor = self.executor
-        if executor is not None and hasattr(executor, "view"):
-            executor = executor.view(self.tenant)
         try:
+            store_key = None
+            if self.index_store is not None:
+                store_key = self.index_store.key_for(source)
+            index = self.indexes.get(global_idx)
+            if index is None and store_key is not None:
+                # Warm open: a stored index skips the speculative first pass.
+                index = self.index_store.get(store_key)
+            if self.cache_pool is not None:
+                access_cache, prefetch_cache = self.cache_pool.reader_caches(self.tenant)
+            executor = self.executor
+            if executor is not None and hasattr(executor, "view"):
+                executor = executor.view(self.tenant)
             self._reader = ParallelGzipReader(
-                self.shards[global_idx],
+                source,
                 parallelization=self.parallelization,
                 chunk_size=self.chunk_size,
                 index=index,
@@ -127,23 +146,29 @@ class GzipCorpusDataset:
                 prefetch_cache=prefetch_cache,
             )
         except BaseException:
-            # Don't leak pool registrations when a shard fails to open.
+            # Don't leak pool registrations (or remote connections) when any
+            # open step fails — key derivation and the warm-index lookup can
+            # raise for remote shards too (e.g. a 503 burst).
             if access_cache is not None:
                 access_cache.release()
                 prefetch_cache.release()
+            if source is not self.shards[global_idx]:
+                source.close()
             raise
         self._reader_shard = global_idx
+        self._reader_key = store_key
         return self._reader
 
     def _close_reader(self) -> None:
         """Close the current shard reader, persisting its index if possible."""
         if self._reader is None:
             return
-        if self.index_store is not None and self._reader.index.finalized:
-            self.index_store.put(self.shards[self._reader_shard], self._reader.index)
+        if self._reader_key is not None and self._reader.index.finalized:
+            self.index_store.put(self._reader_key, self._reader.index)
         self._reader.close()
         self._reader = None
         self._reader_shard = None
+        self._reader_key = None
 
     # -- iteration -------------------------------------------------------------
 

@@ -10,9 +10,12 @@ consults the store on open and persists finalized indexes on close.
 
 Identity is content-addressed cheaply: path + size + mtime_ns for on-disk
 files (an edited file gets a new key and a cold first pass — stale indexes
-age out of the directory unreferenced), and a head/tail content digest for
-in-memory buffers. Blobs are the existing `GzipIndex` binary format, one
-file per key under ``root`` (or an in-memory dict when ``root=None``).
+age out of the directory unreferenced), a head/tail content digest for
+in-memory buffers, and url + ETag/Last-Modified + size for remote objects
+(so a warm index hit skips the speculative first pass without re-downloading
+anything beyond a HEAD probe). Blobs are the existing `GzipIndex` binary
+format, one file per key under ``root`` (or an in-memory dict when
+``root=None``).
 """
 
 from __future__ import annotations
@@ -25,6 +28,7 @@ from typing import Dict, Optional, Union
 
 from ..core.filereader import FileReader
 from ..core.index import GzipIndex
+from ..core.remote import RemoteFileReader, is_remote_url
 
 _EXT = ".rpgzidx"
 
@@ -33,9 +37,29 @@ def file_identity(source: Union[str, os.PathLike, bytes, bytearray, memoryview, 
     """Stable hex key for a gzip source.
 
     Paths hash (realpath, size, mtime_ns) — no content reads, safe for huge
-    archives. Byte buffers hash (len, head 64 KiB, tail 64 KiB).
+    archives. Byte buffers hash (len, head 64 KiB, tail 64 KiB). Remote URLs
+    (and any FileReader exposing ``identity()``) hash (url, ETag or
+    Last-Modified, size) — one HEAD round trip, no downloads, and a changed
+    object gets a new key so its stale index ages out unreferenced.
     """
     h = hashlib.sha256()
+    if isinstance(source, FileReader):
+        ident = source.identity()
+        if ident is not None:
+            h.update(b"ident\0")
+            h.update(ident.encode())
+            return h.hexdigest()
+        # No cheap identity (e.g. a remote object without validators):
+        # fall through to the head/tail content digest below. For an open
+        # RemoteFileReader the two 64 KiB preads round out to its block
+        # size (up to two full blocks fetched) — bounded, and the blocks
+        # stay cached for the header/footer reads that follow an open.
+    if isinstance(source, str) and is_remote_url(source):
+        # Small blocks: the probe costs one HEAD, and the digest fallback
+        # (validator-less servers only) two 64 KiB range GETs, not two
+        # full-size default blocks.
+        with RemoteFileReader(source, block_size=64 << 10, cache_blocks=2) as r:
+            return file_identity(r)
     if isinstance(source, (str, os.PathLike)):
         path = os.path.realpath(os.fspath(source))
         st = os.stat(path)

@@ -28,6 +28,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
 from ..core.reader import ParallelGzipReader
+from ..core.remote import RemoteFileReader, is_remote_url
 from . import metrics as _metrics
 from .cache_pool import CachePool
 from .index_store import IndexStore, file_identity
@@ -81,7 +82,13 @@ class ArchiveServer:
         fairness: str = "drr",
         quantum_bytes: Optional[int] = None,
         tenant_weights: Optional[Dict[str, float]] = None,
+        remote_options: Optional[Dict[str, Any]] = None,
     ):
+        #: kwargs forwarded to every RemoteFileReader the server opens for
+        #: http(s):// sources: auth headers, block_size/cache_blocks,
+        #: timeout, retry tuning. NB the remote block caches are per-reader
+        #: and sit outside the CachePool byte budget (see ROADMAP).
+        self.remote_options = dict(remote_options or {})
         self.cache_pool = CachePool(
             cache_budget_bytes,
             access_fraction=access_fraction,
@@ -116,7 +123,8 @@ class ArchiveServer:
         """Register a gzip source; the reader is created lazily on first use.
 
         ``source`` is anything `ParallelGzipReader` accepts: a path, bytes,
-        or a FileReader.
+        an ``http(s)://`` URL (served via range-GET preads, never fully
+        downloaded), or a FileReader.
         """
         with self._lock:
             if self._closed:
@@ -143,15 +151,22 @@ class ArchiveServer:
                 raise KeyError("unknown or closed handle %r" % entry.handle)
             if entry.reader is not None:
                 return entry.reader
-            entry.identity = file_identity(entry.source)
-            index = self.index_store.get(entry.identity)
-            entry.index_was_warm = index is not None
-            access_cache, prefetch_cache = self.cache_pool.reader_caches(
-                entry.tenant, access_capacity=self.access_cache_entries
-            )
+            source = entry.source
+            if is_remote_url(source):
+                # Open the remote backend once: the identity probe and the
+                # reader then share one set of open-time validators (and one
+                # HEAD), and `ParallelGzipReader.close` owns its lifetime.
+                source = RemoteFileReader(source, **self.remote_options)
+            access_cache = prefetch_cache = None
             try:
+                entry.identity = file_identity(source)
+                index = self.index_store.get(entry.identity)
+                entry.index_was_warm = index is not None
+                access_cache, prefetch_cache = self.cache_pool.reader_caches(
+                    entry.tenant, access_capacity=self.access_cache_entries
+                )
                 entry.reader = ParallelGzipReader(
-                    entry.source,
+                    source,
                     parallelization=self.reader_parallelization,
                     chunk_size=self.chunk_size,
                     index=index,
@@ -161,10 +176,15 @@ class ArchiveServer:
                     prefetch_cache=prefetch_cache,
                 )
             except BaseException:
-                # Corrupt/non-gzip source: return the caches to the pool, or
-                # client retries would grow the registry without bound.
-                access_cache.release()
-                prefetch_cache.release()
+                # Corrupt/non-gzip source, torn index blob, or a pool fault:
+                # return the caches to the pool and close the remote reader
+                # we opened, or client retries would grow connections and
+                # registrations without bound.
+                if access_cache is not None:
+                    access_cache.release()
+                    prefetch_cache.release()
+                if source is not entry.source:
+                    source.close()
                 raise
             return entry.reader
 

@@ -58,6 +58,18 @@ except ModuleNotFoundError:
     sys.modules["hypothesis.strategies"] = _strategies
 
 
+def pytest_configure(config):
+    # "remote" tests are network-free: they talk only to an in-process
+    # loopback HTTP server (tests/_range_server.py), so tier-1 stays
+    # offline-safe. The marker exists for selection (-m remote) and to
+    # document the hermeticity guarantee, not to gate on connectivity.
+    config.addinivalue_line(
+        "markers",
+        "remote: remote-backend tests against the hermetic loopback range "
+        "server (no external network access)",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0xC0FFEE)

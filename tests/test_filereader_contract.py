@@ -1,0 +1,226 @@
+"""FileReader contract suite, run against every backend (paper §3, Fig 5).
+
+The decompression machinery only ever sees the pread abstraction, so all
+backends must agree on the contract: short reads never truncate mid-file,
+EOF-straddling reads return the short tail, negative offset/size raise
+ValueError, preads are thread-safe, close is idempotent. A network backend
+turns any divergence from latent into load-bearing — hence one parametrized
+suite instead of per-backend spot checks.
+"""
+
+import io
+import threading
+
+import pytest
+
+from _range_server import RangeHTTPServer
+from repro.core.filereader import (
+    BytesFileReader,
+    FileReader,
+    PythonFileReader,
+    SharedFileReader,
+    open_file_reader,
+)
+from repro.core.remote import RemoteFileReader
+
+DATA = bytes(range(256)) * 300  # 76800 bytes: straddles 64 KiB and blocks
+
+
+class ShortReadFile(io.RawIOBase):
+    """File-like whose read(n) legally returns at most 7 bytes at a time."""
+
+    def __init__(self, data: bytes):
+        super().__init__()
+        self._data = data
+        self._pos = 0
+
+    def readable(self) -> bool:
+        return True
+
+    def seekable(self) -> bool:
+        return True
+
+    def seek(self, offset, whence=io.SEEK_SET):
+        if whence == io.SEEK_SET:
+            self._pos = offset
+        elif whence == io.SEEK_CUR:
+            self._pos += offset
+        else:
+            self._pos = len(self._data) + offset
+        return self._pos
+
+    def tell(self):
+        return self._pos
+
+    def read(self, n=-1):
+        if n is None or n < 0:
+            n = len(self._data) - self._pos
+        n = min(n, 7)  # the short-read adversary
+        out = self._data[self._pos : self._pos + n]
+        self._pos += len(out)
+        return out
+
+
+BACKENDS = [
+    "bytes",
+    "shared",
+    "python",
+    "python_short",
+    pytest.param("remote", marks=pytest.mark.remote),
+]
+
+
+@pytest.fixture(params=BACKENDS)
+def backend(request, tmp_path):
+    """(reader, cleanup-managed) FileReader over DATA for each backend."""
+    kind = request.param
+    if kind == "bytes":
+        reader = BytesFileReader(DATA)
+        yield reader
+        reader.close()
+    elif kind == "shared":
+        path = tmp_path / "contract.bin"
+        path.write_bytes(DATA)
+        reader = SharedFileReader(path)
+        yield reader
+        reader.close()
+    elif kind == "python":
+        reader = PythonFileReader(io.BytesIO(DATA))
+        yield reader
+        reader.close()
+    elif kind == "python_short":
+        reader = PythonFileReader(ShortReadFile(DATA), close_fileobj=True)
+        yield reader
+        reader.close()
+    else:
+        with RangeHTTPServer(DATA) as srv:
+            reader = RemoteFileReader(
+                srv.url, block_size=4096, cache_blocks=8, sleep=lambda _s: None
+            )
+            yield reader
+            reader.close()
+
+
+def test_size(backend):
+    assert backend.size() == len(DATA)
+
+
+def test_pread_full(backend):
+    assert backend.pread(0, len(DATA)) == DATA
+
+
+@pytest.mark.parametrize(
+    "offset,size",
+    [
+        (0, 1),
+        (1, 4095),
+        (4095, 2),  # block straddle for the remote backend
+        (65535, 1024),  # 64 KiB straddle
+        (12345, 33333),
+    ],
+)
+def test_pread_middle(backend, offset, size):
+    assert backend.pread(offset, size) == DATA[offset : offset + size]
+
+
+def test_pread_eof_straddle(backend):
+    # A read straddling EOF returns the short tail, never raises.
+    assert backend.pread(len(DATA) - 10, 100) == DATA[-10:]
+
+
+def test_pread_at_and_past_eof(backend):
+    assert backend.pread(len(DATA), 10) == b""
+    assert backend.pread(len(DATA) + 1000, 10) == b""
+
+
+def test_pread_zero_size(backend):
+    assert backend.pread(100, 0) == b""
+
+
+def test_negative_offset_raises(backend):
+    # A negative offset must not fall through to Python slicing (which
+    # would silently serve bytes from the end of the buffer).
+    with pytest.raises(ValueError):
+        backend.pread(-1, 10)
+
+
+def test_negative_size_raises(backend):
+    with pytest.raises(ValueError):
+        backend.pread(0, -1)
+
+
+def test_concurrent_preads(backend):
+    offsets = [0, 5, 4090, 12345, 40000, 65000, len(DATA) - 100]
+    errors = []
+
+    def worker(seed: int):
+        try:
+            for i in range(20):
+                off = offsets[(seed + i) % len(offsets)]
+                got = backend.pread(off, 500)
+                assert got == DATA[off : off + 500], "mismatch at %d" % off
+        except BaseException as exc:  # noqa: BLE001 - surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+
+
+def test_close_idempotent(backend):
+    data = backend.pread(0, 10)
+    assert data == DATA[:10]
+    backend.close()
+    backend.close()  # second close must be a no-op, not an error
+
+
+def test_view_contract(backend):
+    view = backend.view()
+    assert view is None or bytes(view) == DATA
+
+
+def test_context_manager(tmp_path):
+    with BytesFileReader(DATA) as r:
+        assert isinstance(r, FileReader)
+        assert r.pread(0, 4) == DATA[:4]
+
+
+# -- backend-specific contract details --------------------------------------
+
+
+def test_python_short_read_loop_no_truncation():
+    # Regression: a single f.read(n) returning short used to truncate the
+    # chunk silently and poison trial decompression downstream.
+    reader = PythonFileReader(ShortReadFile(DATA))
+    assert reader.pread(0, 1000) == DATA[:1000]
+    assert reader.pread(70000, 10000) == DATA[70000:]
+
+
+def test_python_close_propagation_opt_in():
+    f1 = io.BytesIO(DATA)
+    PythonFileReader(f1).close()
+    assert not f1.closed  # default: wrapped object stays open
+
+    f2 = io.BytesIO(DATA)
+    PythonFileReader(f2, close_fileobj=True).close()
+    assert f2.closed
+
+
+def test_open_file_reader_dispatch(tmp_path):
+    path = tmp_path / "d.bin"
+    path.write_bytes(DATA)
+    assert isinstance(open_file_reader(DATA), BytesFileReader)
+    assert isinstance(open_file_reader(str(path)), SharedFileReader)
+    assert isinstance(open_file_reader(io.BytesIO(DATA)), PythonFileReader)
+
+
+@pytest.mark.remote
+def test_open_file_reader_url_dispatch():
+    with RangeHTTPServer(DATA) as srv:
+        reader = open_file_reader(srv.url)
+        assert isinstance(reader, RemoteFileReader)
+        assert reader.pread(10, 20) == DATA[10:30]
+        reader.close()
