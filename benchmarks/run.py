@@ -4,8 +4,11 @@ Prints ``name,us_per_call,derived`` CSV lines (see DESIGN.md §8 for the
 table/figure mapping). ``python -m benchmarks.run [--only sections] [--smoke]``.
 
 ``--smoke`` shrinks every section to tiny sizes (common.scale) so the whole
-harness completes in under a minute — a CI check that each benchmark still
-runs, not a measurement.
+harness completes in a couple of minutes — a CI check that each benchmark
+still runs, not a measurement. The service section includes the concurrent-reader
+scaling scenario (locked cursor vs lock-free pread vs async front-end), so
+every smoke run records that trajectory; the matching tier-2 correctness
+suite is ``pytest -m stress`` (threaded/async consistency with timeouts).
 """
 
 from __future__ import annotations

@@ -21,6 +21,12 @@ Orchestrates parallel chunk decompression:
 
 Work distribution is dynamic: whichever worker is free takes the next
 dispatched chunk — the paper's straggler mitigation (§4.2, §6).
+
+``get_indexed`` is safe to call from many threads concurrently: caches,
+in-flight dedup, and the index carry their own locks, and stateful prefetch
+strategies are serialized behind ``_strategy_lock``. This is what lets
+`ParallelGzipReader.pread` serve index-covered ranges with no reader-level
+lock at all.
 """
 
 from __future__ import annotations
@@ -160,6 +166,10 @@ class GzipChunkFetcher:
         self.strategy = prefetch_strategy or AdaptivePrefetchStrategy(self.parallelization)
 
         self._lock = threading.Lock()
+        # Prefetch strategies are stateful (stream tracking) and not required
+        # to be thread-safe; concurrent positional reads reach on_access from
+        # many threads at once, so the fetcher serializes strategy calls.
+        self._strategy_lock = threading.Lock()
         self._in_flight: Dict[object, Future] = {}
         self._nominal_done: Dict[int, Optional[int]] = {}  # k -> actual start bit
         self.stats = FetcherStats()
@@ -290,7 +300,9 @@ class GzipChunkFetcher:
         """Dispatch speculative tasks per the prefetch strategy (paper §3.1:
         access triggers the prefetcher even on a cache hit). Prefetches ride
         the batch lane: they must never delay any tenant's blocking read."""
-        for j in self.strategy.on_access(k):
+        with self._strategy_lock:
+            targets = self.strategy.on_access(k)
+        for j in targets:
             if j < 0 or j >= self.n_nominal:
                 continue
             with self._lock:
@@ -497,7 +509,9 @@ class GzipChunkFetcher:
 
     def get_indexed(self, i: int) -> np.ndarray:
         """Decompressed bytes of index chunk ``i`` (seek point i .. i+1)."""
-        for j in self.strategy.on_access(i):
+        with self._strategy_lock:
+            targets = self.strategy.on_access(i)
+        for j in targets:
             if 0 <= j < len(self.index) and self.index.chunk_output_size(j) is not None:
                 with self._lock:
                     if ("ix", j) in self._in_flight:

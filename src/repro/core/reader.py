@@ -21,11 +21,23 @@ speculative chunk decompression:
 The index can be exported/imported; with an imported index the first pass is
 skipped entirely and every read is an indexed read (paper Fig 9 "with
 index").
+
+Concurrency contract: ``pread(offset, size)`` is a *stateless* positional
+read — no shared cursor, safe from any number of threads at once. Ranges
+already covered by the index are served with no reader-level lock at all
+(index lookups and chunk fetches are thread-safe on their own); only
+advancing the speculative first pass is serialized, behind a narrow
+*frontier lock* taken one chunk at a time. ``read``/``seek``/``tell`` keep
+the classic file-object cursor and are only safe from one thread, but they
+ride the same machinery, so a cursor reader and many pread callers can share
+one instance.
 """
 
 from __future__ import annotations
 
 import io
+import threading
+import time as _time
 import zlib as _zlib
 from typing import List, Optional, Union
 
@@ -75,47 +87,79 @@ class ParallelGzipReader(io.RawIOBase):
     ):
         super().__init__()
         self._reader = open_file_reader(source)
-        self._verify = verify
-        self._framing = framing
-        # Decompressed spacing between seek points; chunks whose decompressed
-        # size exceeds it are split at interior block boundaries (paper §1.4).
-        self._index_spacing = index_spacing or 4 * chunk_size
+        try:
+            self._verify = verify
+            self._framing = framing
+            # Decompressed spacing between seek points; chunks whose
+            # decompressed size exceeds it are split at interior block
+            # boundaries (paper §1.4).
+            self._index_spacing = index_spacing or 4 * chunk_size
 
-        if isinstance(index, str):
-            index = GzipIndex.import_file(index)
-        elif isinstance(index, (bytes, bytearray)):
-            index = GzipIndex.from_bytes(bytes(index))
+            if isinstance(index, str):
+                index = GzipIndex.import_file(index)
+            elif isinstance(index, (bytes, bytearray)):
+                index = GzipIndex.from_bytes(bytes(index))
 
-        self._fetcher = GzipChunkFetcher(
-            self._reader,
-            chunk_size=chunk_size,
-            parallelization=parallelization,
-            framing=framing,
-            index=index,
-            access_cache_size=access_cache_size,
-            executor=executor,
-            access_cache=access_cache,
-            prefetch_cache=prefetch_cache,
-            prefetch_strategy=prefetch_strategy,
-        )
-        self._index = self._fetcher.index
+            self._fetcher = GzipChunkFetcher(
+                self._reader,
+                chunk_size=chunk_size,
+                parallelization=parallelization,
+                framing=framing,
+                index=index,
+                access_cache_size=access_cache_size,
+                executor=executor,
+                access_cache=access_cache,
+                prefetch_cache=prefetch_cache,
+                prefetch_strategy=prefetch_strategy,
+            )
+            self._index = self._fetcher.index
 
-        self._pos = 0
-        self._eos = False
-        self._frontier_bit = 0
-        self._frontier_out = 0
-        self._window: Optional[bytes] = b""
-        self._member_crc = 0
-        self._member_len = 0
+            self._pos = 0
+            self._eos = False
+            self._frontier_bit = 0
+            self._frontier_out = 0
+            self._window: Optional[bytes] = b""
+            self._member_crc = 0
+            self._member_len = 0
+            # Serializes first-pass advancement; indexed reads never take it.
+            self._frontier_lock = threading.Lock()
+            self._frontier_acquires = 0
+            self._frontier_contended = 0
+            self._frontier_wait_s = 0.0
 
-        if self._index.finalized:
-            # Imported (or BGZF) index: no first pass needed.
-            self._eos = True
-            self._frontier_out = self._index.decompressed_size or 0
-        elif framing == "gzip" and detect_bgzf(self._reader.pread(0, 1 << 12)):
-            self._build_bgzf_index()
-        else:
-            self._parse_leading_header()
+            if self._index.finalized:
+                # Imported (or BGZF) index: no first pass needed.
+                self._eos = True
+                self._frontier_out = self._index.decompressed_size or 0
+            elif framing == "gzip" and detect_bgzf(self._reader.pread(0, 1 << 12)):
+                self._build_bgzf_index()
+            else:
+                self._parse_leading_header()
+        except BaseException:
+            # A half-built reader must not leak: header parsing or index
+            # import raising here would otherwise strand the opened
+            # FileReader (an FD, or remote connections) and — when the
+            # fetcher was already constructed — leave pooled caches and the
+            # executor view registered against shared service budgets.
+            try:
+                fetcher = getattr(self, "_fetcher", None)
+                if fetcher is not None:
+                    fetcher.shutdown()
+                else:
+                    # The fetcher would have owned releasing the injected
+                    # caches; it never existed, so release them ourselves.
+                    for cache in (access_cache, prefetch_cache):
+                        release = getattr(cache, "release", None)
+                        if release is not None:
+                            release()
+            finally:
+                self._reader.close()
+                # Mark the stream closed so the interpreter's later
+                # RawIOBase.__del__ -> close() does not re-run teardown on
+                # the half-built object (double cache release / double
+                # shutdown).
+                super().close()
+            raise
 
     # ------------------------------------------------------------------
     # setup
@@ -176,6 +220,9 @@ class ParallelGzipReader(io.RawIOBase):
     # ------------------------------------------------------------------
 
     def _advance_frontier(self) -> None:
+        """Advance the first pass by one chunk. Callers other than the
+        constructor must hold ``_frontier_lock`` — this mutates the window,
+        CRC running state, and the frontier offsets."""
         if self._eos:
             return
         res = self._fetcher.get_chunk_at(self._frontier_bit, window=self._window)
@@ -185,8 +232,34 @@ class ParallelGzipReader(io.RawIOBase):
         self._frontier_bit = res.end_bit
         self._frontier_out += res.size
         if res.ended_at_eos:
-            self._eos = True
+            # Finalize the index *before* publishing EOS: lock-free pread
+            # callers treat `_eos` as "the index now answers everything" —
+            # seeing it early would turn an in-range read into a short one.
             self._index.finalize(self._frontier_out, self._reader.size())
+            self._eos = True
+
+    def _advance_frontier_past(self, pos: int) -> None:
+        """Take the frontier lock and advance the first pass one chunk,
+        unless a concurrent caller already made ``pos`` serveable. One chunk
+        per acquisition keeps the critical section narrow: concurrent
+        readers waiting on different offsets interleave instead of one
+        caller holding the lock across a long catch-up."""
+        if self._frontier_lock.acquire(blocking=False):
+            self._frontier_acquires += 1
+        else:
+            t0 = _time.perf_counter()
+            self._frontier_lock.acquire()
+            # Counters are only mutated while holding the frontier lock, so
+            # plain int/float updates are race-free; readers may see a
+            # slightly stale snapshot, which telemetry tolerates.
+            self._frontier_acquires += 1
+            self._frontier_contended += 1
+            self._frontier_wait_s += _time.perf_counter() - t0
+        try:
+            if not self._eos and self._serveable_point(pos) is None:
+                self._advance_frontier()
+        finally:
+            self._frontier_lock.release()
 
     def _collect(self, fc: FinalizedChunk) -> None:
         """Sequential bookkeeping for one finalized chunk: CRC verification,
@@ -322,43 +395,69 @@ class ParallelGzipReader(io.RawIOBase):
     def size(self) -> int:
         """Decompressed size (drives the first pass to completion)."""
         while not self._eos:
-            self._advance_frontier()
+            # frontier_out is never serveable pre-EOS, so each call advances
+            # exactly one chunk (and concurrent callers share the work).
+            self._advance_frontier_past(self._frontier_out)
         assert self._index.decompressed_size is not None
         return self._index.decompressed_size
 
-    def read(self, size: int = -1) -> bytes:
+    def _serveable_point(self, pos: int) -> Optional[int]:
+        """Ordinal of the seek point that can serve ``pos`` through an
+        indexed fetch *right now*, or None while the first pass must advance
+        (or, at EOS, when ``pos`` is at/past the end of the stream)."""
+        if pos >= self._frontier_out:
+            return None
+        i = self._index.find(pos)
+        if i is None:
+            raise RapidgzipError("position %d precedes the index" % pos)
+        # The chunk's size must be bounded by a successor point (or the
+        # finalized total) before an indexed fetch can run.
+        if i + 1 >= len(self._index) and not self._index.finalized:
+            return None
+        return i
+
+    def _read_span(self, pos: int, end: Optional[int]) -> bytes:
+        """Decompressed bytes [pos, end) (to EOF when end is None) — the
+        shared engine under ``read`` and ``pread``. Stateless: no cursor, no
+        lock on the indexed path; the frontier lock only while the first
+        pass must advance past uncovered positions."""
         out: List[bytes] = []
-        pos = self._pos
-        remaining = size if size >= 0 else None
-        while remaining is None or remaining > 0:
-            if pos >= self._frontier_out:
-                if self._eos:
-                    break
-                self._advance_frontier()
-                continue
-            i = self._index.find(pos)
+        while end is None or pos < end:
+            # Snapshot EOS *before* probing: if EOS lands between the probe
+            # and the check, the stale False routes us through the (no-op)
+            # locked advance and we re-probe under the final index state
+            # instead of breaking early with a short read.
+            at_eos = self._eos
+            i = self._serveable_point(pos)
             if i is None:
-                raise RapidgzipError("position %d precedes the index" % pos)
-            # The chunk's size must be bounded by a successor point (or the
-            # finalized total) before an indexed fetch can run.
-            if i + 1 >= len(self._index) and not self._index.finalized:
-                if self._eos:
-                    break
-                self._advance_frontier()
+                if at_eos:
+                    break  # at/past EOF
+                self._advance_frontier_past(pos)
                 continue
             data = self._fetcher.get_indexed(i)
             start = self._index.point_at(i).decompressed_byte
             off = pos - start
             avail = int(data.shape[0]) - off
             if avail <= 0:
-                break  # pos beyond EOF
-            take = avail if remaining is None else min(avail, remaining)
+                break  # pos beyond EOF (e.g. a stale index overstating coverage)
+            take = avail if end is None else min(avail, end - pos)
             out.append(data[off : off + take].tobytes())
             pos += take
-            if remaining is not None:
-                remaining -= take
-        self._pos = pos
         return b"".join(out)
+
+    def pread(self, offset: int, size: int) -> bytes:
+        """Stateless positional read: decompressed [offset, offset+size),
+        short at EOF. Thread-safe with no shared cursor — any number of
+        threads may pread concurrently; index-covered ranges (always, once
+        the index is finalized) are served entirely lock-free."""
+        if offset < 0 or size < 0:
+            raise ValueError("pread offset and size must be non-negative")
+        return self._read_span(offset, offset + size)
+
+    def read(self, size: int = -1) -> bytes:
+        data = self._read_span(self._pos, None if size < 0 else self._pos + size)
+        self._pos += len(data)
+        return data
 
     def readinto(self, b) -> int:
         data = self.read(len(b))
@@ -367,8 +466,12 @@ class ParallelGzipReader(io.RawIOBase):
 
     def close(self) -> None:
         if not self.closed:
-            self._fetcher.shutdown()
-            self._reader.close()
+            try:
+                self._fetcher.shutdown()
+            finally:
+                # The file handle (and any remote connections) must close
+                # even when a cache release / task cancel raises mid-shutdown.
+                self._reader.close()
         super().close()
 
     # ------------------------------------------------------------------
@@ -380,8 +483,7 @@ class ParallelGzipReader(io.RawIOBase):
         return self._index
 
     def build_full_index(self) -> GzipIndex:
-        while not self._eos:
-            self._advance_frontier()
+        self.size()  # drives the first pass to completion (frontier-locked)
         return self._index
 
     def export_index(self, dest) -> None:
@@ -389,4 +491,10 @@ class ParallelGzipReader(io.RawIOBase):
         self._index.export_file(dest)
 
     def stats(self) -> dict:
-        return self._fetcher.cache_report()
+        report = self._fetcher.cache_report()
+        report["frontier"] = {
+            "lock_acquires": int(self._frontier_acquires),
+            "lock_contended": int(self._frontier_contended),
+            "lock_wait_s": float(self._frontier_wait_s),
+        }
+        return report

@@ -178,8 +178,11 @@ class GzipCorpusDataset:
             if not self.loop and self._exhausted:
                 return False
             reader = self._open(self.state.shard_idx)
-            reader.seek(self.state.byte_offset)
-            data = reader.read(self.read_block)
+            # Stateless positional read: no cursor on the reader, so a
+            # pipeline sharing its shard reader with other consumers (e.g. a
+            # serving path behind the same ArchiveServer budgets) never
+            # races a seek+read pair.
+            data = reader.pread(self.state.byte_offset, self.read_block)
             if not data:
                 # next shard (wrapping if looping)
                 nxt = self.state.shard_idx + 1

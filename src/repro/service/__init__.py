@@ -12,8 +12,19 @@ speculative first pass (`IndexStore`), and fleet-wide telemetry (`metrics`).
                        index_store=IndexStore("/var/cache/rpgz")) as srv:
         h = srv.open("corpus-00.json.gz", tenant="search")
         page = srv.read_range(h, 10 << 20, 4096)
+
+`read_range` is stateless and concurrent — N threads on one handle scale
+without a shared cursor (see server.py's concurrency contract). For asyncio
+services, `AsyncArchiveServer` bridges the same calls off the event loop:
+
+    from repro.service import AsyncArchiveServer
+
+    async with AsyncArchiveServer(cache_budget_bytes=32 << 20) as srv:
+        h = await srv.open("corpus-00.json.gz", tenant="search")
+        pages = await srv.read_many([(h, off, 4096) for off in offsets])
 """
 
+from .async_server import AsyncArchiveServer
 from .cache_pool import ACCESS, PREFETCH, CachePool, PooledCache, TenantStats, default_size_of
 from .index_store import IndexStore, IndexStoreStats, file_identity
 from .metrics import aggregate_reader_reports, collect, format_summary
@@ -25,6 +36,7 @@ __all__ = [
     "PREFETCH",
     "ArchiveServer",
     "ArchiveStat",
+    "AsyncArchiveServer",
     "CachePool",
     "FairExecutor",
     "IndexStore",

@@ -1,0 +1,160 @@
+"""AsyncArchiveServer — asyncio front-end over `ArchiveServer`.
+
+The synchronous server is already concurrency-ready: ``read_range`` is
+stateless (no shared cursor, no entry lock — see server.py's concurrency
+contract), so an async front-end only needs a non-blocking bridge from the
+event loop into threads. This wrapper provides one:
+
+  * ``await read_range(...)`` / ``await size(...)`` run the blocking call on
+    a small dedicated **front-end bridge pool** and suspend the coroutine —
+    the event loop never blocks, however long the first pass takes;
+  * ``await read_many([...])`` fans a batch of ranges out concurrently
+    (``asyncio.gather`` over the bridge) — with a warm index the underlying
+    preads proceed genuinely in parallel;
+  * ``open`` and ``stat`` complete inline: registration is a dict insert and
+    ``stat`` is a lock-free snapshot by design, so neither can stall the
+    loop.
+
+Why a dedicated bridge pool instead of dispatching front-end calls into the
+shared `FairExecutor`: a read *blocks on decompression futures queued into
+that same executor*. Running the blocking wrapper on a FairExecutor worker
+could occupy every worker with callers that are all waiting for fetch tasks
+none of the workers are free to run — classic pool-starvation deadlock. The
+bridge threads therefore only *wait*; every byte of decompression work still
+flows through the shared FairExecutor underneath with its per-tenant
+fairness intact. Bridge threads are cheap (they sleep on futures), so
+``front_end_threads`` bounds front-end concurrency, not CPU.
+
+    from repro.service import AsyncArchiveServer
+
+    async with AsyncArchiveServer(cache_budget_bytes=64 << 20) as srv:
+        h = await srv.open("corpus-00.json.gz", tenant="search")
+        page = await srv.read_range(h, 10 << 20, 4096)
+        pages = await srv.read_many([(h, off, 4096) for off in offsets])
+"""
+
+from __future__ import annotations
+
+import asyncio
+from concurrent.futures import ThreadPoolExecutor
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .server import ArchiveServer, ArchiveStat
+
+
+class AsyncArchiveServer:
+    """Async facade over an `ArchiveServer` (owned or wrapped).
+
+    Construct either around an existing server (``AsyncArchiveServer(srv)``
+    — lifecycle stays with the caller) or standalone with `ArchiveServer`
+    kwargs (``AsyncArchiveServer(cache_budget_bytes=...)`` — ``shutdown`` /
+    ``async with`` then tears the inner server down too).
+    """
+
+    def __init__(
+        self,
+        server: Optional[ArchiveServer] = None,
+        *,
+        front_end_threads: int = 8,
+        **server_kwargs: Any,
+    ):
+        if server is not None and server_kwargs:
+            raise ValueError("pass either a server or ArchiveServer kwargs, not both")
+        self._server = server if server is not None else ArchiveServer(**server_kwargs)
+        self._owns_server = server is None
+        self._bridge = ThreadPoolExecutor(
+            max_workers=max(1, front_end_threads),
+            thread_name_prefix="archive-async",
+        )
+        self._closed = False
+
+    @property
+    def server(self) -> ArchiveServer:
+        """The wrapped synchronous server (telemetry, sync co-access)."""
+        return self._server
+
+    # ------------------------------------------------------------------
+    # bridge
+    # ------------------------------------------------------------------
+
+    def _run(self, fn, *args, **kwargs):
+        if self._closed:
+            raise RuntimeError("AsyncArchiveServer is closed")
+        loop = asyncio.get_running_loop()
+        return loop.run_in_executor(self._bridge, partial(fn, *args, **kwargs))
+
+    # ------------------------------------------------------------------
+    # request API
+    # ------------------------------------------------------------------
+
+    async def open(self, source, *, tenant: str = "default") -> str:
+        """Register a source (lazy reader creation, like the sync server).
+
+        Pure registry work — runs inline, no executor round-trip.
+        """
+        if self._closed:
+            raise RuntimeError("AsyncArchiveServer is closed")
+        return self._server.open(source, tenant=tenant)
+
+    async def read_range(self, handle: str, offset: int, size: int) -> bytes:
+        """Decompressed [offset, offset+size) without blocking the loop."""
+        return await self._run(self._server.read_range, handle, offset, size)
+
+    async def read_many(
+        self, requests: Sequence[Tuple[str, int, int]]
+    ) -> List[bytes]:
+        """Serve many ``(handle, offset, size)`` ranges concurrently.
+
+        Results keep request order. Concurrency = min(len(requests),
+        front_end_threads) at the bridge; the decompression itself fans out
+        further through the shared executor. Any failed range fails the
+        batch (``asyncio.gather`` default) — issue individually if partial
+        results are wanted.
+        """
+        return list(
+            await asyncio.gather(
+                *(self.read_range(h, off, size) for h, off, size in requests)
+            )
+        )
+
+    async def stat(self, handle: str) -> ArchiveStat:
+        """Handle snapshot — lock-free in the sync server, so served inline."""
+        if self._closed:
+            raise RuntimeError("AsyncArchiveServer is closed")
+        return self._server.stat(handle)
+
+    async def size(self, handle: str) -> int:
+        """Decompressed size (may drive a whole first pass: bridged)."""
+        return await self._run(self._server.size, handle)
+
+    def metrics(self) -> Dict[str, Any]:
+        """Fleet snapshot (sync: already non-blocking by design)."""
+        return self._server.metrics()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    async def persist_index(self, handle: str) -> Optional[str]:
+        return await self._run(self._server.persist_index, handle)
+
+    async def close(self, handle: str, *, persist_index: bool = True) -> None:
+        await self._run(self._server.close, handle, persist_index=persist_index)
+
+    async def shutdown(self) -> None:
+        """Drain the bridge; shut the inner server down iff we created it."""
+        if self._closed:
+            return
+        try:
+            if self._owns_server:
+                await self._run(self._server.shutdown)
+        finally:
+            self._closed = True
+            self._bridge.shutdown(wait=False)
+
+    async def __aenter__(self) -> "AsyncArchiveServer":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.shutdown()

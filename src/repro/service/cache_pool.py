@@ -123,6 +123,11 @@ class PooledCache(LRUCache):
         self._tier = tier
         self.tenant = tenant
         self._cache_id = pool._next_cache_id()
+        # Flipped under the pool lock by _deregister: inserts racing a
+        # release (an in-flight decompression task finishing after its
+        # reader closed — possible now that reads don't hold the entry
+        # lock) must not re-charge the ledger of a deregistered cache.
+        self._pool_registered = True
 
     # Mutations run the base core under the cache lock, then report to the
     # pool after releasing it (see lock-ordering note in the module doc).
@@ -267,6 +272,11 @@ class CachePool:
         cost = size if recompute_cost is None else max(0, int(recompute_cost))
         victims: List[Tuple[PooledCache, Hashable]] = []
         with self._lock:
+            if not cache._pool_registered:
+                # Released cache: nobody will ever deregister this charge
+                # again, so booking it would leak tier.held bytes for good.
+                # The orphaned value sits only in the abandoned member dict.
+                return
             tier = self._tiers[cache._tier]
             stats = self._tenants.setdefault(cache.tenant, TenantStats())
             for k, _ in evicted:  # entry-capacity evictions inside the cache
@@ -360,6 +370,7 @@ class CachePool:
     def _deregister(self, cache: PooledCache) -> None:
         """Remove a released cache (and any ledger remnants) from the pool."""
         with self._lock:
+            cache._pool_registered = False
             tier = self._tiers[cache._tier]
             stale = [key for key in tier.entries if key[0] == cache._cache_id]
             for key in stale:

@@ -21,18 +21,29 @@ from ..core.chunk_fetcher import FetcherStats
 #: a new core counter can never be silently dropped from fleet aggregation.
 _FETCHER_COUNTERS = tuple(FetcherStats.__dataclass_fields__)
 
+#: Frontier-lock counters from `ParallelGzipReader.stats()["frontier"]`:
+#: every first-pass advance takes the lock once; `lock_contended` /
+#: `lock_wait_s` quantify how often (and for how long) concurrent positional
+#: reads actually serialized on it. Warm indexed traffic shows zero
+#: acquisitions — the observable proof that pread is lock-free there.
+_FRONTIER_COUNTERS = ("lock_acquires", "lock_contended", "lock_wait_s")
+
 
 def aggregate_reader_reports(reports: Mapping[str, Mapping[str, Any]]) -> Dict[str, Any]:
     """Sum many ``reader.stats()`` dicts into fleet totals."""
     access = CacheStats()
     prefetch = CacheStats()
     fetcher = {k: 0 for k in _FETCHER_COUNTERS}
+    frontier = {k: 0.0 if k == "lock_wait_s" else 0 for k in _FRONTIER_COUNTERS}
     for rep in reports.values():
         access = access.merge(rep.get("access", {}))
         prefetch = prefetch.merge(rep.get("prefetch", {}))
         f = rep.get("fetcher", {})
         for k in _FETCHER_COUNTERS:
             fetcher[k] += int(f.get(k, 0))
+        fr = rep.get("frontier", {})
+        for k in _FRONTIER_COUNTERS:
+            frontier[k] += fr.get(k, 0)
     # The fetcher's combined-stats lookup records exactly one hit or miss
     # per *logical* lookup across the two tiers (access misses are
     # suppressed when the prefetch tier still gets probed), so the
@@ -48,6 +59,7 @@ def aggregate_reader_reports(reports: Mapping[str, Mapping[str, Any]]) -> Dict[s
         "hit_rate": combined.hit_rate,
         "lookups": combined.hits + combined.misses,
         "fetcher": fetcher,
+        "frontier": frontier,
     }
 
 
@@ -58,8 +70,14 @@ def collect(
     pool=None,
     executor=None,
     index_store=None,
+    service: Optional[Mapping[str, Any]] = None,
 ) -> Dict[str, Any]:
-    """One service-wide snapshot. All sections are optional except readers."""
+    """One service-wide snapshot. All sections are optional except readers.
+
+    ``service`` carries the server's front-door gauges (in-flight read
+    count, cumulative reads split by discipline) — the liveness complement
+    to the per-reader frontier lock-wait counters in the fleet section.
+    """
     out: Dict[str, Any] = {
         "fleet": aggregate_reader_reports(reader_reports),
         "per_file": {h: dict(v) for h, v in (per_file or {}).items()},
@@ -71,6 +89,8 @@ def collect(
         out["scheduler"] = executor.snapshot()
     if index_store is not None:
         out["index_store"] = index_store.stats.as_dict()
+    if service is not None:
+        out["service"] = dict(service)
     return out
 
 
@@ -96,6 +116,18 @@ def format_summary(snapshot: Mapping[str, Any]) -> str:
            fleet.get("access", {}).get("hits", 0),
            fleet.get("prefetch_hit_rate", 0.0))
     )
+    fr = fleet.get("frontier")
+    svc = snapshot.get("service")
+    if fr or svc:
+        fr = fr or {}
+        svc = svc or {}
+        lines.append(
+            "reads: %d in flight, %d started (%d serialized); frontier lock:"
+            " %d acquires, %d contended, %.1f ms waited"
+            % (svc.get("reads_in_flight", 0), svc.get("reads_started", 0),
+               svc.get("reads_serialized", 0), fr.get("lock_acquires", 0),
+               fr.get("lock_contended", 0), fr.get("lock_wait_s", 0.0) * 1e3)
+        )
     pool = snapshot.get("cache_pool")
     if pool:
         for tier, t in sorted(pool.get("tiers", {}).items()):

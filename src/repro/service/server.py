@@ -16,16 +16,45 @@ reader over one file. This server multiplexes a registry of
     finalized indexes back.
 
 API: ``open(source) -> handle``, ``read_range(handle, offset, size)``,
-``stat(handle)``, ``close(handle)``. Readers are opened lazily on first use;
-`read_range` is thread-safe (per-handle position lock; decompression
-parallelism lives in the shared executor underneath).
+``stat(handle)``, ``close(handle)``. Readers are opened lazily on first use.
+
+Concurrency contract (who locks what):
+
+  * ``read_range`` is **stateless and concurrent**: it rides
+    `ParallelGzipReader.pread`, which has no shared cursor. N threads
+    hammering one handle serialize only where the physics demands it —
+    advancing the speculative first pass past uncovered offsets (the
+    reader's narrow frontier lock, one chunk per acquisition). With a warm
+    (finalized) index no server- or reader-level lock is taken at all;
+    aggregate throughput scales with the executor, not with handle count.
+    ``read_range(..., serialized=True)`` keeps the legacy one-cursor-
+    per-handle discipline (entry lock around seek+read) for A/B
+    measurement — see bench_service's concurrent-scaling scenario.
+  * the **entry lock** is a lifecycle lock only: lazy open (exactly one
+    thread builds the reader) and close (nobody closes a reader out from
+    under an opener). Reads never hold it.
+  * reads and ``close`` shake hands through a per-entry **condition**
+    (``_Entry.cond``): each read registers in ``in_flight`` (refusing
+    closed entries with KeyError), and ``close`` flips ``closed`` then
+    drains ``in_flight`` to zero before the reader's file handle goes away
+    — a racing read either completes on a live fd or fails cleanly, never
+    preads a closed (or fd-recycled) descriptor. The per-entry read/byte
+    counters ride the same condition's lock; hot concurrent reads contend
+    on nothing coarser.
+  * ``stat`` is **lock-free**: it reads a snapshot of the entry and the
+    index's own internally-consistent counters, so telemetry stays
+    responsive while long first-pass reads are in flight on the same
+    handle.
+
+For asyncio front-ends use `service.async_server.AsyncArchiveServer`, which
+bridges these calls off the event loop and adds a concurrent ``read_many``.
 """
 
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core.reader import ParallelGzipReader
 from ..core.remote import RemoteFileReader, is_remote_url
@@ -57,7 +86,18 @@ class _Entry:
         self.handle = handle
         self.source = source
         self.tenant = tenant
-        self.lock = threading.RLock()  # serializes seek+read on the reader
+        # Lifecycle lock: lazy open / close / persist. Positional reads never
+        # take it (pread is stateless); serialized=True legacy reads do.
+        self.lock = threading.RLock()
+        # Condition guarding the per-entry counters AND the read/close
+        # handshake: reads register in `in_flight` under it (refusing closed
+        # entries), close() flips `closed` and drains `in_flight` to zero
+        # before the reader's file handle goes away — without this, a
+        # lock-free read racing close() could pread a closed (or, after fd
+        # reuse, a *different*) file descriptor. Cheap enough to take per
+        # request without re-serializing the reads themselves.
+        self.cond = threading.Condition()
+        self.in_flight = 0
         self.reader: Optional[ParallelGzipReader] = None
         self.identity: Optional[str] = None
         self.index_was_warm = False
@@ -114,6 +154,14 @@ class ArchiveServer:
         self._entries: Dict[str, _Entry] = {}
         self._handle_seq = 0
         self._closed = False
+        # Front-door gauges (metrics "service" section): how many read_range
+        # calls are inside the server right now, and cumulative counts split
+        # by discipline. Guarded by a micro-lock of their own so the hot
+        # path never touches the registry lock.
+        self._gauge_lock = threading.Lock()
+        self._reads_in_flight = 0
+        self._reads_started = 0
+        self._reads_serialized = 0
 
     # ------------------------------------------------------------------
     # registry
@@ -179,7 +227,12 @@ class ArchiveServer:
                 # Corrupt/non-gzip source, torn index blob, or a pool fault:
                 # return the caches to the pool and close the remote reader
                 # we opened, or client retries would grow connections and
-                # registrations without bound.
+                # registrations without bound. ParallelGzipReader's own
+                # constructor already tears down what it reached (fetcher,
+                # caches, file handle); this backstop covers failures before
+                # the reader constructor ran (identity probe, index store)
+                # and is harmless after it — PooledCache.release and
+                # FileReader.close are idempotent.
                 if access_cache is not None:
                     access_cache.release()
                     prefetch_cache.release()
@@ -192,46 +245,120 @@ class ArchiveServer:
     # request API
     # ------------------------------------------------------------------
 
-    def read_range(self, handle: str, offset: int, size: int) -> bytes:
-        """Decompressed bytes [offset, offset+size) — short at EOF."""
+    def read_range(
+        self, handle: str, offset: int, size: int, *, serialized: bool = False
+    ) -> bytes:
+        """Decompressed bytes [offset, offset+size) — short at EOF.
+
+        Concurrent and stateless: no per-handle cursor, no entry lock. The
+        entry lock is taken only inside ``_ensure_reader`` when this is the
+        first touch of a lazily-opened handle; after that, N threads on one
+        handle proceed in parallel (index-covered ranges entirely lock-free,
+        frontier advancement serialized inside the reader one chunk at a
+        time). ``serialized=True`` restores the legacy discipline — entry
+        lock around a shared-cursor seek+read — kept for A/B benchmarking.
+        """
         if offset < 0 or size < 0:
             raise ValueError("offset and size must be non-negative")
         entry = self._entry(handle)
-        with entry.lock:
+        reader = entry.reader
+        if reader is None:
             reader = self._ensure_reader(entry)
-            reader.seek(offset)
-            data = reader.read(size)
+        with entry.cond:
+            # Register under the close handshake: after this, close() waits
+            # for us before tearing the reader (and its fd) down.
+            if entry.closed:
+                raise KeyError("unknown or closed handle %r" % handle)
+            entry.in_flight += 1
+        with self._gauge_lock:
+            self._reads_in_flight += 1
+            self._reads_started += 1
+            if serialized:
+                self._reads_serialized += 1
+        try:
+            if serialized:
+                with entry.lock:
+                    reader.seek(offset)
+                    data = reader.read(size)
+            else:
+                data = reader.pread(offset, size)
+        finally:
+            with self._gauge_lock:
+                self._reads_in_flight -= 1
+            with entry.cond:
+                entry.in_flight -= 1
+                if entry.in_flight == 0:
+                    entry.cond.notify_all()
+        with entry.cond:
             entry.reads += 1
             entry.bytes_served += len(data)
         return data
 
+    def read_many(
+        self, requests: Sequence[Tuple[str, int, int]]
+    ) -> List[bytes]:
+        """Serve many ``(handle, offset, size)`` ranges, in order.
+
+        Runs sequentially in the calling thread — the parallelism callers
+        want lives either in their own threads (each calling read_range) or
+        in `AsyncArchiveServer.read_many`, which fans these out across the
+        front-end bridge concurrently.
+        """
+        return [self.read_range(h, off, size) for h, off, size in requests]
+
     def stat(self, handle: str) -> ArchiveStat:
+        """Lock-free snapshot of one handle.
+
+        Deliberately does NOT take the entry lock: a long first-pass read (or
+        a slow lazy open) on the same handle must not make telemetry hang.
+        The index reports through its own internal lock; the counters come
+        from the stats micro-lock; `opened` reflects the reader reference at
+        the instant of the call.
+        """
         entry = self._entry(handle)
-        with entry.lock:
-            reader = entry.reader
-            index = reader.index if reader is not None else None
-            return ArchiveStat(
-                handle=handle,
-                tenant=entry.tenant,
-                opened=reader is not None,
-                compressed_size=(
-                    index.compressed_size if index is not None else None
-                ),
-                decompressed_size=(
-                    index.decompressed_size if index is not None else None
-                ),
-                index_points=len(index) if index is not None else 0,
-                index_finalized=bool(index.finalized) if index is not None else False,
-                index_was_warm=entry.index_was_warm,
-                reads=entry.reads,
-                bytes_served=entry.bytes_served,
-            )
+        reader = entry.reader
+        index = reader.index if reader is not None else None
+        with entry.cond:
+            reads, bytes_served = entry.reads, entry.bytes_served
+        return ArchiveStat(
+            handle=handle,
+            tenant=entry.tenant,
+            opened=reader is not None,
+            compressed_size=(
+                index.compressed_size if index is not None else None
+            ),
+            decompressed_size=(
+                index.decompressed_size if index is not None else None
+            ),
+            index_points=len(index) if index is not None else 0,
+            index_finalized=bool(index.finalized) if index is not None else False,
+            index_was_warm=entry.index_was_warm,
+            reads=reads,
+            bytes_served=bytes_served,
+        )
 
     def size(self, handle: str) -> int:
-        """Decompressed size (drives the first pass to completion)."""
+        """Decompressed size (drives the first pass to completion).
+
+        No entry lock: the reader's own frontier lock serializes the first
+        pass, and concurrent read_range calls on the same handle keep
+        flowing while it completes.
+        """
         entry = self._entry(handle)
-        with entry.lock:
-            return self._ensure_reader(entry).size()
+        reader = entry.reader
+        if reader is None:
+            reader = self._ensure_reader(entry)
+        with entry.cond:
+            if entry.closed:
+                raise KeyError("unknown or closed handle %r" % handle)
+            entry.in_flight += 1
+        try:
+            return reader.size()
+        finally:
+            with entry.cond:
+                entry.in_flight -= 1
+                if entry.in_flight == 0:
+                    entry.cond.notify_all()
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -247,9 +374,19 @@ class ArchiveServer:
 
     def close(self, handle: str, *, persist_index: bool = True) -> None:
         entry = self._entry(handle)
-        with entry.lock:
+        with entry.cond:
             if entry.closed:
                 return
+            # Refuse new reads first, then drain the in-flight ones: the
+            # reader's file handle must not close under a lock-free pread
+            # (EBADF at best; with fd-number reuse, bytes from a different
+            # file at worst). Like the old entry-lock discipline, close
+            # waits for reads already admitted — but no longer blocks
+            # telemetry or other handles while it does.
+            entry.closed = True
+            while entry.in_flight:
+                entry.cond.wait()
+        with entry.lock:
             if entry.reader is not None:
                 if persist_index and entry.reader.index.finalized:
                     self.index_store.put(entry.identity, entry.reader.index)
@@ -258,7 +395,6 @@ class ArchiveServer:
                 # caches back to the budget, and leaves the server-owned
                 # executor running.
                 entry.reader.close()
-            entry.closed = True
         with self._lock:
             self._entries.pop(handle, None)
 
@@ -291,28 +427,42 @@ class ArchiveServer:
     # ------------------------------------------------------------------
 
     def metrics(self) -> Dict[str, Any]:
-        """Fleet-wide snapshot (see service/metrics.py for the layout)."""
+        """Fleet-wide snapshot (see service/metrics.py for the layout).
+
+        Lock-free with respect to reads: reader stats are atomic cache
+        snapshots and the per-entry counters sit behind their micro-lock, so
+        a telemetry poll never stalls (or is stalled by) a long read.
+        """
         reports: Dict[str, Dict[str, Any]] = {}
         per_file: Dict[str, Dict[str, Any]] = {}
         with self._lock:
             entries = list(self._entries.values())
         for entry in entries:
-            with entry.lock:
-                if entry.closed:
-                    continue
-                if entry.reader is not None:
-                    reports[entry.handle] = entry.reader.stats()
-                per_file[entry.handle] = {
-                    "tenant": entry.tenant,
-                    "reads": entry.reads,
-                    "bytes_served": entry.bytes_served,
-                    "index_was_warm": entry.index_was_warm,
-                    "opened": entry.reader is not None,
-                }
+            if entry.closed:
+                continue
+            reader = entry.reader
+            if reader is not None:
+                reports[entry.handle] = reader.stats()
+            with entry.cond:
+                reads, bytes_served = entry.reads, entry.bytes_served
+            per_file[entry.handle] = {
+                "tenant": entry.tenant,
+                "reads": reads,
+                "bytes_served": bytes_served,
+                "index_was_warm": entry.index_was_warm,
+                "opened": reader is not None,
+            }
+        with self._gauge_lock:
+            service = {
+                "reads_in_flight": self._reads_in_flight,
+                "reads_started": self._reads_started,
+                "reads_serialized": self._reads_serialized,
+            }
         return _metrics.collect(
             reader_reports=reports,
             per_file=per_file,
             pool=self.cache_pool,
             executor=self.executor,
             index_store=self.index_store,
+            service=service,
         )

@@ -68,6 +68,15 @@ def pytest_configure(config):
         "remote: remote-backend tests against the hermetic loopback range "
         "server (no external network access)",
     )
+    # Tier-2 concurrency stress: threaded/async consistency tests with
+    # internal join timeouts (select with `-m stress`). They also run in the
+    # plain tier-1 invocation — the marker exists for targeted selection and
+    # for CI lanes that want only the concurrency suite, not to hide tests.
+    config.addinivalue_line(
+        "markers",
+        "stress: tier-2 threaded/async consistency stress tests (bounded by "
+        "in-test timeouts; `-m stress` selects just these)",
+    )
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,203 @@
+"""AsyncArchiveServer: non-blocking bridge over the concurrent ArchiveServer.
+
+The async consistency test carries the tier-2 ``stress`` marker; every
+``asyncio`` entry point runs under ``asyncio.wait_for`` so a bridge
+regression (e.g. a reintroduced per-handle lock starving the front-end
+pool) fails the test instead of hanging the suite.
+"""
+
+import asyncio
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.service import ArchiveServer, AsyncArchiveServer
+
+from conftest import gzip_bytes, make_base64, make_text
+
+RUN_TIMEOUT = 60  # seconds per asyncio scenario
+
+
+def _run(coro):
+    return asyncio.run(asyncio.wait_for(coro, RUN_TIMEOUT))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0xA57)
+    data = make_text(rng, 300_000) + make_base64(rng, 300_000)
+    return data, gzip_bytes(data, 6)
+
+
+def test_async_open_read_stat_close(corpus):
+    data, comp = corpus
+
+    async def scenario():
+        async with AsyncArchiveServer(
+            cache_budget_bytes=2 << 20, max_workers=2, chunk_size=64 << 10
+        ) as srv:
+            h = await srv.open(comp, tenant="t0")
+            st = await srv.stat(h)
+            assert not st.opened  # lazy, like the sync server
+            got = await srv.read_range(h, 1000, 5000)
+            assert got == data[1000:6000]
+            assert await srv.size(h) == len(data)
+            st = await srv.stat(h)
+            assert st.opened and st.reads == 1 and st.bytes_served == 5000
+            m = srv.metrics()
+            assert m["service"]["reads_started"] == 1
+            assert m["service"]["reads_in_flight"] == 0
+            await srv.close(h)
+            with pytest.raises(KeyError):
+                await srv.read_range(h, 0, 1)
+
+    _run(scenario())
+
+
+def test_async_read_many_order_and_content(corpus):
+    data, comp = corpus
+
+    async def scenario():
+        async with AsyncArchiveServer(
+            cache_budget_bytes=2 << 20, max_workers=4, chunk_size=64 << 10,
+            front_end_threads=4,
+        ) as srv:
+            h = await srv.open(comp)
+            reqs = [(h, off, 4096) for off in (0, 250_000, 13, 599_000, 300_001)]
+            got = await srv.read_many(reqs)
+            assert got == [data[o : o + n] for _, o, n in reqs]
+
+    _run(scenario())
+
+
+def test_async_wraps_existing_server_without_owning_it(corpus):
+    data, comp = corpus
+    server = ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2)
+    try:
+
+        async def scenario():
+            async with AsyncArchiveServer(server, front_end_threads=2) as srv:
+                h = await srv.open(comp)
+                assert await srv.read_range(h, 0, 100) == data[:100]
+
+        _run(scenario())
+        # wrapper shutdown must NOT have shut the caller's server down
+        h2 = server.open(comp)
+        assert server.read_range(h2, 5, 50) == data[5:55]
+    finally:
+        server.shutdown()
+
+
+def test_async_event_loop_stays_responsive_during_first_pass(corpus):
+    """A cold size() (whole speculative first pass) runs on the bridge; the
+    event loop must keep scheduling other coroutines meanwhile."""
+    data, comp = corpus
+
+    async def scenario():
+        async with AsyncArchiveServer(
+            cache_budget_bytes=2 << 20, max_workers=2, chunk_size=32 << 10,
+            front_end_threads=2,
+        ) as srv:
+            h = await srv.open(comp)
+            ticks = 0
+
+            async def ticker():
+                nonlocal ticks
+                while True:
+                    await asyncio.sleep(0.001)
+                    ticks += 1
+
+            t = asyncio.ensure_future(ticker())
+            size = await srv.size(h)  # drives the whole first pass
+            t.cancel()
+            assert size == len(data)
+            # The loop turned over while the bridge thread did the work. A
+            # blocking bridge would leave ticks at ~0.
+            assert ticks >= 5, f"event loop starved: {ticks} ticks"
+
+    _run(scenario())
+
+
+@pytest.mark.stress
+def test_async_threaded_consistency_warm_and_cold(corpus):
+    """Concurrent coroutine clients (over the bridge) + a sync thread
+    hammering the same handle: bit-identical results, cold and warm."""
+    data, comp = corpus
+
+    for warm in (False, True):
+        server = ArchiveServer(
+            cache_budget_bytes=4 << 20, max_workers=4, chunk_size=64 << 10
+        )
+        sync_errors: list = []
+
+        async def scenario():
+            async with AsyncArchiveServer(server, front_end_threads=8) as srv:
+                h = await srv.open(comp)
+                if warm:
+                    await srv.size(h)  # finalize the index first
+
+                def sync_client():
+                    rng = np.random.default_rng(3)
+                    try:
+                        for _ in range(15):
+                            off = int(rng.integers(0, len(data)))
+                            got = server.read_range(h, off, 10_000)
+                            if got != data[off : off + 10_000]:
+                                raise AssertionError("sync client mismatch")
+                    except BaseException as exc:  # noqa: BLE001
+                        sync_errors.append(exc)
+
+                async def client(seed):
+                    rng = np.random.default_rng(seed)
+                    for _ in range(10):
+                        off = int(rng.integers(0, len(data)))
+                        got = await srv.read_range(h, off, 10_000)
+                        assert got == data[off : off + 10_000]
+
+                thread = threading.Thread(target=sync_client)
+                thread.start()
+                try:
+                    await asyncio.gather(*(client(50 + i) for i in range(8)))
+                finally:
+                    thread.join(RUN_TIMEOUT)
+                assert not thread.is_alive(), "sync client deadlocked"
+                if warm:
+                    # warm handle: nobody ever touched the frontier lock
+                    fr = srv.metrics()["fleet"]["frontier"]
+                    assert fr["lock_contended"] == 0
+
+        _run(scenario())
+        server.shutdown()
+        assert not sync_errors, sync_errors[0]
+
+
+def test_async_read_many_concurrency_actually_overlaps(corpus):
+    """read_many must fan out: with a slow blocking read underneath, total
+    time for K requests must be well under K x single-read time."""
+    _, comp = corpus
+    server = ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2)
+    h = server.open(comp)
+    server.read_range(h, 0, 1)  # open the reader eagerly
+
+    real_pread = server._entries[h].reader.pread
+
+    def slow_pread(offset, size):
+        time.sleep(0.05)
+        return real_pread(offset, size)
+
+    server._entries[h].reader.pread = slow_pread
+    try:
+
+        async def scenario():
+            async with AsyncArchiveServer(server, front_end_threads=8) as srv:
+                t0 = time.perf_counter()
+                await srv.read_many([(h, 0, 10)] * 8)
+                return time.perf_counter() - t0
+
+        dt = _run(scenario())
+        # serialized would be >= 8 * 0.05 = 0.4s; allow generous slack
+        assert dt < 0.3, f"read_many did not overlap: {dt:.3f}s"
+    finally:
+        server.shutdown()

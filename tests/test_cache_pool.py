@@ -317,3 +317,21 @@ def test_reader_close_releases_pooled_caches(rng):
         r.close()
         assert pool.bytes_held() == 0
         assert pool.snapshot()["n_caches"] == 0
+
+
+def test_insert_after_release_does_not_recharge_pool():
+    """A decompression task finishing after its reader closed (reads no
+    longer hold the entry lock, so this race is real) must not re-charge
+    the ledger of a deregistered cache — those bytes would never be
+    decharged and the budget would shrink forever."""
+    pool = CachePool(1 << 20)
+    c = pool.cache(tier=PREFETCH, tenant="t")
+    c.insert("a", bytes(1000))
+    assert pool.bytes_held(PREFETCH) == 1000
+    c.release()
+    assert pool.bytes_held(PREFETCH) == 0
+    c.insert("late", bytes(4000))  # racing task lands after release
+    c.insert_hinted("late2", bytes(4000), recompute_cost=8000)
+    assert pool.bytes_held(PREFETCH) == 0
+    assert pool.snapshot()["n_caches"] == 0
+    assert pool.tenant_stats()["t"]["bytes_held"] == 0

@@ -250,6 +250,158 @@ def test_corrupt_source_does_not_leak_pool_registrations():
         assert server.cache_pool.bytes_held() == 0
 
 
+def test_stat_is_lock_free_under_held_entry_lock(corpus):
+    """stat() must serve telemetry while the entry (lifecycle) lock is held
+    — e.g. during a long serialized read or a slow lazy open."""
+    _, comps = corpus
+    with ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2) as server:
+        h = server.open(comps[0])
+        server.read_range(h, 0, 100)  # open the reader
+        entry = server._entries[h]
+        acquired = threading.Event()
+        release = threading.Event()
+
+        def holder():
+            with entry.lock:
+                acquired.set()
+                release.wait(10)
+
+        t = threading.Thread(target=holder)
+        t.start()
+        assert acquired.wait(5)
+        try:
+            done = threading.Event()
+            result: list = []
+
+            def do_stat():
+                result.append(server.stat(h))
+                done.set()
+
+            s = threading.Thread(target=do_stat)
+            s.start()
+            # must complete promptly despite the held entry lock
+            assert done.wait(2), "stat() blocked behind the entry lock"
+            assert result[0].opened and result[0].reads == 1
+        finally:
+            release.set()
+            t.join(5)
+
+
+def test_read_range_serialized_mode_still_correct(corpus):
+    """The legacy one-cursor discipline stays available (A/B baseline) and
+    is counted separately in the service gauges."""
+    datas, comps = corpus
+    with ArchiveServer(cache_budget_bytes=2 << 20, max_workers=2,
+                       chunk_size=128 << 10) as server:
+        h = server.open(comps[0])
+        for off in (0, 100_000, 499_000, 17):
+            got = server.read_range(h, off, 5000, serialized=True)
+            assert got == datas[0][off : off + 5000]
+        got = server.read_range(h, 250_000, 5000)  # lock-free path
+        assert got == datas[0][250_000:255_000]
+        svc = server.metrics()["service"]
+        assert svc["reads_started"] == 5
+        assert svc["reads_serialized"] == 4
+        assert svc["reads_in_flight"] == 0
+
+
+def test_read_many_and_concurrent_reads_one_handle(corpus):
+    """N threads on ONE handle: byte-exact, and the metrics carry the new
+    frontier/lock sections."""
+    datas, comps = corpus
+    with ArchiveServer(cache_budget_bytes=2 << 20, max_workers=4,
+                       chunk_size=128 << 10) as server:
+        h = server.open(comps[0])
+        reqs = [(h, off, 3000) for off in (0, 77, 300_000, 499_500)]
+        assert server.read_many(reqs) == [
+            datas[0][o : o + n] for _, o, n in reqs
+        ]
+        errors: list = []
+        threads = [
+            threading.Thread(
+                target=_hammer, args=(server, [h], [datas[0]], 900 + t, 10, errors)
+            )
+            for t in range(N_CLIENTS)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not any(t.is_alive() for t in threads), "read_range deadlocked"
+        assert not errors, errors[0]
+        m = server.metrics()
+        assert m["fleet"]["frontier"]["lock_acquires"] > 0  # cold first pass
+        assert m["service"]["reads_in_flight"] == 0
+        # warm it, then hammer again: indexed reads take no frontier lock
+        server.size(h)
+        before = server.metrics()["fleet"]["frontier"]["lock_acquires"]
+        errors2: list = []
+        threads = [
+            threading.Thread(
+                target=_hammer, args=(server, [h], [datas[0]], 950 + t, 10, errors2)
+            )
+            for t in range(4)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not errors2, errors2[0]
+        after = server.metrics()["fleet"]["frontier"]
+        # the warm (finalized-index) hammer is fully lock-free
+        assert after["lock_acquires"] == before
+        assert server.stat(h).index_finalized
+
+
+def test_close_drains_in_flight_reads_before_closing_fd(corpus, tmp_path):
+    """close() racing a lock-free read must wait for it: the read either
+    completes on a live file descriptor or is refused upfront with
+    KeyError — never EBADF (or, after fd reuse, another file's bytes)."""
+    import time as _t
+
+    datas, _ = corpus
+    path = tmp_path / "race.gz"
+    path.write_bytes(_gzip.compress(datas[0], 6))
+    with ArchiveServer(cache_budget_bytes=2 << 20, max_workers=2,
+                       chunk_size=128 << 10) as server:
+        h = server.open(str(path))
+        server.read_range(h, 0, 1)  # open the reader eagerly
+        entry = server._entries[h]
+        real_pread = entry.reader.pread
+
+        started = threading.Event()
+
+        def slow_pread(offset, size):
+            started.set()
+            _t.sleep(0.15)  # close() arrives inside this window
+            return real_pread(offset, size)
+
+        entry.reader.pread = slow_pread
+        results: list = []
+        errors: list = []
+
+        def reading():
+            try:
+                results.append(server.read_range(h, 1000, 5000))
+            except BaseException as exc:  # noqa: BLE001
+                errors.append(exc)
+
+        t = threading.Thread(target=reading)
+        t.start()
+        assert started.wait(5)
+        t_close0 = _t.perf_counter()
+        server.close(h)  # must block until the in-flight read drains
+        close_dt = _t.perf_counter() - t_close0
+        t.join(10)
+        assert not t.is_alive()
+        assert not errors, errors[0]
+        assert results[0] == datas[0][1000:6000]
+        assert close_dt > 0.05, "close() did not wait for the in-flight read"
+        # and post-close reads are refused cleanly
+        with pytest.raises(KeyError):
+            server.read_range(h, 0, 10)
+
+
 def test_close_then_read_raises_cleanly(corpus):
     _, comps = corpus
     with ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2) as server:
