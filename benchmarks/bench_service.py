@@ -27,6 +27,13 @@ Emits:
 `bench_remote` (its own section in run.py) measures the remote range-GET
 backend against a latency-injected loopback server: cold vs warm index and
 a prefetch-degree sweep — see its docstring.
+
+`bench_gateway` (section "gateway" in run.py, --smoke compatible) measures
+the HTTP wire front-end: N concurrent HTTP clients vs the same traffic
+in-process (wire overhead), chunked full-stream throughput, and the
+admission-control isolation acceptance — a flooding tenant collects 429s
+while a second tenant's p99 first-byte latency stays within 2x its
+unloaded baseline.
 """
 
 from __future__ import annotations
@@ -42,6 +49,12 @@ from repro.service import ArchiveServer, IndexStore
 
 from . import common
 from .common import DataGen, emit, gzip_bytes, scale
+
+
+def _percentiles(lats):
+    """(p50, p99) seconds of a latency list — shared by every scenario."""
+    arr = np.asarray(lats)  # np.percentile partitions internally: no pre-sort
+    return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
 
 
 def _make_files(gen: DataGen, tmpdir: str, n_files: int, size: int):
@@ -196,16 +209,14 @@ def _skewed_tenants(gen: DataGen, tmpdir: str) -> None:
         if errors:
             raise errors[0]
 
-        lats = np.sort(np.asarray(latencies))
-        p50 = float(np.percentile(lats, 50))
-        p99 = float(np.percentile(lats, 99))
+        p50, p99 = _percentiles(latencies)
         results[fairness] = p99
         sched = snap["scheduler"]
         db = sched.get("dispatched_bytes_per_tenant", {})
         inter_bytes = sum(v for k, v in db.items() if k.startswith("inter"))
         emit(
             f"service_skew_{fairness}", p99 * 1e6,
-            f"p50={p50*1e3:.2f}ms p99={p99*1e3:.2f}ms reqs={len(lats)} "
+            f"p50={p50*1e3:.2f}ms p99={p99*1e3:.2f}ms reqs={len(latencies)} "
             f"batch_bytes={db.get('batch', 0)} inter_bytes={inter_bytes} "
             f"priority_dispatches={sched.get('priority_dispatches', 0)}",
         )
@@ -257,10 +268,6 @@ def _concurrent_scaling(gen: DataGen, tmpdir: str) -> None:
         server.size(h)  # finalize the index: timed reads are all indexed
         return server, h
 
-    def percentiles(lats):
-        arr = np.sort(np.asarray(lats))
-        return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
-
     results = {}
     for mode in ("locked", "lockfree"):
         server, h = make_server()
@@ -297,7 +304,7 @@ def _concurrent_scaling(gen: DataGen, tmpdir: str) -> None:
         server.shutdown()
         if errors:
             raise errors[0]
-        p50, p99 = percentiles(latencies)
+        p50, p99 = _percentiles(latencies)
         mbps = len(latencies) * req_size / wall / 1e6
         results[mode] = mbps
         fr = m["fleet"]["frontier"]
@@ -338,7 +345,7 @@ def _concurrent_scaling(gen: DataGen, tmpdir: str) -> None:
     lats = asyncio.run(async_clients())
     wall = time.perf_counter() - t0
     server.shutdown()
-    p50, p99 = percentiles(lats)
+    p50, p99 = _percentiles(lats)
     n_served = len(lats) * 4
     mbps = n_served * req_size / wall / 1e6
     emit(
@@ -447,6 +454,238 @@ def bench_remote() -> None:
             f"fetched={rs.bytes_fetched} of archive={len(blob)} "
             f"({rs.bytes_fetched/len(blob):.2f}x) requests={rs.requests}",
         )
+
+
+def bench_gateway() -> None:
+    """HTTP wire front-end vs in-process, plus admission isolation.
+
+    Emits:
+      gateway_inproc_{N}c    N threads x read_range in-process (baseline)
+      gateway_http_{N}c      same traffic as HTTP range GETs through the
+                             gateway; value = per-request p99 us, derived
+                             has p50 + aggregate MB/s
+      gateway_stream         chunked full-body stream throughput (1 client)
+      gateway_vip_p99_unloaded   interactive tenant alone
+      gateway_vip_p99_flooded    same traffic while a flooding tenant slams
+                                 the gateway into 429s; derived reports the
+                                 flood's 429 count and the acceptance check
+                                 p99_flooded <= 2x p99_unloaded
+    """
+    import http.client
+
+    from repro.service.gateway import GatewayClient, GatewayServer, TenantAdmission
+    from repro.service.gateway.admission import TenantLimit
+
+    gen = DataGen()
+    n_clients = 2 if common.SMOKE else 8
+    n_requests = 6 if common.SMOKE else 48  # per client
+    size = scale(8 << 20, floor=1 << 20)
+    req_size = 16 << 10
+    chunk_size = 128 << 10
+    data = gen.base64(size)  # decode-bound: the wire must keep workers fed
+
+    def run_threads(fn, n, *args):
+        lats: list = []
+        errors: list = []
+        lock = threading.Lock()
+
+        def worker(seed):
+            try:
+                out = fn(seed, *args)
+                with lock:
+                    lats.extend(out)
+            except BaseException as exc:  # noqa: BLE001
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(31 + i,)) for i in range(n)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        if errors:
+            raise errors[0]
+        return lats, wall
+
+    with tempfile.TemporaryDirectory(prefix="bench_gateway_") as tmpdir:
+        path = os.path.join(tmpdir, "gw.gz")
+        with open(path, "wb") as f:
+            f.write(gzip_bytes(data, 6))
+
+        server = ArchiveServer(
+            max_workers=4,
+            cache_budget_bytes=max(256 << 10, size // 8),  # keep decode hot
+            chunk_size=chunk_size,
+            reader_parallelization=4,
+        )
+        # Wire-overhead section measures the data path, not backpressure:
+        # admit all n_clients concurrently (default limits would 429 at 8).
+        open_admission = TenantAdmission(
+            max_in_flight=n_clients, max_queued=2 * n_clients
+        )
+        with GatewayServer(
+            server, stream_span=256 << 10, front_end_threads=8,
+            admission=open_admission,
+        ) as gw:
+            client = GatewayClient(gw.url, source=path)
+            handle = client.handle  # size() already drove the first pass (HEAD)
+            host, port = gw.url[len("http://"):].rsplit(":", 1)
+            port = int(port)
+
+            # -- in-process baseline --
+            def inproc_client(seed):
+                rng = np.random.default_rng(seed)
+                out = []
+                for _ in range(n_requests):
+                    off = int(rng.integers(0, max(1, len(data) - req_size)))
+                    t0 = time.perf_counter()
+                    got = server.read_range(handle, off, req_size)
+                    out.append(time.perf_counter() - t0)
+                    if got != data[off : off + len(got)]:
+                        raise AssertionError("in-process byte mismatch")
+                return out
+
+            lats, wall = run_threads(inproc_client, n_clients)
+            p50, p99 = _percentiles(lats)
+            mbps = len(lats) * req_size / wall / 1e6
+            emit(
+                f"gateway_inproc_{n_clients}c", p99 * 1e6,
+                f"p50={p50*1e3:.2f}ms p99={p99*1e3:.2f}ms {mbps:.1f}MB/s",
+            )
+
+            # -- the same traffic over the wire --
+            def http_client_fn(seed):
+                rng = np.random.default_rng(seed)
+                conn = http.client.HTTPConnection(host, port, timeout=30)
+                out = []
+                try:
+                    for _ in range(n_requests):
+                        off = int(rng.integers(0, max(1, len(data) - req_size)))
+                        t0 = time.perf_counter()
+                        conn.request(
+                            "GET", "/v1/archives/%s/bytes" % handle,
+                            headers={"Range": "bytes=%d-%d" % (off, off + req_size - 1)},
+                        )
+                        resp = conn.getresponse()
+                        got = resp.read()
+                        out.append(time.perf_counter() - t0)
+                        if resp.status != 206 or got != data[off : off + req_size]:
+                            raise AssertionError("wire byte mismatch (%d)" % resp.status)
+                finally:
+                    conn.close()
+                return out
+
+            lats, wall = run_threads(http_client_fn, n_clients)
+            p50, p99 = _percentiles(lats)
+            http_mbps = len(lats) * req_size / wall / 1e6
+            emit(
+                f"gateway_http_{n_clients}c", p99 * 1e6,
+                f"p50={p50*1e3:.2f}ms p99={p99*1e3:.2f}ms {http_mbps:.1f}MB/s "
+                f"overhead_vs_inproc={mbps/max(http_mbps,1e-9):.2f}x",
+            )
+
+            # -- chunked full stream --
+            t0 = time.perf_counter()
+            n_streamed = sum(len(c) for c in client.stream(read_size=256 << 10))
+            dt = time.perf_counter() - t0
+            assert n_streamed == len(data)
+            emit(
+                "gateway_stream", dt * 1e6,
+                f"{len(data)/dt/1e6:.1f}MB/s chunked span={len(data)}",
+            )
+            client.close()
+        server.shutdown()
+
+        # -- admission isolation: flood vs vip ------------------------------
+        adm = TenantAdmission(
+            tokens={"tf": "flood", "tv": "vip"},
+            default_tenant=None,
+            limits={"flood": TenantLimit(max_in_flight=1, max_queued=1),
+                    "vip": TenantLimit(max_in_flight=4, max_queued=8)},
+            quanta={"vip": 4.0},
+            retry_after=0.1,
+        )
+        server = ArchiveServer(
+            max_workers=2, cache_budget_bytes=512 << 10, chunk_size=chunk_size,
+        )
+        with GatewayServer(server, admission=adm, front_end_threads=4) as gw:
+            vip = GatewayClient(gw.url, source=path, token="tv")
+            flood = GatewayClient(gw.url, source=path, token="tf")
+            host, port = gw.url[len("http://"):].rsplit(":", 1)
+            port = int(port)
+            n_vip = 4 if common.SMOKE else 24
+
+            def vip_probe(seed):
+                rng = np.random.default_rng(seed)
+                conn = http.client.HTTPConnection(host, port, timeout=30)
+                out = []
+                try:
+                    for _ in range(n_vip):
+                        off = int(rng.integers(0, max(1, len(data) - req_size)))
+                        t0 = time.perf_counter()
+                        conn.request(
+                            "GET", "/v1/archives/%s/bytes" % vip.handle,
+                            headers={"Authorization": "Bearer tv",
+                                     "Range": "bytes=%d-%d" % (off, off + req_size - 1)},
+                        )
+                        resp = conn.getresponse()
+                        got = resp.read()
+                        out.append(time.perf_counter() - t0)
+                        if resp.status != 206 or len(got) != req_size:
+                            raise AssertionError("vip probe failed (%d)" % resp.status)
+                finally:
+                    conn.close()
+                return out
+
+            lats, _ = run_threads(vip_probe, 2)
+            vp50, vp99_unloaded = _percentiles(lats)
+            emit(
+                "gateway_vip_p99_unloaded", vp99_unloaded * 1e6,
+                f"p50={vp50*1e3:.2f}ms",
+            )
+
+            stop = threading.Event()
+            flood_codes: list = []
+
+            def flood_client():
+                while not stop.is_set():
+                    conn = http.client.HTTPConnection(host, port, timeout=30)
+                    try:
+                        conn.request(
+                            "GET", "/v1/archives/%s/bytes" % flood.handle,
+                            headers={"Authorization": "Bearer tf",
+                                     "Range": "bytes=0-%d" % (min(len(data), 1 << 20) - 1)},
+                        )
+                        resp = conn.getresponse()
+                        resp.read()
+                        flood_codes.append(resp.status)
+                    except OSError:
+                        pass
+                    finally:
+                        conn.close()
+
+            flooders = [threading.Thread(target=flood_client) for _ in range(4)]
+            for t in flooders:
+                t.start()
+            try:
+                lats, _ = run_threads(vip_probe, 2)
+            finally:
+                stop.set()
+                for t in flooders:
+                    t.join()
+            fp50, vp99_flooded = _percentiles(lats)
+            n_429 = sum(1 for s in flood_codes if s == 429)
+            within = vp99_flooded <= 2 * max(vp99_unloaded, 1e-9)
+            emit(
+                "gateway_vip_p99_flooded", vp99_flooded * 1e6,
+                f"p50={fp50*1e3:.2f}ms flood_429s={n_429} "
+                f"flood_served={sum(1 for s in flood_codes if s == 206)} "
+                f"isolation_ok(p99<=2x_unloaded)={within}",
+            )
+            vip.close()
+            flood.close()
+        server.shutdown()
 
 
 def main() -> None:

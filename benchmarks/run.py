@@ -26,7 +26,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default="",
-        help="comma list: components,decomp,kernels,roofline,service,remote",
+        help="comma list: components,decomp,kernels,roofline,service,remote,gateway",
     )
     ap.add_argument(
         "--smoke", action="store_true",
@@ -64,6 +64,12 @@ def main() -> None:
         # Hermetic: latency-injected loopback HTTP server, no external
         # network — safe under --smoke in CI.
         sections.append(("remote", _bench_remote_mod.bench_remote))
+    if only is None or "gateway" in only:
+        from . import bench_service as _bench_gateway_mod
+
+        # Hermetic: in-process loopback GatewayServer — wire overhead vs
+        # in-process, chunked streaming, and the flood-isolation acceptance.
+        sections.append(("gateway", _bench_gateway_mod.bench_gateway))
 
     failures = 0
     t_start = time.perf_counter()

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import threading
 import zlib as _zlib
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -166,6 +166,9 @@ class GzipChunkFetcher:
         self.strategy = prefetch_strategy or AdaptivePrefetchStrategy(self.parallelization)
 
         self._lock = threading.Lock()
+        # Flipped at shutdown: _blocking_result must stop resubmitting after
+        # its future was cancelled by the closing reader's own sweep.
+        self._closed = False
         # Prefetch strategies are stateful (stream tracking) and not required
         # to be thread-safe; concurrent positional reads reach on_access from
         # many threads at once, so the fetcher serializes strategy calls.
@@ -229,9 +232,24 @@ class GzipChunkFetcher:
         if boost is not None:
             boost(fut)
 
+    def _live_inflight_locked(self, key) -> Optional[Future]:
+        """In-flight future for ``key``, purging cancelled leftovers.
+
+        A queued task can be cancelled out from under the fetcher (gateway
+        client disconnects sweep the batch lane; executor shutdown cancels
+        everything). A cancelled task never runs ``_run_task``, so its dedup
+        entry would otherwise pin a dead future forever — every later read
+        of that chunk would join it and raise CancelledError.
+        """
+        fut = self._in_flight.get(key)
+        if fut is not None and fut.cancelled():
+            self._in_flight.pop(key, None)
+            return None
+        return fut
+
     def _submit(self, key, fn, *args, cost: Optional[int] = None, priority: bool = False) -> Future:
         with self._lock:
-            fut = self._in_flight.get(key)
+            fut = self._live_inflight_locked(key)
             if fut is not None:
                 if priority:
                     # An interactive read joined an already-queued batch task
@@ -243,6 +261,25 @@ class GzipChunkFetcher:
                                     cost=cost, priority=priority)
             self._in_flight[key] = fut
             return fut
+
+    def _blocking_result(self, key, fn, *args, cost: Optional[int] = None):
+        """Submit-and-wait with cancellation resilience: if the future we
+        joined was cancelled while queued (disconnect sweep racing a dedup),
+        re-submit instead of failing the innocent read — unless this fetcher
+        is shutting down, in which case the cancellation IS the shutdown's
+        own sweep and resubmitting would run a task against the closing
+        reader (a shared executor happily accepts submissions after a
+        view-scoped cancel; only the fetcher knows its reader is dying)."""
+        while True:
+            fut = self._submit(key, fn, *args, cost=cost, priority=True)
+            try:
+                return fut.result()
+            except CancelledError:
+                if self._closed:
+                    raise
+                with self._lock:
+                    self._live_inflight_locked(key)  # purge the dead entry
+                continue
 
     def _insert_hinted(self, cache, key, value, recompute_cost: int) -> None:
         """Cache insert carrying a recompute-cost hint when supported."""
@@ -306,7 +343,7 @@ class GzipChunkFetcher:
             if j < 0 or j >= self.n_nominal:
                 continue
             with self._lock:
-                if j in self._nominal_done or ("nom", j) in self._in_flight:
+                if j in self._nominal_done or self._live_inflight_locked(("nom", j)) is not None:
                     continue
             self._submit(
                 ("nom", j), self._task_nominal, j,
@@ -333,12 +370,17 @@ class GzipChunkFetcher:
         # A nominal prefetch covering this offset may be in flight — its
         # result is only usable if its speculative start matched exactly.
         with self._lock:
-            nom_fut = self._in_flight.get(("nom", k))
+            nom_fut = self._live_inflight_locked(("nom", k))
         if nom_fut is not None:
             # About to block an interactive read on it: pull it out of the
             # batch backlog (same inversion _submit's dedup path fixes).
             self._boost(nom_fut)
-            nom_res = nom_fut.result()
+            try:
+                nom_res = nom_fut.result()
+            except CancelledError:
+                # Swept by a disconnect between our lookup and the boost:
+                # fall through to a fresh exact task, like any other miss.
+                nom_res = None
             if nom_res is not None and nom_res.start_bit == bit_offset:
                 return nom_res
             with self._lock:
@@ -348,9 +390,8 @@ class GzipChunkFetcher:
         # this tenant's own queued prefetch backlog. Known window -> single
         # stage; unknown -> marker mode at 2x cost.
         cost = self.chunk_size if window is not None else self._nominal_cost()
-        fut = self._submit(key, self._task_exact, bit_offset, window,
-                           cost=cost, priority=True)
-        res = fut.result()
+        res = self._blocking_result(key, self._task_exact, bit_offset, window,
+                                    cost=cost)
         if res is None:
             raise RapidgzipError("exact chunk decode failed at bit %d" % bit_offset)
         return res
@@ -514,7 +555,7 @@ class GzipChunkFetcher:
         for j in targets:
             if 0 <= j < len(self.index) and self.index.chunk_output_size(j) is not None:
                 with self._lock:
-                    if ("ix", j) in self._in_flight:
+                    if self._live_inflight_locked(("ix", j)) is not None:
                         continue
                 if ("ix", j) in self.prefetch_cache or ("ix", j) in self.access_cache:
                     continue
@@ -525,10 +566,10 @@ class GzipChunkFetcher:
         val = self._cache_lookup(key)
         if val is not None:
             return val
-        # Blocking fetch: interactive lane (jumps this tenant's prefetches).
-        fut = self._submit(key, self._task_indexed, i,
-                           cost=self._indexed_cost(i), priority=True)
-        return fut.result()
+        # Blocking fetch: interactive lane (jumps this tenant's prefetches),
+        # resilient to a disconnect sweep cancelling the future it joined.
+        return self._blocking_result(key, self._task_indexed, i,
+                                     cost=self._indexed_cost(i))
 
     def put_indexed(self, i: int, data: np.ndarray) -> None:
         """Install first-pass bytes under their index key (frontier handoff).
@@ -599,6 +640,7 @@ class GzipChunkFetcher:
     # ------------------------------------------------------------------
 
     def shutdown(self) -> None:
+        self._closed = True  # before the sweep: see _blocking_result
         if self._owns_executor:
             self.pool.shutdown(wait=False, cancel_futures=True)
         else:

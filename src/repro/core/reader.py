@@ -464,6 +464,25 @@ class ParallelGzipReader(io.RawIOBase):
         b[: len(data)] = data
         return len(data)
 
+    def cancel_prefetches(self) -> int:
+        """Cancel this reader's *queued* batch-lane prefetch tasks.
+
+        Used when the consumer that motivated the speculation is gone (a
+        gateway client disconnecting mid-stream): queued prefetches are pure
+        latency-hiding — dropping them frees executor bandwidth without
+        affecting correctness, and the fetcher's dedup map resubmits on the
+        next demand fetch. Priority-lane tasks (a live read is blocking on
+        them) are never touched. Returns the number cancelled; 0 for plain
+        executors without a scoped cancel.
+        """
+        cancel_pending = getattr(self._fetcher.pool, "cancel_pending", None)
+        if cancel_pending is None:
+            return 0
+        try:
+            return cancel_pending(batch_only=True)
+        except TypeError:  # a duck-typed view without the kwarg
+            return 0
+
     def close(self) -> None:
         if not self.closed:
             try:

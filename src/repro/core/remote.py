@@ -103,6 +103,7 @@ class RemoteFileReader(FileReader):
         timeout: float = 30.0,
         headers: Optional[Dict[str, str]] = None,
         sleep: Callable[[float], None] = time.sleep,
+        block_cache: Optional[LRUCache] = None,
     ):
         if not is_remote_url(url):
             raise ValueError("not an http(s) URL: %r" % (url,))
@@ -136,8 +137,16 @@ class RemoteFileReader(FileReader):
         # (capacity in entries = blocks); hit/miss/eviction accounting comes
         # with it. The in-flight map makes block fetches single-flight:
         # worker threads racing on the same cold block wait for one range
-        # GET instead of each issuing their own.
-        self._cache = LRUCache(self._cache_blocks)
+        # GET instead of each issuing their own. An *injected* cache (the
+        # service layer passes a pool-backed one) charges these blocks —
+        # up to cache_blocks x block_size resident bytes — to the owning
+        # tenant's CachePool budget instead of sitting beside it; close()
+        # then releases it back to the pool.
+        if block_cache is not None:
+            self._cache = block_cache
+            self._cache_blocks = max(1, getattr(block_cache, "capacity", cache_blocks))
+        else:
+            self._cache = LRUCache(self._cache_blocks)
         self._inflight: Dict[int, threading.Event] = {}
         self._inflight_lock = threading.Lock()
         self.stats = RemoteStats()
@@ -225,7 +234,14 @@ class RemoteFileReader(FileReader):
                 conn.close()
             except OSError:
                 pass
-        self._cache.clear()
+        # A pool-backed injected cache must be *released* (deregistered, its
+        # bytes returned to the tenant budget), not just emptied — same
+        # duck-typed contract the chunk fetcher uses for its caches.
+        release = getattr(self._cache, "release", None)
+        if release is not None:
+            release()
+        else:
+            self._cache.clear()
 
     # -- HTTP plumbing ------------------------------------------------------
 

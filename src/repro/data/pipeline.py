@@ -9,6 +9,14 @@ remote shards stream through range-GET preads (core/remote.py) and are
 never fully downloaded; with a warm ``index_store`` a restore seeks in
 O(range) network traffic.
 
+Shards can also point at a **network gateway** (service/gateway/): a
+``gateway+http(s)://...`` URL naming a gateway ``/bytes`` endpoint, or a
+`GatewayClient` instance. Gateway shards arrive *already decompressed* —
+the archive service on the other end runs the paper's machinery and this
+pipeline does positional reads over the wire — so checkpoint restores seek
+in O(1) against the gateway's warm index, and a training fleet shares one
+central decompression tier instead of N per-host ones.
+
 Fault tolerance: the iterator state is (shard index, *decompressed byte
 offset*, partial-buffer digest) — restoring seeks in O(1) through the seek
 index instead of re-decompressing the shard prefix, the paper's random
@@ -101,7 +109,10 @@ class GzipCorpusDataset:
         if not self._my_shards:
             raise ValueError("shard_id has no shards")
         self.state = PipelineState(0, 0, 0)
-        self._reader: Optional[ParallelGzipReader] = None
+        # ParallelGzipReader for local/remote gzip shards; a plain FileReader
+        # of decompressed bytes for gateway shards (both serve pread).
+        self._reader = None
+        self._reader_owned = True  # False when the shard IS a client object
         self._reader_shard: Optional[int] = None
         self._reader_key: Optional[str] = None  # index-store key at open time
         self._token_buf = np.empty(0, np.int32)
@@ -109,12 +120,38 @@ class GzipCorpusDataset:
 
     # -- reader management ---------------------------------------------------
 
-    def _open(self, local_idx: int) -> ParallelGzipReader:
+    @staticmethod
+    def _is_gateway_shard(source) -> bool:
+        if isinstance(source, str):
+            return source.startswith(("gateway+http://", "gateway+https://"))
+        # Lazy import: only pipelines that actually use gateway shards pay it.
+        from ..service.gateway.client import GatewayClient
+
+        return isinstance(source, GatewayClient)
+
+    def _open_gateway(self, source):
+        """FileReader of a gateway shard's *decompressed* bytes.
+
+        Decompression, caching, and index reuse all happen gateway-side;
+        locally this is positional HTTP range reads — no gzip machinery, no
+        pool registration, and checkpoint restores cost one range GET.
+        """
+        if isinstance(source, str):
+            url = source[len("gateway+"):]
+            return RemoteFileReader(url, **self.remote_options), True
+        return source, False  # caller-owned GatewayClient: never close it
+
+    def _open(self, local_idx: int):
         global_idx = self._my_shards[local_idx % len(self._my_shards)]
         if self._reader is not None and self._reader_shard == global_idx:
             return self._reader
         self._close_reader()
         source = self.shards[global_idx]
+        if self._is_gateway_shard(source):
+            self._reader, self._reader_owned = self._open_gateway(source)
+            self._reader_shard = global_idx
+            self._reader_key = None  # the gateway owns the seek index
+            return self._reader
         if is_remote_url(source):
             # Open the remote backend once: the identity used for the warm
             # index lookup and the reader's reads then share one set of
@@ -156,6 +193,7 @@ class GzipCorpusDataset:
                 source.close()
             raise
         self._reader_shard = global_idx
+        self._reader_owned = True
         self._reader_key = store_key
         return self._reader
 
@@ -165,7 +203,8 @@ class GzipCorpusDataset:
             return
         if self._reader_key is not None and self._reader.index.finalized:
             self.index_store.put(self._reader_key, self._reader.index)
-        self._reader.close()
+        if self._reader_owned:
+            self._reader.close()
         self._reader = None
         self._reader_shard = None
         self._reader_key = None
@@ -243,10 +282,15 @@ class GzipCorpusDataset:
         self._close_reader()
 
     def export_indexes(self) -> Dict[int, bytes]:
-        """Seek indexes of every opened shard (reusable across restarts)."""
+        """Seek indexes of every opened shard (reusable across restarts).
+
+        Gateway shards export nothing — their index lives server-side.
+        """
         out = {}
         if self._reader is not None and self._reader_shard is not None:
-            out[self._reader_shard] = self._reader.index.to_bytes()
+            index = getattr(self._reader, "index", None)
+            if index is not None:
+                out[self._reader_shard] = index.to_bytes()
         return out
 
     def close(self) -> None:

@@ -22,6 +22,15 @@ services, `AsyncArchiveServer` bridges the same calls off the event loop:
     async with AsyncArchiveServer(cache_budget_bytes=32 << 20) as srv:
         h = await srv.open("corpus-00.json.gz", tenant="search")
         pages = await srv.read_many([(h, off, 4096) for off in offsets])
+
+For network clients, the `gateway` subpackage puts all of this behind an
+HTTP/1.1 wire protocol (range reads, chunked streaming, cancellation
+propagation, per-tenant admission control) with a FileReader-shaped client:
+
+    from repro.service.gateway import GatewayServer, GatewayClient
+
+    with GatewayServer(cache_budget_bytes=32 << 20) as gw:
+        page = GatewayClient(gw.url, source="corpus-00.json.gz").pread(0, 4096)
 """
 
 from .async_server import AsyncArchiveServer
@@ -30,15 +39,27 @@ from .index_store import IndexStore, IndexStoreStats, file_identity
 from .metrics import aggregate_reader_reports, collect, format_summary
 from .scheduler import FairExecutor, TenantExecutor
 from .server import ArchiveServer, ArchiveStat
+from .gateway import (  # noqa: E402 - gateway builds on the modules above
+    AdmissionDenied,
+    GatewayClient,
+    GatewayError,
+    GatewayServer,
+    TenantAdmission,
+)
 
 __all__ = [
     "ACCESS",
     "PREFETCH",
+    "AdmissionDenied",
     "ArchiveServer",
     "ArchiveStat",
     "AsyncArchiveServer",
     "CachePool",
     "FairExecutor",
+    "GatewayClient",
+    "GatewayError",
+    "GatewayServer",
+    "TenantAdmission",
     "IndexStore",
     "IndexStoreStats",
     "PooledCache",

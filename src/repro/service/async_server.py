@@ -25,6 +25,21 @@ flows through the shared FairExecutor underneath with its per-tenant
 fairness intact. Bridge threads are cheap (they sleep on futures), so
 ``front_end_threads`` bounds front-end concurrency, not CPU.
 
+**Cancellation propagates into the bridge.** Awaiting coroutines get
+cancelled (client disconnects, timeouts, gather siblings failing); the
+bridged call must not keep consuming a bridge thread on behalf of a caller
+that is gone. Every bridged await therefore:
+
+  * cancels the underlying ``concurrent.futures`` future on
+    ``asyncio.CancelledError`` — a call still *queued* for the bridge never
+    starts, so a burst of abandoned requests cannot occupy bridge threads
+    it no longer wants (the ``bridge_stats()['cancelled']`` counter is the
+    audit trail);
+  * a call already *running* finishes on its bridge thread (blocking reads
+    are not preemptible) and its result is dropped — but ``read_many``
+    cancels its still-queued siblings as soon as any range fails, so one
+    bad range no longer leaks K-1 bridge occupancies past the await.
+
     from repro.service import AsyncArchiveServer
 
     async with AsyncArchiveServer(cache_budget_bytes=64 << 20) as srv:
@@ -36,6 +51,7 @@ fairness intact. Bridge threads are cheap (they sleep on futures), so
 from __future__ import annotations
 
 import asyncio
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -68,6 +84,13 @@ class AsyncArchiveServer:
             thread_name_prefix="archive-async",
         )
         self._closed = False
+        # Bridge-side cancel accounting: submitted awaits, calls that
+        # actually started on a bridge thread, and cancels that landed while
+        # still queued (those never start — the regression tests' invariant).
+        self._bridge_lock = threading.Lock()
+        self._bridge_submitted = 0
+        self._bridge_started = 0
+        self._bridge_cancelled = 0
 
     @property
     def server(self) -> ArchiveServer:
@@ -78,24 +101,67 @@ class AsyncArchiveServer:
     # bridge
     # ------------------------------------------------------------------
 
-    def _run(self, fn, *args, **kwargs):
+    def _bridged_call(self, fn, *args, **kwargs):
+        with self._bridge_lock:
+            self._bridge_started += 1
+        return fn(*args, **kwargs)
+
+    async def _run(self, fn, *args, **kwargs):
+        """Await ``fn(*args)`` on the bridge, propagating cancellation.
+
+        Unlike a bare ``loop.run_in_executor`` await, a cancelled await here
+        *guarantees* ``future.cancel()`` is attempted on the bridged future
+        and books the outcome: a still-queued call never reaches a bridge
+        thread at all. (A call already running completes and is dropped —
+        blocking reads cannot be preempted mid-decompression.)
+        """
         if self._closed:
             raise RuntimeError("AsyncArchiveServer is closed")
-        loop = asyncio.get_running_loop()
-        return loop.run_in_executor(self._bridge, partial(fn, *args, **kwargs))
+        # Book the submission *before* handing it to the pool: a fast bridge
+        # thread could otherwise bump `started` first and a concurrent
+        # telemetry poll would transiently see started > submitted.
+        with self._bridge_lock:
+            self._bridge_submitted += 1
+        try:
+            fut = self._bridge.submit(partial(self._bridged_call, fn, *args, **kwargs))
+        except BaseException:
+            with self._bridge_lock:
+                self._bridge_submitted -= 1
+            raise
+        try:
+            return await asyncio.wrap_future(fut)
+        except asyncio.CancelledError:
+            if fut.cancel():
+                with self._bridge_lock:
+                    self._bridge_cancelled += 1
+            raise
+
+    def bridge_stats(self) -> Dict[str, int]:
+        """{submitted, started, cancelled} for the front-end bridge. At
+        quiescence ``submitted == started + cancelled`` — no bridged call is
+        ever both cancelled-while-queued and run."""
+        with self._bridge_lock:
+            return {
+                "submitted": self._bridge_submitted,
+                "started": self._bridge_started,
+                "cancelled": self._bridge_cancelled,
+            }
 
     # ------------------------------------------------------------------
     # request API
     # ------------------------------------------------------------------
 
-    async def open(self, source, *, tenant: str = "default") -> str:
+    async def open(
+        self, source, *, tenant: str = "default", quantum: Optional[float] = None
+    ) -> str:
         """Register a source (lazy reader creation, like the sync server).
 
         Pure registry work — runs inline, no executor round-trip.
+        ``quantum`` forwards to the sync server's weighted-DRR knob.
         """
         if self._closed:
             raise RuntimeError("AsyncArchiveServer is closed")
-        return self._server.open(source, tenant=tenant)
+        return self._server.open(source, tenant=tenant, quantum=quantum)
 
     async def read_range(self, handle: str, offset: int, size: int) -> bytes:
         """Decompressed [offset, offset+size) without blocking the loop."""
@@ -109,20 +175,39 @@ class AsyncArchiveServer:
         Results keep request order. Concurrency = min(len(requests),
         front_end_threads) at the bridge; the decompression itself fans out
         further through the shared executor. Any failed range fails the
-        batch (``asyncio.gather`` default) — issue individually if partial
-        results are wanted.
+        batch — and, unlike a bare ``asyncio.gather``, the batch's other
+        still-pending awaits are cancelled immediately (queued bridge calls
+        never start), so one bad range cannot keep occupying bridge threads
+        on work whose result nobody will read. Issue ranges individually if
+        partial results are wanted.
         """
-        return list(
-            await asyncio.gather(
-                *(self.read_range(h, off, size) for h, off, size in requests)
-            )
-        )
+        tasks = [
+            asyncio.ensure_future(self.read_range(h, off, size))
+            for h, off, size in requests
+        ]
+        try:
+            return list(await asyncio.gather(*tasks))
+        except BaseException:
+            # First failure (or our own cancellation): reap the siblings.
+            for t in tasks:
+                t.cancel()
+            await asyncio.gather(*tasks, return_exceptions=True)
+            raise
 
     async def stat(self, handle: str) -> ArchiveStat:
         """Handle snapshot — lock-free in the sync server, so served inline."""
         if self._closed:
             raise RuntimeError("AsyncArchiveServer is closed")
         return self._server.stat(handle)
+
+    async def cancel_queued(self, handle: str) -> int:
+        """Drop the handle's queued prefetch backlog (disconnect cleanup).
+
+        A brief scheduler-lock sweep, never a blocking wait — served inline.
+        """
+        if self._closed:
+            raise RuntimeError("AsyncArchiveServer is closed")
+        return self._server.cancel_queued(handle)
 
     async def size(self, handle: str) -> int:
         """Decompressed size (may drive a whole first pass: bridged)."""

@@ -1,0 +1,226 @@
+"""GatewayClient — the FileReader contract spoken over the gateway wire.
+
+Management verbs (open/stat/close/metrics) are thin one-shot JSON calls;
+the data path *is* `core.remote.RemoteFileReader` pointed at the handle's
+``/bytes`` endpoint. That is deliberate, not lazy: the bytes endpoint
+speaks exactly the single-range dialect the remote backend already
+implements (206/416, ``Content-Range``, ``ETag`` + ``If-Range``, bounded
+retry with backoff on 429/5xx), so the gateway inherits a battle-tested
+client and — the chaining dividend — anything that can read a remote
+object can read a gateway: ``ArchiveServer.open(gw.bytes_url(h))`` makes a
+second-tier archive service front a first-tier gateway with zero new code.
+
+What the wrapper adds on top of the inner remote reader:
+
+  * ``open`` semantics: constructing with ``source=`` POSTs the archive
+    open and owns the handle (``close()`` DELETEs it); constructing with
+    ``handle=`` attaches to an existing handle and leaves its lifetime to
+    the owner.
+  * ``stream()``: the chunked full-body read (one ``GET`` without
+    ``Range``), yielded incrementally — the acceptance path for "bytes
+    identical over a chunked stream", and the easiest way to *abandon* a
+    stream mid-flight (closing the generator drops the connection, which
+    is precisely the cancellation signal the gateway tests exercise).
+  * bearer-token auth on every request (``token=``).
+
+`GatewayClient` is a `FileReader`: ``pread``/``size``/``identity``/``view``
+satisfy the same contract suite as the bytes/mmap/python/remote backends
+(tests/test_filereader_contract.py) — over a live socket.
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+import time
+import urllib.parse
+from typing import Any, Dict, Iterator, Optional
+
+from ...core.errors import RemoteIOError
+from ...core.filereader import FileReader, check_pread_args
+from ...core.remote import RemoteFileReader
+
+
+class GatewayError(RemoteIOError):
+    """A gateway management verb failed (non-2xx status)."""
+
+    def __init__(self, status: int, message: str):
+        super().__init__("HTTP %d: %s" % (status, message))
+        self.status = status
+
+
+class GatewayClient(FileReader):
+    """Positioned reads of an archive's *decompressed* bytes via a gateway.
+
+    ``GatewayClient(url, source="/data/x.gz")`` opens (and owns) a handle;
+    ``GatewayClient(url, handle="f3")`` attaches to one opened elsewhere.
+    Extra keyword arguments tune the inner `RemoteFileReader` (block_size,
+    cache_blocks, retry/backoff, timeout).
+    """
+
+    def __init__(
+        self,
+        base_url: str,
+        source: Optional[str] = None,
+        *,
+        handle: Optional[str] = None,
+        token: Optional[str] = None,
+        tenant: Optional[str] = None,
+        timeout: float = 30.0,
+        **remote_options: Any,
+    ):
+        if (source is None) == (handle is None):
+            raise ValueError("pass exactly one of source= or handle=")
+        split = urllib.parse.urlsplit(base_url)
+        if split.scheme not in ("http", "https") or not split.netloc:
+            raise ValueError("not a gateway base URL: %r" % (base_url,))
+        self._base = base_url.rstrip("/")
+        self._scheme = split.scheme
+        self._netloc = split.netloc
+        self._timeout = timeout
+        self._headers: Dict[str, str] = {}
+        if token is not None:
+            self._headers["Authorization"] = "Bearer %s" % token
+        self._closed = False
+        self._remote: Optional[RemoteFileReader] = None
+
+        if source is not None:
+            spec: Dict[str, Any] = {"source": source}
+            if tenant is not None:
+                spec["tenant"] = tenant
+            status, payload = self._request("POST", "/v1/archives", spec)
+            handle = payload["handle"]
+            self.tenant = payload.get("tenant")
+            self._owns_handle = True
+        else:
+            self.tenant = tenant
+            self._owns_handle = False
+        self.handle = handle
+        self._bytes_path = "/v1/archives/%s/bytes" % handle
+        try:
+            # The inner reader's open-time HEAD captures decompressed size +
+            # ETag; on a cold archive that HEAD drives the speculative first
+            # pass server-side (the price of knowing Content-Length).
+            self._remote = RemoteFileReader(
+                self._base + self._bytes_path,
+                headers=dict(self._headers),
+                timeout=timeout,
+                **remote_options,
+            )
+        except BaseException:
+            self.close()
+            raise
+
+    # -- FileReader contract -------------------------------------------------
+
+    def size(self) -> int:
+        return self._remote.size()
+
+    def pread(self, offset: int, size: int) -> bytes:
+        check_pread_args(offset, size)
+        if self._closed:
+            raise ValueError("pread on closed GatewayClient")
+        return self._remote.pread(offset, size)
+
+    def identity(self) -> Optional[str]:
+        return self._remote.identity()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            if self._remote is not None:
+                self._remote.close()
+        finally:
+            if self._owns_handle:
+                # A 429 here means our tenant is momentarily at its
+                # admission limit — retry briefly rather than silently
+                # leaking the server-side handle (reader + pool-charged
+                # cache bytes stay alive until gateway shutdown otherwise).
+                for attempt in range(4):
+                    try:
+                        self._request("DELETE", "/v1/archives/%s" % self.handle)
+                        break
+                    except GatewayError as exc:
+                        if exc.status != 429 or attempt == 3:
+                            break  # already closed / gone / retries spent
+                        time.sleep(0.25 * (attempt + 1))
+                    except (OSError, http.client.HTTPException):
+                        break  # gateway already gone
+
+    # -- gateway extras ------------------------------------------------------
+
+    @property
+    def etag(self) -> Optional[str]:
+        return self._remote.etag
+
+    @property
+    def remote_stats(self):
+        """Inner RemoteFileReader network counters (requests/retries/bytes)."""
+        return self._remote.stats
+
+    def stream(self, *, read_size: int = 64 << 10) -> Iterator[bytes]:
+        """Yield the whole decompressed body incrementally (chunked 200).
+
+        Uses a dedicated connection so an abandoned generator (``close()``
+        or ``break``) drops the socket — which the gateway observes as a
+        mid-stream disconnect and turns into end-to-end cancellation.
+        """
+        if self._closed:
+            raise ValueError("stream on closed GatewayClient")
+        conn = self._connect()
+        try:
+            conn.request("GET", self._bytes_path, headers=dict(self._headers))
+            resp = conn.getresponse()
+            if resp.status != 200:
+                raise GatewayError(resp.status, resp.read().decode(errors="replace"))
+            while True:
+                data = resp.read(read_size)
+                if not data:
+                    return
+                yield data
+        finally:
+            conn.close()
+
+    def stat(self) -> Dict[str, Any]:
+        status, payload = self._request(
+            "GET", "/v1/archives/%s/stat" % self.handle
+        )
+        return payload
+
+    def metrics(self) -> Dict[str, Any]:
+        status, payload = self._request("GET", "/v1/metrics")
+        return payload
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _connect(self) -> http.client.HTTPConnection:
+        cls = (
+            http.client.HTTPSConnection
+            if self._scheme == "https"
+            else http.client.HTTPConnection
+        )
+        return cls(self._netloc, timeout=self._timeout)
+
+    def _request(self, method: str, path: str, payload: Optional[Dict] = None):
+        """One-shot management call; returns (status, decoded JSON body)."""
+        body = json.dumps(payload).encode() if payload is not None else None
+        headers = dict(self._headers)
+        if body is not None:
+            headers["Content-Type"] = "application/json"
+        conn = self._connect()
+        try:
+            conn.request(method, path, body=body, headers=headers)
+            resp = conn.getresponse()
+            raw = resp.read()
+            if resp.status >= 400:
+                try:
+                    message = json.loads(raw.decode() or "{}").get("error", "")
+                except (ValueError, UnicodeDecodeError):
+                    message = raw.decode(errors="replace")
+                raise GatewayError(resp.status, message)
+            decoded = json.loads(raw.decode()) if raw else None
+            return resp.status, decoded
+        finally:
+            conn.close()

@@ -151,10 +151,11 @@ def format_summary(snapshot: Mapping[str, Any]) -> str:
     sched = snapshot.get("scheduler")
     if sched:
         lines.append(
-            "scheduler[%s]: %d workers, %d/%d tasks done, %d queued,"
-            " %d priority dispatches, dispatch=%s"
+            "scheduler[%s]: %d workers, %d/%d tasks done (%d cancelled),"
+            " %d queued, %d priority dispatches, dispatch=%s"
             % (sched.get("fairness", "drr"), sched["max_workers"],
-               sched["done"], sched["submitted"], sched["queued"],
+               sched["done"], sched["submitted"], sched.get("cancelled", 0),
+               sched["queued"],
                sched.get("priority_dispatches", 0), sched["dispatch_per_tenant"])
         )
         db = sched.get("dispatched_bytes_per_tenant", {})
@@ -170,5 +171,19 @@ def format_summary(snapshot: Mapping[str, Any]) -> str:
         lines.append(
             "index store: %d hits, %d misses, %d puts"
             % (store["hits"], store["misses"], store["puts"])
+        )
+    gateway = snapshot.get("gateway")
+    if gateway is not None:
+        bridge = snapshot.get("bridge", {})
+        lines.append(
+            "gateway: %d requests (%d opened, %d reads, %d streams),"
+            " %d x 429, %d disconnects, bridge %d/%d started (%d cancelled)"
+            % (gateway.get("requests", 0), gateway.get("opened", 0),
+               gateway.get("reads", 0), gateway.get("streams", 0),
+               gateway.get("rejected_429", 0),
+               gateway.get("disconnects_mid_stream", 0)
+               + gateway.get("disconnects_mid_request", 0),
+               bridge.get("started", 0), bridge.get("submitted", 0),
+               bridge.get("cancelled", 0))
         )
     return "\n".join(lines)

@@ -25,6 +25,20 @@ unchanged — priority cuts the line only within its own tenant, so a tenant
 cannot buy extra bandwidth by marking everything interactive (its deficit
 still pays full byte cost).
 
+Tenants can carry **weighted quanta** (``set_tenant_quantum(tenant,
+factor)``): each replenishment pass credits that tenant ``factor x
+quantum_bytes`` instead of one flat quantum, so a paying tenant with factor
+2.0 receives ~2x the decompression bandwidth of a factor-1.0 tenant under
+contention — classic weighted DRR, threaded through
+``ArchiveServer.open(..., quantum=...)`` and the gateway's tenant config.
+
+Accounting invariant (enforced by tests and the gateway's disconnect
+handling): ``submitted == done + cancelled + queued`` at quiescence —
+``done`` counts tasks that actually ran, ``cancelled`` counts tasks whose
+future was cancelled while queued (they never execute), ``queued`` what
+still waits. A client abandoning a request can therefore never orphan a
+task: it either runs, or it is accounted cancelled.
+
 ``fairness="task_rr"`` restores the legacy task-count round-robin (costs and
 lanes ignored) so the two disciplines can be A/B-measured — see
 benchmarks/bench_service.py's skewed-tenant scenario.
@@ -123,10 +137,12 @@ class FairExecutor:
         self._shutdown = False
         self._seq = 0
         self._tasks_done = 0
+        self._tasks_cancelled = 0  # cancelled while queued: never ran
         self._tasks_submitted = 0
         self._priority_dispatches = 0
         self._dispatch_per_tenant: Dict[str, int] = {}
         self._dispatched_bytes_per_tenant: Dict[str, int] = {}
+        self._tenant_quanta: Dict[str, float] = {}
         self._threads = [
             threading.Thread(
                 target=self._worker, name=f"{thread_name_prefix}-{i}", daemon=True
@@ -165,6 +181,20 @@ class FairExecutor:
 
     def view(self, tenant: str) -> "TenantExecutor":
         return TenantExecutor(self, tenant)
+
+    def set_tenant_quantum(self, tenant: str, factor: float) -> None:
+        """Weighted DRR: scale ``tenant``'s per-pass deficit replenishment to
+        ``factor * quantum_bytes`` (default 1.0). Under contention a tenant's
+        long-run share of dispatched decompression bytes is proportional to
+        its factor — the "paying tenants get a larger quantum" knob."""
+        if factor <= 0:
+            raise ValueError("quantum factor must be > 0")
+        with self._cond:
+            self._tenant_quanta[tenant] = float(factor)
+
+    def _quantum_of(self, tenant: str) -> int:
+        # Called under self._cond.
+        return max(1, int(self.quantum_bytes * self._tenant_quanta.get(tenant, 1.0)))
 
     def boost(self, fut: Future, tenant: Optional[str] = None) -> bool:
         """Move a still-queued task into its tenant's priority lane.
@@ -228,7 +258,7 @@ class FairExecutor:
                 best = (0, tenant)
                 break
             head = q.head(self.fairness)
-            passes = max(0, -(-(head.cost - q.deficit) // self.quantum_bytes))
+            passes = max(0, -(-(head.cost - q.deficit) // self._quantum_of(tenant)))
             if passes == 0:
                 best = (0, tenant)
                 break  # affordable now, and first in RR order
@@ -239,7 +269,9 @@ class FairExecutor:
         passes, tenant = best
         if passes:
             for t in nonempty:
-                self._queues[t].deficit += passes * self.quantum_bytes
+                # Weighted DRR: each pass credits a tenant its own quantum,
+                # so dispatched-byte shares track the configured factors.
+                self._queues[t].deficit += passes * self._quantum_of(t)
         q = self._queues[tenant]
         task = q.head(self.fairness)
         q.pop(task)
@@ -277,10 +309,11 @@ class FairExecutor:
                     task = self._next_task_locked()
             fut = task.future
             if not fut.set_running_or_notify_cancel():
-                # Cancelled while queued: still a terminal outcome — count it
-                # as done or snapshot()'s submitted/done/queued books drift.
+                # Cancelled while queued: still a terminal outcome — book it
+                # under `cancelled` or snapshot()'s submitted == done +
+                # cancelled + queued invariant drifts.
                 with self._cond:
-                    self._tasks_done += 1
+                    self._tasks_cancelled += 1
                 continue
             try:
                 result = task.fn(*task.args, **task.kwargs)
@@ -300,31 +333,36 @@ class FairExecutor:
             q = self._queues.get(tenant)
             if q:
                 for task in q.drain():
-                    if task.future.cancel():
-                        cancelled += 1
-                    # Dequeued without running: terminal either way — count
-                    # it done or snapshot()'s books drift.
-                    self._tasks_done += 1
+                    # Dequeued without running: terminal either way. A future
+                    # the owner already cancelled directly still books here
+                    # (it can no longer reach a worker).
+                    task.future.cancel()
+                    cancelled += 1
+                    self._tasks_cancelled += 1
         return cancelled
 
-    def cancel_view(self, view: object) -> int:
+    def cancel_view(self, view: object, *, batch_only: bool = False) -> int:
         """Cancel queued tasks submitted through one TenantExecutor view.
 
         Scoped narrower than cancel_tenant: a tenant may have several
         readers open; closing one must not cancel the others' work.
+        ``batch_only=True`` restricts the sweep to the batch lane — queued
+        *prefetches* — leaving priority-lane tasks (someone is blocking on
+        those right now) untouched; this is what the gateway uses when a
+        client disconnects mid-stream.
         """
         cancelled = 0
         with self._cond:
             for q in self._queues.values():
-                for lane in (q.pri, q.batch):
+                for lane in ((q.batch,) if batch_only else (q.pri, q.batch)):
                     if not any(task.view is view for task in lane):
                         continue
                     keep = []
                     for task in lane:
                         if task.view is view:
-                            if task.future.cancel():
-                                cancelled += 1
-                            self._tasks_done += 1  # removed from queue: terminal
+                            task.future.cancel()
+                            cancelled += 1
+                            self._tasks_cancelled += 1  # dequeued: terminal
                         else:
                             keep.append(task)
                     lane.clear()
@@ -338,7 +376,7 @@ class FairExecutor:
                 for q in self._queues.values():
                     for task in q.drain():
                         task.future.cancel()
-                        self._tasks_done += 1
+                        self._tasks_cancelled += 1
             self._cond.notify_all()
         if wait:
             for t in self._threads:
@@ -352,10 +390,12 @@ class FairExecutor:
                 "quantum_bytes": self.quantum_bytes,
                 "submitted": self._tasks_submitted,
                 "done": self._tasks_done,
+                "cancelled": self._tasks_cancelled,
                 "queued": sum(len(q) for q in self._queues.values()),
                 "priority_dispatches": self._priority_dispatches,
                 "dispatch_per_tenant": dict(self._dispatch_per_tenant),
                 "dispatched_bytes_per_tenant": dict(self._dispatched_bytes_per_tenant),
+                "tenant_quanta": dict(self._tenant_quanta),
                 "deficit_per_tenant": {
                     t: q.deficit for t, q in self._queues.items() if len(q)
                 },
@@ -412,6 +452,7 @@ class TenantExecutor:
         if cancel_futures:
             self._parent.cancel_view(self)
 
-    def cancel_pending(self) -> int:
-        """Cancel this view's queued tasks (fetcher shutdown hook)."""
-        return self._parent.cancel_view(self)
+    def cancel_pending(self, *, batch_only: bool = False) -> int:
+        """Cancel this view's queued tasks (fetcher shutdown hook); with
+        ``batch_only`` only the prefetch backlog (gateway disconnects)."""
+        return self._parent.cancel_view(self, batch_only=batch_only)

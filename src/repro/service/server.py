@@ -59,7 +59,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from ..core.reader import ParallelGzipReader
 from ..core.remote import RemoteFileReader, is_remote_url
 from . import metrics as _metrics
-from .cache_pool import CachePool
+from .cache_pool import PREFETCH, CachePool
 from .index_store import IndexStore, file_identity
 from .scheduler import FairExecutor
 
@@ -76,6 +76,10 @@ class ArchiveStat:
     index_was_warm: bool  # True when the open hit the IndexStore
     reads: int
     bytes_served: int
+    #: IndexStore.file_identity hex key (None until the reader opened) —
+    #: the gateway derives the wire ETag from this, so a replaced source
+    #: revalidates exactly like the index store re-keys.
+    identity: Optional[str] = None
 
     def as_dict(self) -> Dict[str, Any]:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -122,12 +126,14 @@ class ArchiveServer:
         fairness: str = "drr",
         quantum_bytes: Optional[int] = None,
         tenant_weights: Optional[Dict[str, float]] = None,
+        tenant_quanta: Optional[Dict[str, float]] = None,
         remote_options: Optional[Dict[str, Any]] = None,
     ):
         #: kwargs forwarded to every RemoteFileReader the server opens for
         #: http(s):// sources: auth headers, block_size/cache_blocks,
-        #: timeout, retry tuning. NB the remote block caches are per-reader
-        #: and sit outside the CachePool byte budget (see ROADMAP).
+        #: timeout, retry tuning. The remote block caches themselves are
+        #: pool-backed (prefetch tier, cache_blocks entries), so their
+        #: resident bytes count against the owning tenant's shared budget.
         self.remote_options = dict(remote_options or {})
         self.cache_pool = CachePool(
             cache_budget_bytes,
@@ -144,6 +150,11 @@ class ArchiveServer:
             fairness=fairness,
             quantum_bytes=quantum_bytes if quantum_bytes is not None else max(1, chunk_size // 4),
         )
+        # Weighted DRR: a tenant's per-pass deficit replenishment scales
+        # with its factor (paying tenants get a larger quantum). Also
+        # settable per-open via ``open(..., quantum=...)``.
+        for tenant, factor in (tenant_quanta or {}).items():
+            self.executor.set_tenant_quantum(tenant, factor)
         self.index_store = index_store if index_store is not None else IndexStore()
         self.chunk_size = chunk_size
         self.reader_parallelization = reader_parallelization
@@ -167,13 +178,21 @@ class ArchiveServer:
     # registry
     # ------------------------------------------------------------------
 
-    def open(self, source, *, tenant: str = "default") -> str:
+    def open(
+        self, source, *, tenant: str = "default", quantum: Optional[float] = None
+    ) -> str:
         """Register a gzip source; the reader is created lazily on first use.
 
         ``source`` is anything `ParallelGzipReader` accepts: a path, bytes,
         an ``http(s)://`` URL (served via range-GET preads, never fully
-        downloaded), or a FileReader.
+        downloaded), or a FileReader. ``quantum`` optionally (re)sets the
+        tenant's weighted-DRR quantum factor (see
+        `FairExecutor.set_tenant_quantum`) — a per-open convenience for
+        callers that learn the tenant's service class at open time (the
+        gateway's admission control does).
         """
+        if quantum is not None:
+            self.executor.set_tenant_quantum(tenant, quantum)
         with self._lock:
             if self._closed:
                 raise RuntimeError("server is closed")
@@ -200,13 +219,23 @@ class ArchiveServer:
             if entry.reader is not None:
                 return entry.reader
             source = entry.source
-            if is_remote_url(source):
-                # Open the remote backend once: the identity probe and the
-                # reader then share one set of open-time validators (and one
-                # HEAD), and `ParallelGzipReader.close` owns its lifetime.
-                source = RemoteFileReader(source, **self.remote_options)
-            access_cache = prefetch_cache = None
+            access_cache = prefetch_cache = block_cache = None
             try:
+                if is_remote_url(source):
+                    # Open the remote backend once: the identity probe and
+                    # the reader then share one set of open-time validators
+                    # (and one HEAD), and `ParallelGzipReader.close` owns its
+                    # lifetime. Its block cache is pool-backed, so the
+                    # cache_blocks x block_size of readahead bytes are
+                    # charged to this tenant's shared budget (prefetch tier)
+                    # instead of sitting beside it.
+                    opts = dict(self.remote_options)
+                    block_cache = self.cache_pool.cache(
+                        tier=PREFETCH,
+                        tenant=entry.tenant,
+                        capacity=int(opts.pop("cache_blocks", 16)),
+                    )
+                    source = RemoteFileReader(source, block_cache=block_cache, **opts)
                 entry.identity = file_identity(source)
                 index = self.index_store.get(entry.identity)
                 entry.index_was_warm = index is not None
@@ -236,6 +265,8 @@ class ArchiveServer:
                 if access_cache is not None:
                     access_cache.release()
                     prefetch_cache.release()
+                if block_cache is not None:
+                    block_cache.release()  # idempotent if close() already did
                 if source is not entry.source:
                     source.close()
                 raise
@@ -335,6 +366,7 @@ class ArchiveServer:
             index_was_warm=entry.index_was_warm,
             reads=reads,
             bytes_served=bytes_served,
+            identity=entry.identity,
         )
 
     def size(self, handle: str) -> int:
@@ -359,6 +391,26 @@ class ArchiveServer:
                 entry.in_flight -= 1
                 if entry.in_flight == 0:
                     entry.cond.notify_all()
+
+    def cancel_queued(self, handle: str) -> int:
+        """Cancel the handle's queued batch-lane prefetch tasks, if idle.
+
+        The gateway calls this when a client disconnects mid-stream: the
+        speculation that client motivated should stop consuming executor
+        bandwidth. Scoped to the handle's reader view and to the *batch*
+        lane only, and skipped entirely while other reads are in flight on
+        the handle (their latency-hiding prefetches stay). Cancelled tasks
+        are booked under the executor's ``cancelled`` counter, so
+        ``submitted == done + cancelled + queued`` always balances.
+        """
+        entry = self._entry(handle)
+        reader = entry.reader
+        if reader is None:
+            return 0
+        with entry.cond:
+            if entry.closed or entry.in_flight:
+                return 0
+        return reader.cancel_prefetches()
 
     # ------------------------------------------------------------------
     # lifecycle

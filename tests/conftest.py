@@ -77,6 +77,14 @@ def pytest_configure(config):
         "stress: tier-2 threaded/async consistency stress tests (bounded by "
         "in-test timeouts; `-m stress` selects just these)",
     )
+    # Gateway tests talk HTTP only to an in-process loopback GatewayServer
+    # (src/repro/service/gateway/) — hermetic like the `remote` marker, so
+    # tier-1 stays offline-safe; `-m gateway` selects just the wire suite.
+    config.addinivalue_line(
+        "markers",
+        "gateway: HTTP gateway tests against an in-process loopback "
+        "GatewayServer (no external network access)",
+    )
 
 
 @pytest.fixture(scope="session")

@@ -173,6 +173,99 @@ def test_async_threaded_consistency_warm_and_cold(corpus):
         assert not sync_errors, sync_errors[0]
 
 
+def test_cancelled_await_never_leaks_a_bridge_thread(corpus):
+    """Regression (gateway cancellation): cancelling an await whose bridged
+    call is still *queued* must cancel the underlying future — the call
+    never starts on a bridge thread, and the books prove it
+    (submitted == started + cancelled)."""
+    data, comp = corpus
+    server = ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2)
+    h = server.open(comp)
+    server.read_range(h, 0, 1)  # open the reader eagerly
+
+    real_pread = server._entries[h].reader.pread
+    release = threading.Event()
+
+    def slow_pread(offset, size):
+        release.wait(RUN_TIMEOUT)
+        return real_pread(offset, size)
+
+    server._entries[h].reader.pread = slow_pread
+    try:
+
+        async def scenario():
+            # One bridge thread: the first read occupies it, the rest queue.
+            async with AsyncArchiveServer(server, front_end_threads=1) as srv:
+                first = asyncio.ensure_future(srv.read_range(h, 0, 10))
+                await asyncio.sleep(0.05)  # first is now *running* on the bridge
+                queued = [
+                    asyncio.ensure_future(srv.read_range(h, i, 10))
+                    for i in range(1, 5)
+                ]
+                await asyncio.sleep(0.05)  # all four submitted, none started
+                for task in queued:
+                    task.cancel()
+                await asyncio.gather(*queued, return_exceptions=True)
+                stats = srv.bridge_stats()
+                assert stats["cancelled"] == 4, stats
+                # started counts only the occupying call (+1 for the later
+                # verification read): cancelled calls never ran.
+                release.set()
+                assert await first == data[:10]
+                server._entries[h].reader.pread = real_pread
+                assert await srv.read_range(h, 5, 10) == data[5:15]
+                stats = srv.bridge_stats()
+                assert stats["submitted"] == stats["started"] + stats["cancelled"]
+                assert stats["started"] == 2, stats
+
+        _run(scenario())
+    finally:
+        release.set()
+        server.shutdown()
+
+
+def test_read_many_failure_cancels_queued_siblings(corpus):
+    """One bad range fails the batch AND reaps its still-queued siblings —
+    they must not keep occupying (or later claim) bridge threads."""
+    data, comp = corpus
+    server = ArchiveServer(cache_budget_bytes=1 << 20, max_workers=2)
+    h = server.open(comp)
+    server.read_range(h, 0, 1)
+
+    real_pread = server._entries[h].reader.pread
+    release = threading.Event()
+
+    def gated_pread(offset, size):
+        if offset == 0:
+            raise RuntimeError("injected range failure")
+        release.wait(RUN_TIMEOUT)
+        return real_pread(offset, size)
+
+    server._entries[h].reader.pread = gated_pread
+    try:
+
+        async def scenario():
+            async with AsyncArchiveServer(server, front_end_threads=2) as srv:
+                reqs = [(h, off, 10) for off in (100, 0)] + [
+                    (h, off, 10) for off in range(200, 1000, 100)
+                ]
+                with pytest.raises(RuntimeError, match="injected"):
+                    await srv.read_many(reqs)
+                release.set()
+                await asyncio.sleep(0.1)  # let any stragglers finish
+                stats = srv.bridge_stats()
+                # the failing range + at most front_end_threads slow ones ran;
+                # everything else was reaped while still queued.
+                assert stats["cancelled"] >= len(reqs) - 3, stats
+                assert stats["submitted"] == stats["started"] + stats["cancelled"]
+
+        _run(scenario())
+    finally:
+        release.set()
+        server._entries[h].reader.pread = real_pread
+        server.shutdown()
+
+
 def test_async_read_many_concurrency_actually_overlaps(corpus):
     """read_many must fan out: with a slow blocking read underneath, total
     time for K requests must be well under K x single-read time."""

@@ -67,14 +67,40 @@ BACKENDS = [
     "python",
     "python_short",
     pytest.param("remote", marks=pytest.mark.remote),
+    pytest.param("gateway", marks=pytest.mark.gateway),
 ]
+
+
+@pytest.fixture(scope="module")
+def gateway_over_data(tmp_path_factory):
+    """One loopback gateway serving DATA (gzip-compressed server-side) for
+    the whole module: the GatewayClient backend decompresses over the wire,
+    so the same contract suite that covers bytes/mmap/python/remote also
+    pins the wire protocol."""
+    import gzip
+
+    from repro.service.gateway import GatewayServer
+
+    path = tmp_path_factory.mktemp("gwdata") / "contract.gz"
+    path.write_bytes(gzip.compress(DATA, 6))
+    with GatewayServer(
+        cache_budget_bytes=4 << 20, max_workers=2, chunk_size=16 << 10
+    ) as gw:
+        yield gw, str(path)
 
 
 @pytest.fixture(params=BACKENDS)
 def backend(request, tmp_path):
     """(reader, cleanup-managed) FileReader over DATA for each backend."""
     kind = request.param
-    if kind == "bytes":
+    if kind == "gateway":
+        from repro.service.gateway import GatewayClient
+
+        gw, path = request.getfixturevalue("gateway_over_data")
+        reader = GatewayClient(gw.url, source=path, block_size=4096, cache_blocks=8)
+        yield reader
+        reader.close()
+    elif kind == "bytes":
         reader = BytesFileReader(DATA)
         yield reader
         reader.close()

@@ -1,0 +1,706 @@
+"""Gateway wire front-end: protocol semantics, cancellation, admission.
+
+Everything here talks HTTP only to an in-process loopback `GatewayServer`
+(marker ``gateway`` — hermetic like the ``remote`` suite, tier-1 stays
+offline). The fault tests (mid-stream disconnect, tenant flood) carry the
+tier-2 ``stress`` marker as well and are bounded by explicit deadlines.
+"""
+
+import gzip as _gzip
+import http.client
+import json
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from conftest import gzip_bytes, make_base64, make_text
+from repro.core import ParallelGzipReader
+from repro.core.remote import RemoteFileReader
+from repro.data.pipeline import GzipCorpusDataset
+from repro.service import ArchiveServer, IndexStore
+from repro.service.gateway import (
+    AdmissionDenied,
+    GatewayClient,
+    GatewayError,
+    GatewayServer,
+    TenantAdmission,
+)
+from repro.service.gateway.admission import TenantLimit
+from repro.service.gateway.server import _parse_range
+
+pytestmark = pytest.mark.gateway
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    """Mixed text+base64 corpus fixtures written as .gz files."""
+    rng = np.random.default_rng(0x6A7E)
+    root = tmp_path_factory.mktemp("gwcorpus")
+    fixtures = {}
+    for name, data in {
+        "text": make_text(rng, 300_000),
+        "base64": make_base64(rng, 300_000),
+        "mixed": make_text(rng, 150_000) + make_base64(rng, 150_000),
+    }.items():
+        path = root / f"{name}.gz"
+        path.write_bytes(gzip_bytes(data, 6))
+        fixtures[name] = (str(path), data)
+    return fixtures
+
+
+def _raw_conn(gw):
+    host, port = gw.url[len("http://"):].rsplit(":", 1)
+    return http.client.HTTPConnection(host, int(port), timeout=30)
+
+
+def _get(gw, path, headers=None):
+    conn = _raw_conn(gw)
+    try:
+        conn.request("GET", path, headers=headers or {})
+        resp = conn.getresponse()
+        return resp.status, dict(resp.getheaders()), resp.read()
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: bit-identical bytes over the wire, cold and warm
+# ---------------------------------------------------------------------------
+
+def test_bit_identical_pread_and_stream_cold_and_warm(corpus, tmp_path):
+    """For every corpus fixture: GatewayClient pread and a chunked-stream
+    full read match ParallelGzipReader output exactly — on a cold open
+    (speculative first pass server-side) and on a warm reopen (IndexStore
+    hit, zero speculative tasks)."""
+    store = IndexStore(tmp_path / "idx")
+    for phase in ("cold", "warm"):
+        server = ArchiveServer(
+            cache_budget_bytes=4 << 20, max_workers=4, chunk_size=64 << 10,
+            index_store=store,
+        )
+        with GatewayServer(server, stream_span=48 << 10) as gw:
+            for name, (path, data) in corpus.items():
+                expect = ParallelGzipReader(path).read()
+                assert expect == data
+                client = GatewayClient(gw.url, source=path,
+                                       block_size=32 << 10, cache_blocks=8)
+                assert client.size() == len(data)
+                # positional reads, including straddles and the tail
+                for off, n in ((0, 1000), (65_536, 4096), (123_457, 33_333),
+                               (len(data) - 777, 10_000)):
+                    assert client.pread(off, n) == expect[off : off + n]
+                # chunked-stream full read (spans > stream_span go chunked)
+                assert b"".join(client.stream()) == expect
+                if phase == "warm":
+                    assert client.stat()["index_was_warm"], (phase, name)
+                client.close()
+        server.shutdown()
+        assert store.stats.puts >= 3  # cold pass persisted every fixture
+
+
+# ---------------------------------------------------------------------------
+# Range semantics on the wire
+# ---------------------------------------------------------------------------
+
+def test_range_edge_cases_on_the_wire(corpus):
+    path, data = corpus["text"]
+    with GatewayServer(
+        cache_budget_bytes=2 << 20, max_workers=2, chunk_size=64 << 10,
+        stream_span=1 << 20,
+    ) as gw:
+        client = GatewayClient(gw.url, source=path)
+        url_path = "/v1/archives/%s/bytes" % client.handle
+        size = len(data)
+
+        # plain bounded range
+        status, headers, body = _get(gw, url_path, {"Range": "bytes=100-299"})
+        assert status == 206 and body == data[100:300]
+        assert headers["Content-Range"] == "bytes 100-299/%d" % size
+
+        # suffix range: last n bytes
+        status, headers, body = _get(gw, url_path, {"Range": "bytes=-500"})
+        assert status == 206 and body == data[-500:]
+        assert headers["Content-Range"] == "bytes %d-%d/%d" % (size - 500, size - 1, size)
+
+        # open-ended range
+        status, headers, body = _get(gw, url_path, {"Range": "bytes=%d-" % (size - 100)})
+        assert status == 206 and body == data[-100:]
+
+        # end clamped to EOF
+        status, _, body = _get(gw, url_path, {"Range": "bytes=%d-%d" % (size - 10, size + 100)})
+        assert status == 206 and body == data[-10:]
+
+        # start past EOF -> 416 with the unsatisfied Content-Range form
+        status, headers, body = _get(gw, url_path, {"Range": "bytes=%d-%d" % (size, size + 1)})
+        assert status == 416
+        assert headers["Content-Range"] == "bytes */%d" % size
+
+        # zero-length suffix -> 416 too
+        status, _, _ = _get(gw, url_path, {"Range": "bytes=-0"})
+        assert status == 416
+
+        # syntactically invalid ranges degrade to a 200 full body
+        status, _, body = _get(gw, url_path, {"Range": "lines=1-2"})
+        assert status == 200 and body == data
+
+        # multi-read over one keep-alive connection
+        conn = _raw_conn(gw)
+        try:
+            for off in (0, 1000, 250_000, 13):
+                conn.request("GET", url_path, headers={"Range": "bytes=%d-%d" % (off, off + 99)})
+                resp = conn.getresponse()
+                assert resp.status == 206
+                assert resp.read() == data[off : off + 100]
+        finally:
+            conn.close()
+        client.close()
+
+
+def test_refuses_routable_bind_without_auth_or_jail(tmp_path):
+    """Anonymous + unjailed + non-loopback = serve any local file to the
+    network; the constructor must refuse that combination outright."""
+    with pytest.raises(ValueError, match="refusing to bind"):
+        GatewayServer(host="0.0.0.0", cache_budget_bytes=1 << 20)
+    # tokens alone are not enough while a default tenant still admits
+    # requests with no Authorization header
+    with pytest.raises(ValueError, match="refusing to bind"):
+        GatewayServer(
+            host="0.0.0.0", cache_budget_bytes=1 << 20,
+            admission=TenantAdmission(tokens={"t": "a"}),  # default "public"
+        )
+    # either real opt-in makes it constructible (not started: nothing bound)
+    GatewayServer(
+        host="0.0.0.0", cache_budget_bytes=1 << 20,
+        admission=TenantAdmission(tokens={"t": "a"}, default_tenant=None),
+    ).close()
+    GatewayServer(
+        host="0.0.0.0", cache_budget_bytes=1 << 20, open_roots=[str(tmp_path)]
+    ).close()
+
+
+@pytest.mark.stress
+def test_stalled_client_releases_admission_slot(tmp_path):
+    """A connected client that stops *reading* (slow-loris) must not pin its
+    handler task and admission slot past idle_timeout: drain() is bounded,
+    so the stall is treated as a disconnect and the slot is released."""
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 256, 8_000_000, dtype=np.uint8).tobytes()
+    path = tmp_path / "stall.gz"
+    path.write_bytes(_gzip.compress(data, 1))
+    with GatewayServer(
+        cache_budget_bytes=4 << 20, max_workers=2, chunk_size=128 << 10,
+        stream_span=64 << 10, idle_timeout=2.0,
+    ) as gw:
+        client = GatewayClient(gw.url, source=str(path))
+        host, port = gw.url[len("http://"):].rsplit(":", 1)
+        sock = socket.create_connection((host, int(port)), timeout=10)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4096)
+        sock.sendall(
+            b"GET /v1/archives/%s/bytes HTTP/1.1\r\nHost: x\r\n\r\n"
+            % client.handle.encode()
+        )
+        deadline = time.monotonic() + 20
+        while time.monotonic() < deadline:
+            if gw.metrics()["admission"].get("public", {}).get("in_flight", 1) == 0:
+                break
+            time.sleep(0.25)
+        snap = gw.metrics()["admission"]["public"]
+        assert snap["in_flight"] == 0, "stalled client pinned its slot: %r" % snap
+        assert client.pread(100, 100) == data[100:200]  # still serviceable
+        sock.close()
+        client.close()
+
+
+def test_parse_range_unit():
+    assert _parse_range(None, 100) is None
+    assert _parse_range("bytes=0-9", 0) == "unsat"  # zero-length body
+    assert _parse_range("bytes=-5", 0) == "unsat"
+    assert _parse_range("bytes=0-9", 100) == (0, 10)
+    assert _parse_range("bytes=90-", 100) == (90, 100)
+    assert _parse_range("bytes=-5", 100) == (95, 100)
+    assert _parse_range("bytes=-200", 100) == (0, 100)
+    assert _parse_range("bytes=0-999", 100) == (0, 100)
+    assert _parse_range("bytes=100-", 100) == "unsat"
+    assert _parse_range("bytes=-0", 100) == "unsat"
+    assert _parse_range("bytes=5-2", 100) == "invalid"
+    assert _parse_range("bytes=1-2,5-6", 100) == "invalid"
+    assert _parse_range("lines=1-2", 100) == "invalid"
+
+
+def test_head_stat_delete_and_metrics(corpus):
+    path, data = corpus["base64"]
+    with GatewayServer(cache_budget_bytes=2 << 20, max_workers=2, chunk_size=64 << 10) as gw:
+        client = GatewayClient(gw.url, source=path)
+        url_path = "/v1/archives/%s/bytes" % client.handle
+
+        conn = _raw_conn(gw)
+        conn.request("HEAD", url_path)
+        resp = conn.getresponse()
+        resp.read()
+        assert resp.status == 200
+        assert int(resp.getheader("Content-Length")) == len(data)
+        assert resp.getheader("ETag", "").strip('"')
+        assert resp.getheader("Accept-Ranges") == "bytes"
+        conn.close()
+
+        stat = client.stat()
+        assert stat["index_finalized"] is True
+        assert stat["identity"]
+
+        metrics = client.metrics()
+        for section in ("gateway", "bridge", "admission", "scheduler", "fleet"):
+            assert section in metrics, section
+        sched = metrics["scheduler"]
+        assert sched["submitted"] == sched["done"] + sched["cancelled"] + sched["queued"]
+
+        client.close()  # DELETEs the handle
+        status, _, _ = _get(gw, url_path, {"Range": "bytes=0-1"})
+        assert status == 404
+
+
+def test_gateway_chaining_via_remote_filereader_and_second_tier(corpus, tmp_path):
+    """The bytes endpoint speaks RemoteFileReader's dialect: (a) a plain
+    RemoteFileReader reads it directly; (b) a second gateway tier opens a
+    first-tier bytes URL as a remote source (gzip-in-gzip: tier 1 strips
+    the outer layer, tier 2 the inner) — tiered deployments for free."""
+    _, data = corpus["text"]
+    inner_gz = gzip_bytes(data, 6)
+    outer = tmp_path / "double.gz.gz"
+    outer.write_bytes(_gzip.compress(inner_gz, 6))
+
+    with GatewayServer(cache_budget_bytes=2 << 20, max_workers=2, chunk_size=32 << 10) as gw1:
+        c1 = GatewayClient(gw1.url, source=str(outer))
+        # (a) direct RemoteFileReader over tier 1: sees the inner .gz bytes
+        r = RemoteFileReader(gw1.bytes_url(c1.handle), block_size=16 << 10)
+        assert r.pread(0, 2) == inner_gz[:2]  # gzip magic survives the hop
+        assert r.size() == len(inner_gz)
+        r.close()
+        # (b) tier 2 opens tier 1's bytes URL as its archive source
+        with GatewayServer(
+            cache_budget_bytes=2 << 20, max_workers=2, chunk_size=32 << 10,
+            remote_options={"block_size": 16 << 10},
+        ) as gw2:
+            c2 = GatewayClient(gw2.url, source=gw1.bytes_url(c1.handle))
+            assert c2.size() == len(data)
+            assert c2.pread(1234, 4321) == data[1234 : 1234 + 4321]
+            assert b"".join(c2.stream()) == data
+            c2.close()
+        c1.close()
+
+
+# ---------------------------------------------------------------------------
+# auth, tenancy, admission
+# ---------------------------------------------------------------------------
+
+def test_auth_required_and_tenant_scoped_handles(corpus):
+    path, data = corpus["text"]
+    adm = TenantAdmission(
+        tokens={"tok-a": "alpha", "tok-b": "beta"}, default_tenant=None
+    )
+    with GatewayServer(
+        cache_budget_bytes=2 << 20, max_workers=2, chunk_size=64 << 10, admission=adm
+    ) as gw:
+        # no token -> 401 with a challenge
+        conn = _raw_conn(gw)
+        conn.request("POST", "/v1/archives", body=json.dumps({"source": path}))
+        resp = conn.getresponse()
+        resp.read()
+        assert resp.status == 401
+        assert resp.getheader("WWW-Authenticate") == "Bearer"
+        conn.close()
+
+        # unknown token -> 401; valid tokens work
+        with pytest.raises(GatewayError) as exc_info:
+            GatewayClient(gw.url, source=path, token="tok-x")
+        assert exc_info.value.status == 401
+        ca = GatewayClient(gw.url, source=path, token="tok-a")
+        assert ca.pread(0, 100) == data[:100]
+
+        # another tenant cannot even see alpha's handle
+        status, _, _ = _get(
+            gw, "/v1/archives/%s/bytes" % ca.handle,
+            {"Authorization": "Bearer tok-b", "Range": "bytes=0-1"},
+        )
+        assert status == 404
+        # explicit tenant in the body is rejected when tokens are configured
+        with pytest.raises(GatewayError) as exc_info:
+            GatewayClient(gw.url, source=path, token="tok-b", tenant="alpha")
+        assert exc_info.value.status == 400
+        ca.close()
+
+
+def test_unauthenticated_tenant_override_keeps_handle_usable(corpus):
+    """Regression: on a token-less gateway an open-time tenant override
+    (benchmark accounting) must not lock the opener out of its own handle —
+    follow-up requests resolve to the default tenant, and the owner check
+    only applies when bearer auth is actually configured."""
+    path, data = corpus["text"]
+    with GatewayServer(cache_budget_bytes=1 << 20, max_workers=2) as gw:
+        client = GatewayClient(gw.url, source=path, tenant="vip")
+        assert client.tenant == "vip"  # accounting tenant server-side
+        assert client.pread(0, 100) == data[:100]
+        assert client.stat()["tenant"] == "vip"
+        client.close()  # DELETE must succeed too
+        status, _, _ = _get(gw, "/v1/archives/%s/bytes" % client.handle,
+                            {"Range": "bytes=0-1"})
+        assert status == 404  # actually closed, not leaked
+
+
+def test_open_roots_jail(corpus, tmp_path):
+    path, _ = corpus["text"]
+    jail = tmp_path / "jail"
+    jail.mkdir()
+    inside = jail / "ok.gz"
+    inside.write_bytes(gzip_bytes(b"jailed content", 6))
+    with GatewayServer(
+        cache_budget_bytes=1 << 20, max_workers=2,
+        open_roots=[str(jail)], allow_remote_sources=False,
+    ) as gw:
+        ok = GatewayClient(gw.url, source=str(inside))
+        assert b"".join(ok.stream()) == b"jailed content"
+        ok.close()
+        for bad in (path, str(jail) + "-sibling/x.gz", "http://127.0.0.1:1/x.gz"):
+            with pytest.raises(GatewayError) as exc_info:
+                GatewayClient(gw.url, source=bad)
+            assert exc_info.value.status == 403, bad
+
+
+@pytest.mark.stress
+def test_tenant_flood_gets_429_other_tenant_unharmed(corpus):
+    """A flooding tenant overruns its in-flight+queue budget and collects
+    429 + Retry-After; a second tenant's requests all succeed meanwhile."""
+    import threading
+
+    path, data = corpus["mixed"]
+    adm = TenantAdmission(
+        tokens={"tok-f": "flood", "tok-v": "vip"},
+        default_tenant=None,
+        limits={"flood": TenantLimit(max_in_flight=1, max_queued=1)},
+        retry_after=0.2,
+    )
+    with GatewayServer(
+        cache_budget_bytes=1 << 20, max_workers=2, chunk_size=64 << 10,
+        admission=adm, front_end_threads=4,
+    ) as gw:
+        cf = GatewayClient(gw.url, source=path, token="tok-f")
+        cv = GatewayClient(gw.url, source=path, token="tok-v")
+        results = {"flood": [], "vip": []}
+        lock = threading.Lock()
+
+        def hammer(tenant, handle, token, n):
+            for _ in range(n):
+                conn = _raw_conn(gw)
+                try:
+                    conn.request(
+                        "GET", "/v1/archives/%s/bytes" % handle,
+                        headers={"Authorization": "Bearer %s" % token,
+                                 "Range": "bytes=0-65535"},
+                    )
+                    resp = conn.getresponse()
+                    body = resp.read()
+                    with lock:
+                        results[tenant].append(
+                            (resp.status, resp.getheader("Retry-After"), body)
+                        )
+                finally:
+                    conn.close()
+
+        threads = [
+            threading.Thread(target=hammer, args=("flood", cf.handle, "tok-f", 6))
+            for _ in range(5)
+        ] + [threading.Thread(target=hammer, args=("vip", cv.handle, "tok-v", 6))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not any(t.is_alive() for t in threads), "flood scenario hung"
+
+        flood_codes = [s for s, _, _ in results["flood"]]
+        assert 429 in flood_codes, flood_codes
+        for status, retry_after, _ in results["flood"]:
+            if status == 429:
+                assert retry_after is not None and float(retry_after) > 0
+        # the flood tenant still gets *some* service (bounded, not starved)
+        assert any(s == 206 for s in flood_codes)
+        # the vip tenant never saw backpressure and got correct bytes
+        assert all(s == 206 for s, _, _ in results["vip"]), results["vip"]
+        assert all(b == data[:65536] for _, _, b in results["vip"])
+        assert gw.metrics()["gateway"]["rejected_429"] >= 1
+        cf.close()
+        cv.close()
+
+
+# ---------------------------------------------------------------------------
+# cancellation: killed clients leave balanced books, no orphaned work
+# ---------------------------------------------------------------------------
+
+def _wait_books_balanced(server, timeout=20.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        snap = server.executor.snapshot()
+        if (
+            snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"]
+            and snap["queued"] == 0
+        ):
+            return snap
+        time.sleep(0.05)
+    return server.executor.snapshot()
+
+
+@pytest.mark.stress
+def test_killed_mid_stream_client_leaves_no_orphaned_tasks(tmp_path):
+    """A raw client starts a big chunked stream, reads a little, and drops
+    the socket. The gateway must cancel end to end: handler cancelled,
+    queued prefetches swept, and FairExecutor books balanced at quiescence
+    (submitted == done + cancelled + queued) — no orphaned decompression
+    tasks, and the gateway stays fully serviceable."""
+    rng = np.random.default_rng(7)
+    data = make_base64(rng, 2_000_000)
+    path = tmp_path / "big.gz"
+    path.write_bytes(gzip_bytes(data, 6))
+
+    server = ArchiveServer(
+        cache_budget_bytes=1 << 20,  # << working set: reads keep re-decoding
+        max_workers=2, chunk_size=64 << 10, reader_parallelization=4,
+    )
+    with GatewayServer(server, stream_span=32 << 10) as gw:
+        client = GatewayClient(gw.url, source=str(path))
+        host, port = gw.url[len("http://"):].rsplit(":", 1)
+
+        for round_ in range(3):
+            sock = socket.create_connection((host, int(port)), timeout=10)
+            sock.sendall(
+                b"GET /v1/archives/%s/bytes HTTP/1.1\r\nHost: gw\r\n\r\n"
+                % client.handle.encode()
+            )
+            assert sock.recv(4096)  # headers + first chunk(s) arrived
+            sock.close()  # gone mid-stream
+
+        snap = _wait_books_balanced(server)
+        assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
+        assert snap["queued"] == 0, snap
+
+        gstats = gw.metrics()["gateway"]
+        disconnects = (
+            gstats.get("disconnects_mid_stream", 0)
+            + gstats.get("disconnects_mid_request", 0)
+            + gstats.get("cancelled_reads", 0)
+        )
+        assert disconnects >= 3, gstats
+
+        # the gateway is still fully serviceable afterwards
+        assert client.pread(1_000_000, 5000) == data[1_000_000:1_005_000]
+        client.close()
+    server.shutdown()
+
+
+@pytest.mark.stress
+def test_disconnect_during_cold_first_pass_cancels_bridged_await(tmp_path):
+    """Disconnect while the handler is parked on a *cold* size() await: the
+    books must still balance and later requests must succeed (the abandoned
+    first pass either finishes in the background or is resumed on demand)."""
+    rng = np.random.default_rng(8)
+    data = make_base64(rng, 1_500_000)
+    path = tmp_path / "cold.gz"
+    path.write_bytes(gzip_bytes(data, 6))
+
+    server = ArchiveServer(
+        cache_budget_bytes=2 << 20, max_workers=2, chunk_size=32 << 10,
+    )
+    with GatewayServer(server, stream_span=32 << 10, front_end_threads=2) as gw:
+        client = GatewayClient(gw.url, source=str(path))  # HEAD warms size
+        h2 = server.open(str(path))  # second, never-touched handle: cold
+        host, port = gw.url[len("http://"):].rsplit(":", 1)
+        sock = socket.create_connection((host, int(port)), timeout=10)
+        sock.sendall(
+            b"GET /v1/archives/%s/bytes HTTP/1.1\r\nHost: gw\r\n\r\n"
+            % h2.encode()
+        )
+        time.sleep(0.05)  # handler is now awaiting the cold size()
+        sock.close()
+        snap = _wait_books_balanced(server)
+        assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
+        # bridge accounting holds: nothing is both cancelled and started
+        bridge = gw.metrics()["bridge"]
+        assert bridge["submitted"] >= bridge["started"] + bridge["cancelled"]
+        # gateway still serves the handle correctly afterwards
+        status, _, body = _get(
+            gw, "/v1/archives/%s/bytes" % h2, {"Range": "bytes=0-999"}
+        )
+        assert status == 206 and body == data[:1000]
+        client.close()
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# datasets pointed at a gateway
+# ---------------------------------------------------------------------------
+
+def test_corpus_dataset_gateway_shard_matches_local(corpus):
+    """A GzipCorpusDataset fed a ``gateway+http://...`` shard URL (and a
+    GatewayClient instance) produces batches identical to a local dataset —
+    decompression and index reuse live gateway-side."""
+    path, _ = corpus["text"]
+    kwargs = dict(seq_len=64, batch_size=2, read_block=16 * 1024, loop=False)
+    local = GzipCorpusDataset([path], chunk_size=32 * 1024, parallelization=2, **kwargs)
+    with GatewayServer(
+        cache_budget_bytes=2 << 20, max_workers=2, chunk_size=32 << 10
+    ) as gw:
+        client = GatewayClient(gw.url, source=path)
+        by_url = GzipCorpusDataset(
+            ["gateway+" + gw.bytes_url(client.handle)], **kwargs
+        )
+        by_client = GzipCorpusDataset([client], **kwargs)
+        for _ in range(4):
+            lb = local.next_batch()
+            ub = by_url.next_batch()
+            cb = by_client.next_batch()
+            assert lb is not None and ub is not None and cb is not None
+            np.testing.assert_array_equal(lb["tokens"], ub["tokens"])
+            np.testing.assert_array_equal(lb["tokens"], cb["tokens"])
+        # checkpoint/restore seeks through the gateway in O(1)
+        state = by_url.state_dict()
+        by_url2 = GzipCorpusDataset(
+            ["gateway+" + gw.bytes_url(client.handle)], **kwargs
+        )
+        by_url2.load_state_dict(state)
+        np.testing.assert_array_equal(
+            local.next_batch()["tokens"], by_url2.next_batch()["tokens"]
+        )
+        by_url.close()
+        by_url2.close()
+        by_client.close()  # must NOT close the caller-owned client
+        assert client.pread(0, 4)  # still usable
+        client.close()
+    local.close()
+
+
+# ---------------------------------------------------------------------------
+# admission unit behavior (no sockets)
+# ---------------------------------------------------------------------------
+
+def test_admission_unit_limits_and_fifo():
+    import asyncio
+
+    adm = TenantAdmission(max_in_flight=1, max_queued=1, retry_after=0.3)
+
+    async def scenario():
+        await adm.acquire("t")  # occupies the slot
+        waiter = asyncio.ensure_future(adm.acquire("t"))  # queues
+        await asyncio.sleep(0)
+        with pytest.raises(AdmissionDenied) as exc_info:
+            await adm.acquire("t")  # over queue depth
+        assert exc_info.value.retry_after == 0.3
+        adm.release("t")  # hands the slot to the waiter
+        await asyncio.wait_for(waiter, 5)
+        snap = adm.snapshot()["t"]
+        assert snap["admitted"] == 2 and snap["rejected"] == 1 and snap["waited"] == 1
+        adm.release("t")
+        assert adm.snapshot()["t"]["in_flight"] == 0
+
+    asyncio.run(scenario())
+
+
+def test_admission_waiter_cancelled_after_handoff_returns_slot():
+    """Regression: release() hands its slot to a queued waiter via
+    fut.set_result(); if that waiter's task is cancelled before it resumes,
+    the slot must be returned — not leaked — or the tenant's capacity
+    shrinks permanently."""
+    import asyncio
+
+    adm = TenantAdmission(max_in_flight=1, max_queued=2)
+
+    async def scenario():
+        await adm.acquire("t")
+        waiter = asyncio.ensure_future(adm.acquire("t"))
+        await asyncio.sleep(0)  # waiter is queued
+        adm.release("t")  # slot handed to waiter's future...
+        waiter.cancel()  # ...but the task dies before resuming
+        await asyncio.gather(waiter, return_exceptions=True)
+        snap = adm.snapshot()["t"]
+        assert snap["in_flight"] == 0, snap  # slot came back
+        assert snap["waiting"] == 0, snap
+        # and the tenant still has full capacity
+        await adm.acquire("t")
+        adm.release("t")
+
+    asyncio.run(scenario())
+
+
+def test_missing_source_file_answers_404_not_disconnect(tmp_path):
+    """Regression: open is lazy, so a registered-but-missing path fails at
+    first read — the client must get a 404 response, not a bare connection
+    drop booked as a disconnect (which chained RemoteFileReaders would
+    retry through their whole backoff budget)."""
+    with GatewayServer(cache_budget_bytes=1 << 20, max_workers=2) as gw:
+        conn = _raw_conn(gw)
+        try:
+            conn.request(
+                "POST", "/v1/archives",
+                body=json.dumps({"source": str(tmp_path / "ghost.gz")}),
+            )
+            resp = conn.getresponse()
+            handle = json.loads(resp.read())["handle"]
+            assert resp.status == 201  # registration alone succeeds (lazy)
+            conn.request("GET", "/v1/archives/%s/bytes" % handle,
+                         headers={"Range": "bytes=0-9"})
+            resp = conn.getresponse()
+            resp.read()
+            assert resp.status == 404, resp.status
+        finally:
+            conn.close()
+        assert gw.metrics()["gateway"].get("disconnects_mid_stream", 0) == 0
+
+
+def test_oversized_request_line_answered_431(corpus):
+    path, _ = corpus["text"]
+    with GatewayServer(cache_budget_bytes=1 << 20, max_workers=2) as gw:
+        host, port = gw.url[len("http://"):].rsplit(":", 1)
+        sock = socket.create_connection((host, int(port)), timeout=10)
+        try:
+            sock.sendall(b"GET /" + b"a" * 70_000 + b" HTTP/1.1\r\n\r\n")
+            resp = sock.recv(4096)
+            assert b"431" in resp.split(b"\r\n")[0], resp[:80]
+        finally:
+            sock.close()
+        # gateway unharmed
+        client = GatewayClient(gw.url, source=path)
+        assert client.pread(0, 10)
+        client.close()
+
+
+def test_malformed_content_length_answered_400(corpus):
+    path, _ = corpus["text"]
+    with GatewayServer(cache_budget_bytes=1 << 20, max_workers=2) as gw:
+        conn = _raw_conn(gw)
+        try:
+            conn.putrequest("POST", "/v1/archives", skip_accept_encoding=True)
+            conn.putheader("Content-Length", "abc")
+            conn.endheaders()
+            resp = conn.getresponse()
+            resp.read()
+            assert resp.status == 400
+        finally:
+            conn.close()
+        # the gateway survives and keeps serving
+        client = GatewayClient(gw.url, source=path)
+        assert client.pread(0, 10)
+        client.close()
+
+
+def test_admission_resolve_tokens():
+    adm = TenantAdmission(tokens={"secret": "alpha"}, default_tenant="anon")
+    assert adm.resolve(None) == "anon"
+    assert adm.resolve("Bearer secret") == "alpha"
+    assert adm.resolve("bearer secret") == "alpha"
+    from repro.service.gateway.admission import Unauthorized
+
+    with pytest.raises(Unauthorized):
+        adm.resolve("Bearer wrong")
+    with pytest.raises(Unauthorized):
+        adm.resolve("Basic dXNlcjpwdw==")
+    strict = TenantAdmission(tokens={"s": "a"}, default_tenant=None)
+    with pytest.raises(Unauthorized):
+        strict.resolve(None)

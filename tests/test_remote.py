@@ -312,6 +312,55 @@ def test_archive_server_url_open_cold_then_warm(rng, tmp_path):
             assert m["fleet"]["fetcher"]["nominal_tasks"] == 0
 
 
+def test_remote_block_cache_charged_to_tenant_pool(rng):
+    """The per-reader remote block cache (cache_blocks x block_size) is
+    pool-backed: resident block bytes show up under the owning tenant's
+    CachePool accounting while the handle is open, and are released back to
+    the budget on close — they no longer sit beside the shared budget."""
+    data = make_base64(rng, 300_000)
+    blob = gzip_bytes(data, 6)
+    with RangeHTTPServer(blob) as srv:
+        with ArchiveServer(
+            cache_budget_bytes=8 << 20,
+            chunk_size=64 * 1024,
+            remote_options={"block_size": 16 * 1024, "cache_blocks": 4},
+        ) as server:
+            h = server.open(srv.url, tenant="edge")
+            assert server.read_range(h, 50_000, 2000) == data[50_000:52_000]
+            held = server.cache_pool.tenant_stats()["edge"]["bytes_held"]
+            # Compressed blocks (16 KiB each) are charged alongside the
+            # decompressed chunks — strictly more than chunk bytes alone.
+            reader = server._entries[h].reader  # noqa: SLF001 - test introspection
+            block_bytes = sum(
+                len(v) for v in reader._reader._cache._data.values()  # noqa: SLF001
+            )
+            assert block_bytes > 0
+            assert held >= block_bytes
+            server.close(h)
+            # Every charge returned: caches released on reader close.
+            assert server.cache_pool.tenant_stats()["edge"]["bytes_held"] == 0
+            assert server.cache_pool.bytes_held() == 0
+
+
+def test_remote_block_cache_eviction_bounded_by_pool_budget(rng):
+    """A tiny pool budget forces the remote block cache to shed blocks via
+    pool-chosen eviction (not just its own entry capacity)."""
+    data = make_base64(rng, 400_000)
+    blob = gzip_bytes(data, 6)
+    with RangeHTTPServer(blob) as srv:
+        with ArchiveServer(
+            cache_budget_bytes=64 << 10,  # far below blocks + chunks
+            chunk_size=32 * 1024,
+            remote_options={"block_size": 16 * 1024, "cache_blocks": 16},
+        ) as server:
+            h = server.open(srv.url, tenant="edge")
+            for off in range(0, 300_000, 60_000):
+                assert server.read_range(h, off, 1000) == data[off : off + 1000]
+            snap = server.cache_pool.snapshot()
+            assert server.cache_pool.bytes_held() <= 2 * (64 << 10), snap["tiers"]
+            assert sum(t["evictions"] for t in snap["tiers"].values()) > 0
+
+
 def test_corpus_dataset_remote_shard_matches_local(rng, tmp_path):
     data = make_text(rng, 200_000)
     blob = gzip_bytes(data, 6)

@@ -190,12 +190,12 @@ def test_priority_does_not_buy_cross_tenant_bandwidth():
 
 
 # ---------------------------------------------------------------------------
-# cancel accounting: submitted == done + queued, always
+# cancel accounting: submitted == done + cancelled + queued, always
 # ---------------------------------------------------------------------------
 
 def _books(ex):
     snap = ex.snapshot()
-    return snap["submitted"], snap["done"], snap["queued"]
+    return snap["submitted"], snap["done"], snap["cancelled"], snap["queued"]
 
 
 def _drain(ex, timeout=5.0):
@@ -203,7 +203,7 @@ def _drain(ex, timeout=5.0):
     deadline = time.monotonic() + timeout
     while time.monotonic() < deadline:
         snap = ex.snapshot()
-        if snap["submitted"] == snap["done"] + snap["queued"]:
+        if snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"]:
             return snap
         time.sleep(0.01)
     return ex.snapshot()
@@ -219,7 +219,7 @@ def test_snapshot_books_balance_after_cancel_view():
     gate.set()
     assert other.result(5) == "u-ran"
     snap = _drain(ex)
-    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
     assert snap["queued"] == 0
     assert all(f.cancelled() for f in futs)
     ex.shutdown(wait=True)
@@ -234,19 +234,19 @@ def test_snapshot_books_balance_after_cancel_tenant():
     gate.set()
     assert keep.result(5) == "kept"
     snap = _drain(ex)
-    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
     ex.shutdown(wait=True)
 
 
 def test_snapshot_books_balance_after_direct_future_cancel():
     """A future cancelled by its owner while queued still reaches a worker
-    (set_running_or_notify_cancel -> False) and must be counted done."""
+    (set_running_or_notify_cancel -> False) and must be booked cancelled."""
     ex, gate = _gated_executor(tenant="t")
     fut = ex.submit("t", lambda: "never")
     assert fut.cancel()
     gate.set()
     snap = _drain(ex)
-    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
     assert snap["queued"] == 0
     ex.shutdown(wait=True)
 
@@ -267,7 +267,7 @@ def test_snapshot_books_balance_after_arbitrary_cancel_sequence():
         f.cancel()
     gate.set()
     snap = _drain(ex)
-    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
     assert snap["queued"] == 0
     ex.shutdown(wait=True)
     # shutdown(cancel_futures) path also keeps the books closed
@@ -280,7 +280,7 @@ def test_snapshot_books_balance_after_arbitrary_cancel_sequence():
     ex2.shutdown(wait=False, cancel_futures=True)
     ev.set()
     snap = _drain(ex2)
-    assert snap["submitted"] == snap["done"] + snap["queued"], snap
+    assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
 
 
 # ---------------------------------------------------------------------------
@@ -313,7 +313,7 @@ def test_drr_never_starves_any_queue(tasks):
         for f in futs:
             assert f.result(20) is True
         snap = ex.snapshot()
-        assert snap["submitted"] == snap["done"] + snap["queued"]
+        assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"]
         assert snap["queued"] == 0
     finally:
         ex.shutdown(wait=False, cancel_futures=True)
@@ -326,3 +326,72 @@ def test_rejects_bad_config():
         FairExecutor(1, quantum_bytes=0)
     with pytest.raises(ValueError):
         FairExecutor(1, fairness="priority-inversion")
+    ex = FairExecutor(1, quantum_bytes=Q)
+    with pytest.raises(ValueError):
+        ex.set_tenant_quantum("t", 0)
+    ex.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# weighted DRR quanta (paying tenants get a larger quantum)
+# ---------------------------------------------------------------------------
+
+def test_weighted_quantum_scales_dispatched_byte_share():
+    """Two tenants with identical equal-cost backlogs and one worker: a
+    tenant with quantum factor 4 must receive ~4x the dispatched bytes of a
+    factor-1 tenant at every prefix of the dispatch order."""
+    ex, gate = _gated_executor()
+    ex.set_tenant_quantum("vip", 4.0)
+    order = []
+    lock = threading.Lock()
+
+    def run(tenant):
+        with lock:
+            order.append(tenant)
+
+    futs = []
+    for _ in range(80):
+        futs.append(ex.submit("vip", run, "vip", _cost=4 * Q))
+        futs.append(ex.submit("std", run, "std", _cost=4 * Q))
+    gate.set()
+    for f in futs:
+        f.result(30)
+    # Prefix shares *while both queues are non-empty* (classic WDRR bound):
+    # vip's task count should run ~4x std's, with one-task slack per side.
+    # Once vip's backlog drains (vip == 80) std catches up alone.
+    vip = std = 0
+    for tenant in order:
+        if tenant == "vip":
+            vip += 1
+        else:
+            std += 1
+        if vip >= 80:
+            break
+        if std >= 2:
+            assert vip + 1 >= 3 * (std - 1), (
+                "vip under its weighted share at prefix: vip=%d std=%d" % (vip, std)
+            )
+    # At the moment vip's backlog drained, std must not have received more
+    # than ~1/4 of vip's dispatches (plus slack for the startup transient).
+    assert std <= 80 // 4 + 4, "std over its share during contention: %d" % std
+    snap = ex.snapshot()
+    assert snap["tenant_quanta"] == {"vip": 4.0}
+    assert snap["dispatched_bytes_per_tenant"]["vip"] == 80 * 4 * Q
+    ex.shutdown(wait=True)
+
+
+def test_cancel_view_batch_only_spares_priority_lane():
+    """The gateway's disconnect sweep cancels only queued *batch* tasks —
+    priority-lane tasks (someone blocks on them) survive."""
+    ex, gate = _gated_executor(tenant="t")
+    view = ex.view("t")
+    batch = [view.submit_hinted(lambda: "b", priority=False) for _ in range(3)]
+    pri = view.submit_hinted(lambda: "p", priority=True)
+    assert view.cancel_pending(batch_only=True) == 3
+    gate.set()
+    assert pri.result(5) == "p"
+    assert all(f.cancelled() for f in batch)
+    snap = _drain(ex)
+    assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
+    assert snap["cancelled"] == 3
+    ex.shutdown(wait=True)
