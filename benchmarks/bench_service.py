@@ -688,6 +688,137 @@ def bench_gateway() -> None:
         server.shutdown()
 
 
+def bench_fleet() -> None:
+    """Sharded fleet (section "fleet" in run.py): routing cost + failover.
+
+    Emits:
+      fleet_direct_{N}req     pread p99 us against the owning gateway via a
+                              plain GatewayClient (no routing tier)
+      fleet_routed_{N}req     the same preads through FleetRouter/FleetClient
+                              — the placement + failover shell's overhead
+      fleet_failover_recovery wall-clock us from owner death to the first
+                              successful pread on the failover peer (includes
+                              re-resolve, re-open, ETag continuity check)
+      fleet_warm_open_exchange  cold open on a peer that never saw the
+                              archive, with the index imported from a fleet
+                              peer over the wire (O(index) instead of the
+                              O(file) speculative first pass)
+    """
+    from repro.service.fleet import FleetRouter, make_index_fallback
+    from repro.service.gateway import GatewayClient, GatewayServer
+
+    gen = DataGen()
+    size = scale(4 << 20, floor=1 << 20)
+    n_requests = 16 if common.SMOKE else 200
+    req_size = 16 << 10
+    data = gen.text(size)
+
+    with tempfile.TemporaryDirectory(prefix="bench_fleet_") as tmpdir:
+        path = os.path.join(tmpdir, "fleet.gz")
+        with open(path, "wb") as f:
+            f.write(gzip_bytes(data, 6))
+
+        stores, servers, gws = [], [], []
+        for i in range(3):
+            store = IndexStore(os.path.join(tmpdir, "idx%d" % i))
+            srv = ArchiveServer(
+                max_workers=2, cache_budget_bytes=8 << 20,
+                chunk_size=128 << 10, index_store=store,
+            )
+            stores.append(store)
+            servers.append(srv)
+            gws.append(GatewayServer(srv, stream_span=128 << 10).start())
+        urls = [gw.url for gw in gws]
+        for i, store in enumerate(stores):
+            store.set_remote_fallback(make_index_fallback(urls, exclude=[urls[i]]))
+        router = FleetRouter(urls, eject_after=1)
+
+        rng = np.random.default_rng(0xF1E7)
+        offsets = [
+            int(o)
+            for o in rng.integers(0, max(1, len(data) - req_size), n_requests)
+        ]
+
+        def pread_lats(reader):
+            lats = []
+            for off in offsets:
+                t0 = time.perf_counter()
+                got = reader.pread(off, req_size)
+                lats.append(time.perf_counter() - t0)
+                if got != data[off : off + req_size]:
+                    raise AssertionError("fleet byte mismatch at %d" % off)
+            return lats
+
+        try:
+            # small client-side block cache: the point is wire round trips,
+            # not client caching. Snappy retry policy so the recovery number
+            # below measures the failover machinery (detect, re-resolve,
+            # re-open, revalidate), not the default dead-peer backoff.
+            routed = router.open(
+                path, block_size=16 << 10, cache_blocks=2,
+                max_retries=1, backoff_base=0.01, timeout=5.0,
+            )
+            owner = routed.peer
+            direct = GatewayClient(
+                owner, source=path, block_size=16 << 10, cache_blocks=2
+            )
+            pread_lats(direct)  # warm the server-side caches once for both
+            p50, p99 = _percentiles(pread_lats(direct))
+            emit(
+                f"fleet_direct_{n_requests}req", p99 * 1e6,
+                f"p50={p50*1e6:.0f}us p99={p99*1e6:.0f}us",
+            )
+            d50, d99 = _percentiles(pread_lats(routed))
+            emit(
+                f"fleet_routed_{n_requests}req", d99 * 1e6,
+                f"p50={d50*1e6:.0f}us p99={d99*1e6:.0f}us "
+                f"overhead_p50={(d50-p50)*1e6:+.0f}us",
+            )
+            direct.close()
+
+            # -- failover recovery: kill the owner, time the next pread --
+            next(gw for gw in gws if gw.url == owner).close()
+            t0 = time.perf_counter()
+            got = routed.pread(offsets[0], req_size)
+            recovery = time.perf_counter() - t0
+            if got != data[offsets[0] : offsets[0] + req_size]:
+                raise AssertionError("post-failover byte mismatch")
+            emit(
+                "fleet_failover_recovery", recovery * 1e6,
+                f"{recovery*1e3:.1f}ms failovers={routed.stats['failovers']} "
+                f"now={routed.peer}",
+            )
+            survivor = routed.peer
+            routed.close()  # persists the finalized index on the survivor
+
+            # -- index exchange: cold open on the peer that saw nothing --
+            third_url = next(
+                u for u in urls if u not in (owner, survivor)
+            )
+            third = next(gw for gw in gws if gw.url == third_url)
+            t0 = time.perf_counter()
+            g = GatewayClient(third_url, source=path)
+            warm_open = time.perf_counter() - t0
+            stat = g.stat()
+            m = third.metrics()
+            emit(
+                "fleet_warm_open_exchange", warm_open * 1e6,
+                f"{warm_open*1e3:.1f}ms index_was_warm={stat['index_was_warm']} "
+                f"remote_hits={m['index_store']['remote_hits']} "
+                f"nominal_tasks={m['fleet']['fetcher']['nominal_tasks']}",
+            )
+            g.close()
+        finally:
+            router.close()
+            for gw in gws:
+                try:
+                    gw.close()
+                except Exception:  # noqa: BLE001 - owner killed above
+                    pass
+            for srv in servers:
+                srv.shutdown()
+
+
 def main() -> None:
     gen = DataGen()
     n_files = 2 if common.SMOKE else 4

@@ -39,8 +39,22 @@ def timeit(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> Tuple[float, f
     return min(times), float(np.mean(times))
 
 
+#: Results accumulated by :func:`emit` since the last :func:`drain_results`
+#: call — the run.py harness drains this after each section to persist the
+#: section's rows as ``BENCH_<section>.json`` alongside the CSV stdout.
+RESULTS: List[Dict[str, object]] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+    RESULTS.append({"name": name, "value_us": round(us_per_call, 3), "derived": derived})
+
+
+def drain_results() -> List[Dict[str, object]]:
+    """Return and clear the rows emitted since the previous drain."""
+    out = list(RESULTS)
+    RESULTS.clear()
+    return out
 
 
 class DataGen:

@@ -14,6 +14,8 @@ suite is ``pytest -m stress`` (threaded/async consistency with timeouts).
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import tempfile
 import time
@@ -21,12 +23,31 @@ import traceback
 
 from . import common
 
+#: BENCH_<section>.json lands next to the repo's other BENCH_* artifacts.
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _persist_section(name: str, rows, elapsed_s: float, smoke: bool) -> None:
+    """One JSON artifact per section: the same rows as the CSV stdout, plus
+    enough context (smoke flag, wall time, timestamp) to compare runs."""
+    payload = {
+        "section": name,
+        "smoke": smoke,
+        "elapsed_s": round(elapsed_s, 3),
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "results": rows,
+    }
+    out = os.path.join(_REPO_ROOT, "BENCH_%s.json" % name)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default="",
-        help="comma list: components,decomp,kernels,roofline,service,remote,gateway",
+        help="comma list: components,decomp,kernels,roofline,service,remote,gateway,fleet",
     )
     ap.add_argument(
         "--smoke", action="store_true",
@@ -70,17 +91,30 @@ def main() -> None:
         # Hermetic: in-process loopback GatewayServer — wire overhead vs
         # in-process, chunked streaming, and the flood-isolation acceptance.
         sections.append(("gateway", _bench_gateway_mod.bench_gateway))
+    if only is None or "fleet" in only:
+        from . import bench_service as _bench_fleet_mod
+
+        # Hermetic: 3 loopback gateways behind a FleetRouter — routed vs
+        # direct read latency, failover recovery, index-exchange warm open.
+        sections.append(("fleet", _bench_fleet_mod.bench_fleet))
 
     failures = 0
     t_start = time.perf_counter()
     for name, fn in sections:
         print(f"# === {name} ===")
+        common.drain_results()  # a failed prior section must not leak rows
+        t_section = time.perf_counter()
         try:
             fn()
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# section {name} FAILED", file=sys.stderr)
             traceback.print_exc()
+        else:
+            _persist_section(
+                name, common.drain_results(),
+                time.perf_counter() - t_section, args.smoke,
+            )
     if args.smoke:
         print(f"# smoke total: {time.perf_counter() - t_start:.1f}s")
     if failures:

@@ -25,7 +25,9 @@ Mechanics:
     ``readahead_blocks`` extends each fetch run speculatively.
   * **Bounded retry** — 5xx/408/429, timeouts, connection resets, and short
     bodies retry with exponential backoff up to ``max_retries``; exhaustion
-    raises ``RemoteIOError``.
+    raises ``RemoteIOError``. A ``Retry-After`` header on a throttled
+    response (429/503 from an admission-controlled gateway) overrides the
+    computed backoff, clamped to ``backoff_max``.
   * **Connection reuse** — one persistent HTTP/1.1 connection per thread
     (the chunk fetcher preads from many worker threads concurrently).
   * **Validators** — ETag/Last-Modified are captured at open and sent back
@@ -81,6 +83,7 @@ class RemoteStats:
 
     requests: int = 0  # HTTP requests issued (incl. the open-time probe)
     retries: int = 0  # re-attempts after a transient failure
+    retry_after_waits: int = 0  # retries paced by a server Retry-After header
     bytes_fetched: int = 0  # body bytes received from range responses
 
     def as_dict(self) -> Dict[str, int]:
@@ -281,10 +284,17 @@ class RemoteFileReader(FileReader):
                 % (self._url, self._last_modified, lm)
             )
 
-    def _retry_wait(self, attempt: int) -> None:
+    def _retry_wait(self, attempt: int, retry_after: Optional[float] = None) -> None:
         with self._stats_lock:
             self.stats.retries += 1
+            if retry_after is not None:
+                self.stats.retry_after_waits += 1
         delay = min(self._backoff_max, self._backoff_base * (2 ** attempt))
+        if retry_after is not None:
+            # Server-directed pacing (429/503 Retry-After) wins over our own
+            # backoff, but stays bounded by backoff_max so a hostile header
+            # cannot park the thread.
+            delay = min(max(delay, retry_after), self._backoff_max)
         if delay > 0:
             self._sleep(delay)
 
@@ -292,9 +302,11 @@ class RemoteFileReader(FileReader):
         """Open-time HEAD (falling back to a 1-byte range GET): capture size
         and validators against which every later response is checked."""
         last_exc: Optional[BaseException] = None
+        retry_after: Optional[float] = None
         for attempt in range(self._max_retries + 1):
             if attempt:
-                self._retry_wait(attempt - 1)
+                self._retry_wait(attempt - 1, retry_after)
+            retry_after = None
             try:
                 status, headers, _ = self._do_request("HEAD", {})
                 if status in (405, 501):
@@ -308,6 +320,7 @@ class RemoteFileReader(FileReader):
                 last_exc = exc
                 continue
             if status in TRANSIENT_STATUS:
+                retry_after = parse_retry_after(headers.get("Retry-After"))
                 last_exc = RemoteIOError("HTTP %d probing %s" % (status, self._url))
                 continue
             size: Optional[int] = None
@@ -338,9 +351,11 @@ class RemoteFileReader(FileReader):
         if self._etag is not None:
             extra["If-Range"] = self._etag
         last_exc: Optional[BaseException] = None
+        retry_after: Optional[float] = None
         for attempt in range(self._max_retries + 1):
             if attempt:
-                self._retry_wait(attempt - 1)
+                self._retry_wait(attempt - 1, retry_after)
+            retry_after = None
             try:
                 status, headers, body = self._do_request("GET", extra)
             except (OSError, http.client.HTTPException) as exc:
@@ -350,6 +365,7 @@ class RemoteFileReader(FileReader):
                 last_exc = exc
                 continue
             if status in TRANSIENT_STATUS:
+                retry_after = parse_retry_after(headers.get("Retry-After"))
                 last_exc = RemoteIOError(
                     "HTTP %d for bytes=%d-%d of %s" % (status, start, end_incl, self._url)
                 )
@@ -554,6 +570,22 @@ class RemoteFileReader(FileReader):
         if tail_keep < len(parts[-1]):
             parts[-1] = parts[-1][:tail_keep]
         return b"".join(parts)
+
+
+def parse_retry_after(value: Optional[str]) -> Optional[float]:
+    """Seconds out of a Retry-After header (delta-seconds form only).
+
+    The HTTP-date form is legal but never emitted by our gateway and rarely
+    by object stores; it parses to None and the caller falls back to its own
+    backoff. Negative/garbage values also parse to None.
+    """
+    if not value:
+        return None
+    try:
+        seconds = float(value.strip())
+    except ValueError:
+        return None
+    return seconds if seconds >= 0 else None
 
 
 def _parse_content_range(value: Optional[str]) -> Tuple[Optional[int], Optional[int]]:

@@ -33,11 +33,24 @@ Wire protocol (all request/response bodies JSON unless noted):
                                                    gateway's ``stream_span``
                                                    stream chunked
                                                    (``Transfer-Encoding``).
-    GET         /v1/archives/{h}/stat              JSON `ArchiveStat`
+    GET         /v1/archives/{h}/stat              JSON `ArchiveStat` (+ETag;
+                                                   ``If-None-Match`` -> 304)
+    GET         /v1/archives/{h}/index             finalized seek-index blob
+                                                   (binary GzipIndex). ``{h}``
+                                                   is a handle **or** a 64-hex
+                                                   ``file_identity`` key;
+                                                   ``ETag`` is the bare key.
+                                                   404 until finalized.
     DELETE      /v1/archives/{h}                   close -> 204
     GET         /v1/metrics                        fleet metrics + gateway/
                                                    bridge/admission sections
+                                                   (incl. per-handle stream
+                                                   progress)
     ==========  =================================  =============================
+
+    ``GET``/``HEAD`` on ``/bytes`` and ``/stat`` honor ``If-None-Match``
+    (ETag revalidation -> ``304 Not Modified``), which lets a fleet client
+    re-validate a failover target for the cost of headers, not a body.
 
 The ``/bytes`` endpoint deliberately speaks the exact single-range dialect
 `core.remote.RemoteFileReader` consumes (206/416, ``Content-Range``,

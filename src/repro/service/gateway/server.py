@@ -41,6 +41,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 from ...core.remote import is_remote_url
 from ..async_server import AsyncArchiveServer
+from ..index_store import _is_key
 from ..server import ArchiveServer
 from .admission import AdmissionDenied, TenantAdmission, Unauthorized
 
@@ -81,6 +82,8 @@ class _GatewayStats:
         self._lock = threading.Lock()
         self._counters: Dict[str, int] = {}
         self._tenant_bytes: Dict[str, int] = {}
+        self._streams: Dict[int, Dict[str, Any]] = {}
+        self._stream_seq = 0
 
     def bump(self, key: str, n: int = 1) -> None:
         with self._lock:
@@ -90,11 +93,55 @@ class _GatewayStats:
         with self._lock:
             self._tenant_bytes[tenant] = self._tenant_bytes.get(tenant, 0) + n
 
+    # Per-stream progress: a fleet health probe polling /v1/metrics can tell
+    # a stuck peer (sent frozen across probes while a stream is registered)
+    # from a merely slow one (sent advancing) — liveness data that a single
+    # cumulative byte counter cannot provide once several streams multiplex.
+
+    def stream_begin(self, handle: str, tenant: str, total: int) -> int:
+        with self._lock:
+            self._stream_seq += 1
+            sid = self._stream_seq
+            self._streams[sid] = {
+                "handle": handle, "tenant": tenant, "sent": 0, "total": total
+            }
+            return sid
+
+    def stream_progress(self, sid: int, n: int) -> None:
+        with self._lock:
+            st = self._streams.get(sid)
+            if st is not None:
+                st["sent"] += n
+
+    def stream_end(self, sid: int) -> None:
+        with self._lock:
+            self._streams.pop(sid, None)
+
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             out: Dict[str, Any] = dict(self._counters)
             out["bytes_served_per_tenant"] = dict(self._tenant_bytes)
+            out["streams_in_progress"] = {
+                str(sid): dict(st) for sid, st in self._streams.items()
+            }
             return out
+
+
+def _etag_matches(header_value: str, etag: str) -> bool:
+    """``If-None-Match`` comparison: ``*``, or any listed entity-tag equal to
+    ours. Weak-comparison (RFC 9110 §8.8.3.2): a ``W/`` prefix on either side
+    is ignored — correct for 304 revalidation, which this header serves."""
+    header_value = header_value.strip()
+    if header_value == "*":
+        return True
+    ours = etag[2:] if etag.startswith("W/") else etag
+    for candidate in header_value.split(","):
+        candidate = candidate.strip()
+        if candidate.startswith("W/"):
+            candidate = candidate[2:]
+        if candidate == ours:
+            return True
+    return False
 
 
 def _parse_range(value: Optional[str], size: int):
@@ -201,6 +248,7 @@ class GatewayServer:
         self._asrv: Optional[AsyncArchiveServer] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._conn_tasks: set = set()
+        self._conn_writers: set = set()
         self._tenant_of: Dict[str, str] = {}  # handle -> opener's tenant
         self._started = False
         self._closed = False
@@ -272,6 +320,20 @@ class GatewayServer:
             await self._server.wait_closed()
         for task in list(self._conn_tasks):
             task.cancel()
+        # Abort every remaining transport, for two reasons. (1) A cancelled
+        # handler still closes its writer gracefully, and that close flushes
+        # buffered response bytes — unbounded when the client stopped
+        # reading (paused stream, full socket buffers). (2) On Python <3.12
+        # wait_for() can swallow a cancellation that races the inner future
+        # completing (bpo-42130) — a handler parked in _drain can survive
+        # its cancel and keep streaming. Either way the response was already
+        # cut mid-body, so buffered bytes carry no value; a dead transport
+        # makes the survivor's next drain raise ConnectionResetError and the
+        # gather below terminate.
+        for w in list(self._conn_writers):
+            transport = w.transport
+            if transport is not None:
+                transport.abort()
         if self._conn_tasks:
             await asyncio.gather(*self._conn_tasks, return_exceptions=True)
         if self._asrv is not None:
@@ -312,6 +374,7 @@ class GatewayServer:
     async def _handle_conn(self, reader: asyncio.StreamReader, writer) -> None:
         task = asyncio.current_task()
         self._conn_tasks.add(task)
+        self._conn_writers.add(writer)
         pushback = b""
         try:
             while True:
@@ -374,6 +437,7 @@ class GatewayServer:
             pass
         finally:
             self._conn_tasks.discard(task)
+            self._conn_writers.discard(writer)
             try:
                 writer.close()
                 await writer.wait_closed()
@@ -580,8 +644,16 @@ class GatewayServer:
             return await self._serve_bytes(req, writer, handle, tenant, keep)
         if len(parts) == 4 and parts[3] == "stat" and req.method == "GET":
             stat = await self._asrv.stat(handle)
-            await self._send_json(writer, 200, stat.as_dict())
+            etag = '"%s"' % (stat.identity or handle)[:32]
+            inm = req.headers.get("if-none-match")
+            if inm is not None and _etag_matches(inm, etag):
+                self.stats.bump("not_modified_304")
+                await self._send(writer, 304, {"ETag": etag})
+                return keep
+            await self._send_json(writer, 200, stat.as_dict(), {"ETag": etag})
             return keep
+        if len(parts) == 4 and parts[3] == "index" and req.method in ("GET", "HEAD"):
+            return await self._serve_index(req, writer, handle, keep)
         await self._send_error(writer, 405, "%s not supported on %s" % (req.method, req.path))
         return keep
 
@@ -622,6 +694,45 @@ class GatewayServer:
         raise PermissionError("source outside the gateway's open_roots jail")
 
     # ------------------------------------------------------------------
+    # the index-exchange endpoint
+    # ------------------------------------------------------------------
+
+    async def _serve_index(self, req: _Request, writer, handle: str, keep: bool) -> bool:
+        """``GET /v1/archives/{h}/index`` — the finalized seek-index blob.
+
+        ``{h}`` is either a live handle or a 64-hex ``file_identity`` store
+        key: peers fetching across nodes only know the content-addressed key
+        (they never saw this node's handle ids). The response ETag is the
+        bare key, which is how the fetching side validates it got the index
+        of the exact file version it asked about. 404 until the index is
+        finalized — a speculative (unconfirmed) index must not propagate.
+        """
+        if _is_key(handle):
+            blob = self._sync.index_store.get_blob(handle)
+            pair = (handle, blob) if blob is not None else None
+        else:
+            pair = self._sync.index_blob(handle)  # KeyError -> 404 upstream
+        if pair is None:
+            await self._send_error(
+                writer, 404, "no finalized index for %r" % handle
+            )
+            return keep
+        key, blob = pair
+        etag = '"%s"' % key
+        headers = {"ETag": etag, "Content-Type": "application/octet-stream"}
+        inm = req.headers.get("if-none-match")
+        if inm is not None and _etag_matches(inm, etag):
+            self.stats.bump("not_modified_304")
+            await self._send(writer, 304, {"ETag": etag})
+            return keep
+        self.stats.bump("index_served")
+        await self._send(
+            writer, 200, headers, blob,
+            head_only=req.method == "HEAD", content_length=len(blob),
+        )
+        return keep
+
+    # ------------------------------------------------------------------
     # the bytes endpoint
     # ------------------------------------------------------------------
 
@@ -639,6 +750,15 @@ class GatewayServer:
                 stat = await self._asrv.stat(handle)  # identity known now
             etag = '"%s"' % (stat.identity or handle)[:32]
             base_headers = {"ETag": etag, "Accept-Ranges": "bytes"}
+
+            inm = req.headers.get("if-none-match")
+            if inm is not None and _etag_matches(inm, etag):
+                # Conditional revalidation (e.g. FleetClient confirming a
+                # failover target serves the same object version): no body,
+                # no backend read.
+                self.stats.bump("not_modified_304")
+                await self._send(writer, 304, base_headers)
+                return keep
 
             rng = _parse_range(req.headers.get("range"), size)
             if_range = req.headers.get("if-range")
@@ -676,6 +796,7 @@ class GatewayServer:
             self.stats.bump("streams")
             base_headers["Transfer-Encoding"] = "chunked"
             await self._send(writer, status, base_headers)
+            sid = self.stats.stream_begin(handle, tenant, span)
             try:
                 off = start
                 while off < stop:
@@ -687,6 +808,7 @@ class GatewayServer:
                     writer.write(b"%x\r\n" % len(data) + data + b"\r\n")
                     await self._drain(writer)
                     self.stats.served(tenant, len(data))
+                    self.stats.stream_progress(sid, len(data))
                     off += len(data)
                 writer.write(b"0\r\n\r\n")
                 await self._drain(writer)
@@ -702,6 +824,8 @@ class GatewayServer:
                 # connection, never write.
                 self.stats.bump("stream_aborts")
                 return False
+            finally:
+                self.stats.stream_end(sid)
         except asyncio.CancelledError:
             # Client gone mid-request: the bridged await was already
             # cancelled by our own cancellation; also drop the speculation

@@ -24,7 +24,7 @@ import hashlib
 import os
 import threading
 from dataclasses import dataclass
-from typing import Dict, Optional, Union
+from typing import Callable, Dict, Optional, Union
 
 from ..core.filereader import FileReader
 from ..core.index import GzipIndex
@@ -91,6 +91,8 @@ class IndexStoreStats:
     misses: int = 0
     puts: int = 0
     rejected: int = 0  # non-finalized indexes refused
+    remote_hits: int = 0  # local misses satisfied by the remote fallback
+    remote_misses: int = 0  # fallback consulted and came back empty/invalid
 
     def as_dict(self) -> Dict[str, int]:
         return {k: int(getattr(self, k)) for k in self.__dataclass_fields__}
@@ -101,15 +103,40 @@ class IndexStore:
 
     ``root=None`` keeps blobs in memory (useful for tests and single-process
     services); a path persists them across restarts.
+
+    ``remote_fallback`` is the cross-node index exchange hook: a callable
+    ``key -> Optional[bytes]`` consulted on a local miss (e.g. asking fleet
+    peers' ``GET /v1/archives/{key}/index``). Fetches are single-flighted
+    per key, the returned blob must parse as a *finalized* ``GzipIndex`` or
+    it is discarded, and a valid blob is installed locally so later gets hit
+    without another network round trip. Identity validation happens on both
+    sides: keys are content-addressed (``file_identity``) so the fetcher can
+    check the peer's ETag against the very key it asked for, and a blob that
+    fails to parse or is unfinalized never reaches a reader.
     """
 
-    def __init__(self, root: Optional[Union[str, os.PathLike]] = None):
+    def __init__(
+        self,
+        root: Optional[Union[str, os.PathLike]] = None,
+        *,
+        remote_fallback: Optional[Callable[[str], Optional[bytes]]] = None,
+    ):
         self.root = os.fspath(root) if root is not None else None
         if self.root is not None:
             os.makedirs(self.root, exist_ok=True)
         self._mem: Dict[str, bytes] = {}
         self._lock = threading.Lock()
+        self._fallback = remote_fallback
+        self._ff_lock = threading.Lock()
+        self._ff_inflight: Dict[str, threading.Event] = {}
         self.stats = IndexStoreStats()
+
+    def set_remote_fallback(
+        self, fn: Optional[Callable[[str], Optional[bytes]]]
+    ) -> None:
+        """Install/replace the fallback after construction (fleet wiring
+        happens once every peer's URL is known, after all servers bind)."""
+        self._fallback = fn
 
     # -- keys ---------------------------------------------------------------
 
@@ -124,22 +151,93 @@ class IndexStore:
 
     def get(self, source) -> Optional[GzipIndex]:
         key = self.key_for(source)
-        blob: Optional[bytes] = None
-        if self.root is None:
-            with self._lock:
-                blob = self._mem.get(key)
-        else:
-            try:
-                with open(self._path(key), "rb") as f:
-                    blob = f.read()
-            except FileNotFoundError:
-                blob = None
+        blob = self._local_blob(key)
+        if blob is None and self._fallback is not None:
+            blob = self._fetch_remote(key)
         with self._lock:
             if blob is None:
                 self.stats.misses += 1
             else:
                 self.stats.hits += 1
         return GzipIndex.from_bytes(blob) if blob is not None else None
+
+    def get_blob(self, source) -> Optional[bytes]:
+        """Raw local blob by key/source — no fallback, no hit/miss counting.
+
+        This is the serving side of the index exchange (the gateway's
+        ``/index`` endpoint): it must never recurse into the fallback (node A
+        asking node B asking node A) and must not skew the open-path hit
+        rate with exchange traffic.
+        """
+        return self._local_blob(self.key_for(source))
+
+    def _local_blob(self, key: str) -> Optional[bytes]:
+        if self.root is None:
+            with self._lock:
+                return self._mem.get(key)
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
+
+    def _install(self, key: str, blob: bytes) -> None:
+        if self.root is None:
+            with self._lock:
+                self._mem[key] = blob
+            return
+        tmp = "%s.%d.%x.tmp" % (self._path(key), os.getpid(), threading.get_ident())
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self._path(key))
+
+    def _fetch_remote(self, key: str) -> Optional[bytes]:
+        """Single-flight remote fetch: concurrent cold opens of the same
+        archive share one network fetch; losers wait and read the installed
+        blob. A failed fetch lets the next waiter try again (bounded by the
+        number of waiting threads), so a transient peer error does not stick."""
+        while True:
+            with self._ff_lock:
+                ev = self._ff_inflight.get(key)
+                if ev is None:
+                    self._ff_inflight[key] = threading.Event()
+                    break
+            ev.wait()
+            blob = self._local_blob(key)
+            if blob is not None:
+                return blob
+            # Winner failed; fall through and claim the fetch ourselves.
+        fallback = self._fallback
+        blob = None
+        try:
+            try:
+                raw = fallback(key) if fallback is not None else None
+            except Exception:
+                # Peer/network faults must degrade to a cold first pass,
+                # never fail the open.
+                raw = None
+            blob = self._validate_remote(raw)
+            with self._lock:
+                if blob is None:
+                    self.stats.remote_misses += 1
+                else:
+                    self.stats.remote_hits += 1
+            if blob is not None:
+                self._install(key, blob)
+            return blob
+        finally:
+            with self._ff_lock:
+                self._ff_inflight.pop(key).set()
+
+    @staticmethod
+    def _validate_remote(raw: Optional[bytes]) -> Optional[bytes]:
+        if raw is None:
+            return None
+        try:
+            index = GzipIndex.from_bytes(raw)
+        except Exception:
+            return None
+        return raw if index.finalized else None
 
     def put(self, source, index: GzipIndex) -> Optional[str]:
         """Persist a *finalized* index; returns its key (None if refused)."""
@@ -148,19 +246,12 @@ class IndexStore:
                 self.stats.rejected += 1
             return None
         key = self.key_for(source)
-        blob = index.to_bytes()
-        if self.root is None:
-            with self._lock:
-                self._mem[key] = blob
-        else:
-            # Unique tmp per writer: two threads closing handles on the same
-            # archive race put() for the same key, and a shared '<key>.tmp'
-            # would interleave their writes before the rename, installing a
-            # torn blob despite the atomic replace.
-            tmp = "%s.%d.%x.tmp" % (self._path(key), os.getpid(), threading.get_ident())
-            with open(tmp, "wb") as f:
-                f.write(blob)
-            os.replace(tmp, self._path(key))  # atomic: readers never see partial blobs
+        # _install writes to a unique tmp per writer then renames: two
+        # threads closing handles on the same archive race put() for the
+        # same key, and a shared '<key>.tmp' would interleave their writes
+        # before the rename, installing a torn blob despite the atomic
+        # replace.
+        self._install(key, index.to_bytes())
         with self._lock:
             self.stats.puts += 1
         return key

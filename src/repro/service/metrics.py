@@ -168,22 +168,58 @@ def format_summary(snapshot: Mapping[str, Any]) -> str:
             )
     store = snapshot.get("index_store")
     if store is not None:
-        lines.append(
-            "index store: %d hits, %d misses, %d puts"
-            % (store["hits"], store["misses"], store["puts"])
+        line = "index store: %d hits, %d misses, %d puts" % (
+            store["hits"], store["misses"], store["puts"]
         )
+        if store.get("remote_hits") or store.get("remote_misses"):
+            line += " (index exchange: %d fetched, %d failed)" % (
+                store.get("remote_hits", 0), store.get("remote_misses", 0)
+            )
+        lines.append(line)
     gateway = snapshot.get("gateway")
     if gateway is not None:
         bridge = snapshot.get("bridge", {})
         lines.append(
             "gateway: %d requests (%d opened, %d reads, %d streams),"
-            " %d x 429, %d disconnects, bridge %d/%d started (%d cancelled)"
+            " %d x 429, %d x 304, %d disconnects,"
+            " bridge %d/%d started (%d cancelled)"
             % (gateway.get("requests", 0), gateway.get("opened", 0),
                gateway.get("reads", 0), gateway.get("streams", 0),
                gateway.get("rejected_429", 0),
+               gateway.get("not_modified_304", 0),
                gateway.get("disconnects_mid_stream", 0)
                + gateway.get("disconnects_mid_request", 0),
                bridge.get("started", 0), bridge.get("submitted", 0),
                bridge.get("cancelled", 0))
         )
+        active = gateway.get("streams_in_progress") or {}
+        for sid, st in sorted(active.items()):
+            total = st.get("total", 0) or 1
+            lines.append(
+                "  stream[%s] %s/%s: %d/%d bytes (%.0f%%)"
+                % (sid, st.get("tenant", "?"), st.get("handle", "?"),
+                   st.get("sent", 0), st.get("total", 0),
+                   100.0 * st.get("sent", 0) / total)
+            )
+    router = snapshot.get("router")
+    if router is not None:
+        membership = router.get("membership", {})
+        counters = router.get("counters", {})
+        lines.append(
+            "fleet router: %d/%d peers alive, %d opens, %d failovers"
+            " (%d streams resumed), %d revalidations"
+            % (membership.get("alive", 0), membership.get("total", 0),
+               counters.get("opens", 0), counters.get("failovers", 0),
+               counters.get("resumed_streams", 0),
+               counters.get("revalidations", 0))
+        )
+        for url, peer in sorted(membership.get("peers", {}).items()):
+            lines.append(
+                "  peer %s: %s, %d consecutive failures, %d probes,"
+                " -%d/+%d eject/readmit, %d stuck streams"
+                % (url, "alive" if peer.get("alive") else "EJECTED",
+                   peer.get("consecutive_failures", 0),
+                   peer.get("probes", 0), peer.get("ejections", 0),
+                   peer.get("readmissions", 0), peer.get("stuck_streams", 0))
+            )
     return "\n".join(lines)

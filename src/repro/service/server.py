@@ -424,6 +424,25 @@ class ArchiveServer:
                 return None
             return self.index_store.put(entry.identity, entry.reader.index)
 
+    def index_blob(self, handle: str) -> Optional[tuple]:
+        """(identity key, finalized index blob) for a handle, else None.
+
+        The serving side of the fleet index exchange: a live finalized
+        reader serializes its in-memory index; a lazy (never-read) handle
+        can still be served from the local store if a previous session
+        persisted it. Non-finalized indexes are never exported — an importer
+        would trust seek points that the speculative pass has not confirmed.
+        """
+        entry = self._entry(handle)
+        with entry.lock:
+            if entry.reader is not None and entry.reader.index.finalized:
+                return entry.identity, entry.reader.index.to_bytes()
+            if entry.identity is not None:
+                blob = self.index_store.get_blob(entry.identity)
+                if blob is not None:
+                    return entry.identity, blob
+        return None
+
     def close(self, handle: str, *, persist_index: bool = True) -> None:
         entry = self._entry(handle)
         with entry.cond:

@@ -68,6 +68,7 @@ BACKENDS = [
     "python_short",
     pytest.param("remote", marks=pytest.mark.remote),
     pytest.param("gateway", marks=pytest.mark.gateway),
+    pytest.param("fleet", marks=pytest.mark.gateway),
 ]
 
 
@@ -89,6 +90,33 @@ def gateway_over_data(tmp_path_factory):
         yield gw, str(path)
 
 
+@pytest.fixture(scope="module")
+def fleet_over_data(tmp_path_factory):
+    """Three loopback gateways behind a FleetRouter, all serving DATA: the
+    FleetClient backend adds placement + failover on top of the gateway
+    wire path, and must still honor the exact same pread contract."""
+    import gzip
+
+    from repro.service.gateway import GatewayServer
+    from repro.service.fleet import FleetRouter
+
+    path = tmp_path_factory.mktemp("fleetdata") / "contract.gz"
+    path.write_bytes(gzip.compress(DATA, 6))
+    gws = [
+        GatewayServer(
+            cache_budget_bytes=4 << 20, max_workers=2, chunk_size=16 << 10
+        ).start()
+        for _ in range(3)
+    ]
+    router = FleetRouter([gw.url for gw in gws])
+    try:
+        yield router, str(path)
+    finally:
+        router.close()
+        for gw in gws:
+            gw.close()
+
+
 @pytest.fixture(params=BACKENDS)
 def backend(request, tmp_path):
     """(reader, cleanup-managed) FileReader over DATA for each backend."""
@@ -98,6 +126,11 @@ def backend(request, tmp_path):
 
         gw, path = request.getfixturevalue("gateway_over_data")
         reader = GatewayClient(gw.url, source=path, block_size=4096, cache_blocks=8)
+        yield reader
+        reader.close()
+    elif kind == "fleet":
+        router, path = request.getfixturevalue("fleet_over_data")
+        reader = router.open(path, block_size=4096, cache_blocks=8)
         yield reader
         reader.close()
     elif kind == "bytes":

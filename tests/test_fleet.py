@@ -1,0 +1,655 @@
+"""Sharded archive fleet: placement, failover, membership, index exchange.
+
+Everything speaks HTTP only to in-process loopback gateways (marker
+``gateway`` — hermetic, tier-1 stays offline). The failover acceptance test
+kills the owning gateway while a chunked stream is mid-flight and asserts
+the resumed concatenation is bit-identical; the index-exchange test asserts
+a *cold* open on a peer that never saw the archive does zero speculative
+work because it imported the index over the wire.
+"""
+
+import gzip
+import hashlib
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+import pytest
+
+from conftest import gzip_bytes, make_text
+from repro.core import GzipIndex, ParallelGzipReader
+from repro.core.errors import RemoteFileChangedError
+from repro.service import ArchiveServer, IndexStore
+from repro.service.index_store import file_identity
+from repro.service.gateway import GatewayClient, GatewayError, GatewayServer
+from repro.service.fleet import (
+    FleetMembership,
+    FleetRouter,
+    FleetUnavailable,
+    fetch_index_from_peers,
+    make_index_fallback,
+    rendezvous_rank,
+    rendezvous_score,
+)
+
+pytestmark = pytest.mark.gateway
+
+
+# ---------------------------------------------------------------------------
+# rendezvous hashing: determinism + minimal disruption
+# ---------------------------------------------------------------------------
+
+def test_rendezvous_score_is_sha256_derived_and_stable():
+    # The score must be process-stable (never hash(), which is salted):
+    # recompute the documented construction independently.
+    key, peer = "a" * 64, "http://127.0.0.1:1234"
+    h = hashlib.sha256(peer.encode() + b"\0" + key.encode()).digest()
+    assert rendezvous_score(key, peer) == int.from_bytes(h[:8], "big")
+    assert rendezvous_score(key, peer) == rendezvous_score(key, peer)
+
+
+def test_rendezvous_rank_minimal_disruption():
+    peers = ["http://10.0.0.%d:80" % i for i in range(1, 6)]
+    keys = [hashlib.sha256(str(i).encode()).hexdigest() for i in range(200)]
+    before = {k: rendezvous_rank(k, peers) for k in keys}
+    # every permutation of the input yields the same order
+    assert all(rendezvous_rank(k, list(reversed(peers))) == before[k] for k in keys)
+    dead = peers[2]
+    after = {k: rendezvous_rank(k, [p for p in peers if p != dead]) for k in keys}
+    for k in keys:
+        # removing one peer deletes it from the preference order and changes
+        # nothing else — keys it did not own keep their owner
+        assert after[k] == [p for p in before[k] if p != dead]
+    moved = sum(1 for k in keys if before[k][0] == dead)
+    assert 0 < moved < len(keys)  # ~1/5 of keys owned by the dead peer
+
+
+def test_router_key_for_hex_passthrough_and_identity(tmp_path):
+    router = FleetRouter(["http://127.0.0.1:1"])
+    key = "f" * 64
+    assert router.key_for(key) == key
+    p = tmp_path / "x.gz"
+    p.write_bytes(gzip.compress(b"hello"))
+    assert router.key_for(str(p)) == file_identity(str(p))
+    router.close()
+
+
+def test_router_requires_exactly_one_of_peers_or_membership():
+    with pytest.raises(ValueError):
+        FleetRouter()
+    with pytest.raises(ValueError):
+        FleetRouter(["http://a"], membership=FleetMembership(["http://a"]))
+
+
+# ---------------------------------------------------------------------------
+# membership: ejection, re-admission, stuck streams (injected probe)
+# ---------------------------------------------------------------------------
+
+def test_membership_validation():
+    with pytest.raises(ValueError):
+        FleetMembership([])
+    with pytest.raises(ValueError):
+        FleetMembership(["http://a", "http://a/"])  # same after rstrip
+    with pytest.raises(ValueError):
+        FleetMembership(["http://a"], eject_after=0)
+
+
+def test_membership_eject_and_readmit_with_injected_probe():
+    up = {"http://a": True, "http://b": True}
+
+    def probe(url):
+        if not up[url]:
+            raise OSError("down")
+        return {"gateway": {"streams_in_progress": {}}}
+
+    m = FleetMembership(["http://a", "http://b"], eject_after=2, probe=probe)
+    assert sorted(m.alive()) == ["http://a", "http://b"]
+    up["http://b"] = False
+    m.probe_once()
+    assert "http://b" in m.alive()  # one failure < eject_after: still in
+    m.probe_once()
+    assert m.alive() == ["http://a"]
+    snap = m.snapshot()["peers"]["http://b"]
+    assert not snap["alive"] and snap["ejections"] == 1
+    # one good probe re-admits; the consecutive-failure counter resets
+    up["http://b"] = True
+    m.probe_once()
+    snap = m.snapshot()["peers"]["http://b"]
+    assert snap["alive"] and snap["readmissions"] == 1
+    assert snap["consecutive_failures"] == 0
+    assert snap["probes"] == 3
+
+
+def test_membership_data_path_failures_count_toward_ejection():
+    m = FleetMembership(["http://a", "http://b"], eject_after=2)
+    m.report_failure("http://a", OSError("reset"))
+    assert "http://a" in m.alive()
+    m.report_failure("http://a")
+    assert m.alive() == ["http://b"]
+    m.report_failure("http://nobody")  # unknown peers are ignored, not added
+    assert m.peers() == ["http://a", "http://b"]
+
+
+def test_membership_stuck_stream_detection():
+    sent = {"7": 1000}
+
+    def probe(url):
+        return {"gateway": {"streams_in_progress": {
+            k: {"handle": "f1", "tenant": "t", "sent": v, "total": 9999}
+            for k, v in sent.items()
+        }}}
+
+    m = FleetMembership(["http://a"], probe=probe)
+    m.probe_once()
+    assert m.snapshot()["peers"]["http://a"]["stuck_streams"] == 0  # first sight
+    m.probe_once()  # byte count unchanged between probes -> stuck
+    assert m.snapshot()["peers"]["http://a"]["stuck_streams"] == 1
+    sent["7"] = 2000  # progress resumed -> merely slow, not stuck
+    m.probe_once()
+    assert m.snapshot()["peers"]["http://a"]["stuck_streams"] == 0
+
+
+# ---------------------------------------------------------------------------
+# IndexStore remote fallback: validation + single flight
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def finalized_blob(tmp_path_factory):
+    """(key-agnostic) serialized finalized GzipIndex over a small corpus."""
+    rng = np.random.default_rng(0x1D3)
+    data = make_text(rng, 150_000)
+    comp = gzip_bytes(data, 6)
+    with ParallelGzipReader(comp, parallelization=2, chunk_size=32 << 10) as r:
+        assert r.read() == data
+        assert r.index.finalized
+        return r.index.to_bytes()
+
+
+def test_index_store_fallback_installs_valid_blob(finalized_blob):
+    calls = []
+
+    def fallback(key):
+        calls.append(key)
+        return finalized_blob
+
+    store = IndexStore(remote_fallback=fallback)
+    key = "a" * 64
+    idx = store.get(key)
+    assert idx is not None and idx.finalized
+    assert calls == [key]
+    assert store.stats.remote_hits == 1 and store.stats.hits == 1
+    # installed locally: the next get hits without another fetch
+    assert store.get(key) is not None
+    assert calls == [key]
+    assert store.stats.hits == 2 and store.stats.remote_hits == 1
+
+
+@pytest.mark.parametrize("raw", [None, b"", b"garbage", b"NOTANIDX" + b"\0" * 64])
+def test_index_store_fallback_rejects_invalid_blobs(raw):
+    store = IndexStore(remote_fallback=lambda key: raw)
+    assert store.get("b" * 64) is None
+    assert store.stats.misses == 1
+    assert store.stats.remote_misses == 1 and store.stats.remote_hits == 0
+
+
+def test_index_store_fallback_swallows_fetch_errors():
+    def fallback(key):
+        raise OSError("peer down")
+
+    store = IndexStore(remote_fallback=fallback)
+    assert store.get("c" * 64) is None  # degrades to a cold miss, no raise
+    assert store.stats.remote_misses == 1
+
+
+def test_index_store_fallback_single_flight(finalized_blob):
+    release = threading.Event()
+    calls = []
+
+    def fallback(key):
+        calls.append(key)
+        release.wait(timeout=10)
+        return finalized_blob
+
+    store = IndexStore(remote_fallback=fallback)
+    results = []
+    threads = [
+        threading.Thread(target=lambda: results.append(store.get("d" * 64)))
+        for _ in range(4)
+    ]
+    for t in threads:
+        t.start()
+    time.sleep(0.2)  # let every thread reach the fetch
+    release.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert len(calls) == 1  # one network fetch, three waiters
+    assert len(results) == 4 and all(r is not None for r in results)
+    assert store.stats.remote_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# wire fixtures: a 3-peer loopback fleet
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small(tmp_path_factory):
+    rng = np.random.default_rng(0x51A11)
+    data = make_text(rng, 250_000)
+    path = tmp_path_factory.mktemp("fleetsmall") / "small.gz"
+    path.write_bytes(gzip_bytes(data, 6))
+    return str(path), data
+
+
+@pytest.fixture(scope="module")
+def big(tmp_path_factory):
+    # ~9.8 MB decompressed: large enough that a chunked stream cannot be
+    # fully absorbed by loopback socket buffers before the owner is killed
+    # (else the client drains the stream from buffers and never fails over).
+    rng = np.random.default_rng(0xF1EE7)
+    words = [rng.bytes(3) * 2 for _ in range(64)]
+    data = b" ".join(words[int(i)] for i in rng.integers(0, 64, 1_400_000))
+    path = tmp_path_factory.mktemp("fleetbig") / "big.gz"
+    path.write_bytes(gzip_bytes(data, 5))
+    return str(path), data
+
+
+@pytest.fixture
+def fleet(tmp_path):
+    """Factory: n loopback gateways (own ArchiveServer + IndexStore each,
+    cross-wired index fallbacks) behind a FleetRouter with eject_after=1."""
+    made = []
+
+    def make(n=3, *, wire_exchange=True, **router_kwargs):
+        stores, servers, gws = [], [], []
+        for i in range(n):
+            store = IndexStore(tmp_path / ("idx%d" % i))
+            srv = ArchiveServer(
+                cache_budget_bytes=8 << 20, max_workers=2,
+                chunk_size=128 << 10, index_store=store,
+            )
+            gw = GatewayServer(srv, stream_span=64 << 10).start()
+            stores.append(store)
+            servers.append(srv)
+            gws.append(gw)
+        urls = [gw.url for gw in gws]
+        if wire_exchange:
+            for i, store in enumerate(stores):
+                store.set_remote_fallback(
+                    make_index_fallback(urls, exclude=[urls[i]])
+                )
+        router_kwargs.setdefault("eject_after", 1)
+        router = FleetRouter(urls, **router_kwargs)
+        made.append((router, gws, servers))
+        return router, gws, stores
+
+    yield make
+    for router, gws, servers in made:
+        router.close()
+        for gw in gws:
+            try:
+                gw.close()
+            except Exception:  # noqa: BLE001 - killed mid-test on purpose
+                pass
+        for srv in servers:
+            srv.shutdown()
+
+
+def _gw_for(gws, url):
+    return next(gw for gw in gws if gw.url == url)
+
+
+# ---------------------------------------------------------------------------
+# placement on the wire
+# ---------------------------------------------------------------------------
+
+def test_fleet_routes_to_owner(fleet, small):
+    path, data = small
+    router, gws, _ = fleet()
+    c = router.open(path)
+    try:
+        assert c.peer == router.owner(c.key)
+        assert c.size() == len(data)
+        assert c.pread(1234, 4096) == data[1234 : 1234 + 4096]
+        # exactly the owner served it — the other peers saw no open
+        for gw in gws:
+            opened = gw.metrics()["gateway"].get("opened", 0)
+            assert opened == (1 if gw.url == c.peer else 0)
+    finally:
+        c.close()
+    assert router.snapshot()["counters"]["opens"] == 1
+
+
+def test_fleet_unavailable_when_all_peers_dead(fleet, small):
+    path, _ = small
+    router, gws, _ = fleet(n=2)
+    for url in router.membership.peers():
+        router.membership.report_failure(url)  # eject_after=1: both out
+    with pytest.raises(FleetUnavailable):
+        router.open(path)
+    with pytest.raises(FleetUnavailable):
+        router.owner("e" * 64)
+
+
+# ---------------------------------------------------------------------------
+# failover acceptance: kill the owner mid-stream, bytes stay bit-identical
+# ---------------------------------------------------------------------------
+
+def test_kill_owner_mid_stream_failover_bit_identical(fleet, big):
+    path, data = big
+    router, gws, _ = fleet()
+    c = router.open(path)
+    owner = c.peer
+    got, n, killed = [], 0, False
+    deadline = time.monotonic() + 120
+    for chunk in c.stream(read_size=64 << 10):
+        got.append(chunk)
+        n += len(chunk)
+        if not killed and n >= 1 << 20:
+            killed = True
+            _gw_for(gws, owner).close()  # peer death, mid-flight
+        assert time.monotonic() < deadline
+    assert killed
+    assert b"".join(got) == data  # bit-identical: exact Range resume
+    assert c.stats["failovers"] >= 1
+    assert c.stats["resumed_streams"] >= 1
+    assert c.peer != owner
+    # pread keeps working on the failover peer
+    assert c.pread(2 << 20, 8192) == data[2 << 20 : (2 << 20) + 8192]
+    # the next probe sweep ejects the dead peer from membership
+    router.membership.probe_once()
+    snap = router.membership.snapshot()
+    assert snap["alive"] == 2
+    assert not snap["peers"][owner]["alive"]
+    c.close()
+
+
+def test_pread_failover_after_owner_death(fleet, small):
+    path, data = small
+    router, gws, _ = fleet()
+    # tiny client-side block cache so the post-kill read must hit the wire
+    # (a big cached block would serve it locally and mask the failover)
+    c = router.open(path, block_size=16 << 10, cache_blocks=1)
+    owner = c.peer
+    assert c.pread(0, 1000) == data[:1000]
+    _gw_for(gws, owner).close()
+    # positional reads re-issue verbatim on the next-best peer
+    assert c.pread(100_000, 1000) == data[100_000:101_000]
+    assert c.pread(len(data) - 500, 500) == data[-500:]
+    assert c.stats["failovers"] == 1
+    assert c.peer != owner
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-node index exchange
+# ---------------------------------------------------------------------------
+
+def test_index_exchange_makes_cold_open_warm(fleet, small):
+    path, data = small
+    router, gws, stores = fleet()
+    # build + persist the index on the owner (close persists finalized index)
+    c = router.open(path)
+    owner = c.peer
+    assert b"".join(c.stream()) == data
+    c.close()
+    key = file_identity(path)
+    assert stores[[gw.url for gw in gws].index(owner)].get_blob(key) is not None
+
+    # a *different* peer now cold-opens the same archive: its local store
+    # misses, the fallback imports the owner's index, and the open does
+    # zero speculative work
+    other = next(gw for gw in gws if gw.url != owner)
+    oi = [gw.url for gw in gws].index(other.url)
+    g = GatewayClient(other.url, source=path)
+    try:
+        stat = g.stat()
+        assert stat["index_was_warm"] is True
+        assert g.pread(5000, 4096) == data[5000 : 5000 + 4096]
+        m = other.metrics()
+        assert m["index_store"]["remote_hits"] == 1
+        assert m["fleet"]["fetcher"]["nominal_tasks"] == 0  # no speculation
+        assert m["fleet"]["frontier"]["lock_acquires"] == 0  # indexed reads only
+        assert stores[oi].get_blob(key) is not None  # installed locally
+    finally:
+        g.close()
+
+
+def test_index_endpoint_serves_blob_by_handle_and_key(fleet, small):
+    path, data = small
+    router, gws, _ = fleet(n=1)
+    gw = gws[0]
+    key = file_identity(path)
+    g = GatewayClient(gw.url, source=path)
+    try:
+        assert b"".join(g.stream()) == data  # finalize the live index
+        blob = g.fetch_index()
+        assert blob is not None
+        idx = GzipIndex.from_bytes(blob)
+        assert idx.finalized
+        # by content key (what a fetching peer knows) — needs the persisted
+        # blob, which lands on handle close below
+    finally:
+        g.close()
+    got = fetch_index_from_peers([gw.url], key)
+    assert got is not None and GzipIndex.from_bytes(got).finalized
+    # unknown key: every peer 404s, fetch degrades to None
+    assert fetch_index_from_peers([gw.url], "0" * 64) is None
+
+
+def test_index_endpoint_404_and_304(fleet, small):
+    path, _ = small
+    router, gws, _ = fleet(n=1)
+    gw = gws[0]
+    g = GatewayClient(gw.url, source=path)
+    try:
+        import http.client as hc
+
+        host, port = gw.url[len("http://"):].rsplit(":", 1)
+
+        def raw_get(p, headers=None):
+            conn = hc.HTTPConnection(host, int(port), timeout=30)
+            try:
+                conn.request("GET", p, headers=headers or {})
+                resp = conn.getresponse()
+                return resp.status, dict(resp.getheaders()), resp.read()
+            finally:
+                conn.close()
+
+        status, headers, _ = raw_get("/v1/archives/%s/index" % g.handle)
+        assert status == 200
+        key = headers["ETag"].strip('"')
+        assert len(key) == 64  # bare content key as validator
+        # revalidation: If-None-Match on the index answers 304, no body
+        status, headers, body = raw_get(
+            "/v1/archives/%s/index" % g.handle, {"If-None-Match": '"%s"' % key}
+        )
+        assert status == 304 and body == b""
+        status, _, _ = raw_get("/v1/archives/%s/index" % ("9" * 64))
+        assert status == 404
+        status, _, _ = raw_get("/v1/archives/nosuch/index")
+        assert status == 404
+    finally:
+        g.close()
+
+
+# ---------------------------------------------------------------------------
+# conditional GET / revalidation on bytes + stat
+# ---------------------------------------------------------------------------
+
+def test_if_none_match_304_on_bytes_and_stat(fleet, small):
+    path, data = small
+    router, gws, _ = fleet(n=1)
+    gw = gws[0]
+    g = GatewayClient(gw.url, source=path)
+    try:
+        import http.client as hc
+
+        host, port = gw.url[len("http://"):].rsplit(":", 1)
+
+        def raw_get(p, headers=None):
+            conn = hc.HTTPConnection(host, int(port), timeout=30)
+            try:
+                conn.request("GET", p, headers=headers or {})
+                resp = conn.getresponse()
+                return resp.status, dict(resp.getheaders()), resp.read()
+            finally:
+                conn.close()
+
+        bytes_path = "/v1/archives/%s/bytes" % g.handle
+        status, headers, _ = raw_get(bytes_path, {"Range": "bytes=0-9"})
+        assert status == 206
+        etag = headers["ETag"]
+        # match -> 304 with no body, even with a Range present
+        for sent in (etag, "W/%s" % etag, '"zzz", %s' % etag, "*"):
+            status, _, body = raw_get(
+                bytes_path, {"If-None-Match": sent, "Range": "bytes=0-9"}
+            )
+            assert status == 304 and body == b"", sent
+        # mismatch -> normal 206
+        status, _, body = raw_get(
+            bytes_path, {"If-None-Match": '"zzz"', "Range": "bytes=0-9"}
+        )
+        assert status == 206 and body == data[:10]
+        # stat endpoint: same validator discipline
+        stat_path = "/v1/archives/%s/stat" % g.handle
+        status, headers, _ = raw_get(stat_path)
+        assert status == 200
+        status, _, body = raw_get(stat_path, {"If-None-Match": headers["ETag"]})
+        assert status == 304 and body == b""
+        assert gw.metrics()["gateway"]["not_modified_304"] >= 5
+        # client-side sugar over the same wire exchange
+        assert g.revalidate(etag) is True
+        assert g.revalidate('"bogus"') is False
+    finally:
+        g.close()
+
+
+# ---------------------------------------------------------------------------
+# per-handle stream progress in /v1/metrics
+# ---------------------------------------------------------------------------
+
+def test_stream_progress_visible_in_metrics(fleet, big):
+    path, data = big
+    router, gws, _ = fleet(n=1)
+    gw = gws[0]
+    g = GatewayClient(gw.url, source=path)
+    try:
+        it = g.stream(read_size=64 << 10)
+        n = 0
+        for chunk in it:
+            n += len(chunk)
+            if n >= 1 << 20:
+                break  # pause mid-stream, connection held open
+        streams = gw.metrics()["gateway"]["streams_in_progress"]
+        assert len(streams) == 1
+        (info,) = streams.values()
+        assert info["handle"] == g.handle
+        assert info["total"] == len(data)
+        assert 0 < info["sent"] <= len(data)
+        it.close()  # abandon: server sees the disconnect
+        deadline = time.monotonic() + 10
+        while gw.metrics()["gateway"]["streams_in_progress"]:
+            assert time.monotonic() < deadline, "stream entry never reaped"
+            time.sleep(0.05)
+    finally:
+        g.close()
+
+
+# ---------------------------------------------------------------------------
+# admission-aware retry budget (scripted 429 server)
+# ---------------------------------------------------------------------------
+
+class _Scripted429Server:
+    """Minimal gateway impostor: bytes HEAD/GET always work; the stat verb
+    follows a script of (status, retry_after) entries, then succeeds."""
+
+    def __init__(self, script):
+        outer = self
+        self.script = list(script)
+        self.stat_requests = 0
+        self._lock = threading.Lock()
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, *args):
+                pass
+
+            def _body(self, status, payload=b"{}", headers=()):
+                self.send_response(status)
+                for k, v in headers:
+                    self.send_header(k, v)
+                self.send_header("Content-Length", str(len(payload)))
+                self.end_headers()
+                self.wfile.write(payload)
+
+            def do_HEAD(self):  # noqa: N802 - http.server API
+                self.send_response(200)
+                self.send_header("Content-Length", "100")
+                self.send_header("Accept-Ranges", "bytes")
+                self.send_header("ETag", '"imp-1"')
+                self.end_headers()
+
+            def do_GET(self):  # noqa: N802 - http.server API
+                if self.path.endswith("/stat"):
+                    with outer._lock:
+                        outer.stat_requests += 1
+                        step = outer.script.pop(0) if outer.script else None
+                    if step is None:
+                        self._body(200, json.dumps({"ok": True}).encode())
+                        return
+                    status, retry_after = step
+                    headers = []
+                    if retry_after is not None:
+                        headers.append(("Retry-After", str(retry_after)))
+                    self._body(status, b'{"error": "busy"}', headers)
+                    return
+                self._body(200, b"x" * 100)
+
+        self._httpd = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, daemon=True
+        )
+        self._thread.start()
+        self.url = "http://127.0.0.1:%d" % self._httpd.server_address[1]
+
+    def close(self):
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=10)
+
+
+def test_retry_budget_absorbs_429_bursts():
+    srv = _Scripted429Server([(429, "0"), (429, None)])
+    try:
+        c = GatewayClient(srv.url, handle="f0", retry_budget=5.0)
+        assert c.stat() == {"ok": True}
+        assert c.retries_429 == 2  # both throttles absorbed, then success
+        assert srv.stat_requests == 3
+        c.close()
+    finally:
+        srv.close()
+
+
+def test_retry_budget_exhaustion_surfaces_429():
+    # Retry-After far beyond the budget: fail fast instead of sleeping
+    srv = _Scripted429Server([(429, "60")] * 10)
+    try:
+        c = GatewayClient(srv.url, handle="f0", retry_budget=0.5)
+        t0 = time.monotonic()
+        with pytest.raises(GatewayError) as exc_info:
+            c.stat()
+        assert time.monotonic() - t0 < 5.0  # did not wait out the 60 s
+        assert exc_info.value.status == 429
+        assert exc_info.value.retry_after == 60.0
+        assert srv.stat_requests == 1
+        c.close()
+    finally:
+        srv.close()
+
+
+def test_retry_budget_validation():
+    with pytest.raises(ValueError):
+        GatewayClient("http://127.0.0.1:1", handle="f0", retry_budget=-1)
