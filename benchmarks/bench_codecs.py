@@ -1,0 +1,106 @@
+"""Codec comparison: random-access latency across deflate, BGZF, and zstd.
+
+The same logical corpus is archived under each codec and probed with the
+same random positional reads, cold (no index: deflate pays the speculative
+first pass; BGZF and zstd build an exact index from framing metadata alone)
+and warm (finalized index imported: all three serve lock-free). The derived
+column records how much speculative work the cold open actually did —
+BGZF's whole point (paper §3.4.4) is that ``nominal_tasks`` stays 0.
+
+Zstd rows appear only when a zstd library is importable (stdlib
+``compression.zstd`` on 3.14+, else the optional ``zstandard`` extra); a
+bare container prints a comment and benchmarks the other two.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ParallelGzipReader
+from repro.core.codec import have_zstd
+from repro.core.synth import bgzf_compress, gzip_compress
+
+from .common import DataGen, emit, scale
+
+_N_READS = 60
+_REQ_SIZE = 16 << 10
+
+
+def _percentile_us(lats, q):
+    return float(np.percentile(np.asarray(lats) * 1e6, q))
+
+
+def _random_access(reader, total: int, n_reads: int, seed: int):
+    rng = np.random.default_rng(seed)
+    offs = rng.integers(0, max(1, total - _REQ_SIZE), size=n_reads)
+    lats = []
+    import time
+
+    for off in offs:
+        t0 = time.perf_counter()
+        reader.pread(int(off), _REQ_SIZE)
+        lats.append(time.perf_counter() - t0)
+    return lats
+
+
+def _bench_one(tag: str, comp: bytes, total: int) -> None:
+    # Chunk size shrinks with the corpus so even a smoke run spans several
+    # chunks — otherwise deflate's cold open degenerates to a single exact
+    # chunk and the speculative-work contrast with BGZF disappears.
+    chunk = scale(512 << 10, floor=32 << 10)
+    # Cold: fresh reader, no index. The first preads race the index build
+    # (speculative for deflate, metadata-walk for BGZF/zstd).
+    with ParallelGzipReader(comp, parallelization=4, chunk_size=chunk) as r:
+        lats = _random_access(r, total, _N_READS, seed=7)
+        st = r.stats()
+        nominal = st["fetcher"]["nominal_tasks"]
+        emit(
+            "codecs.%s.cold_pread_p50" % tag,
+            _percentile_us(lats, 50),
+            "nominal_tasks=%d" % nominal,
+        )
+        emit("codecs.%s.cold_pread_p99" % tag, _percentile_us(lats, 99))
+        r.read()  # complete coverage so the exported index is finalized
+        index_blob = r.index.to_bytes()
+
+    # Warm: import the finalized index — every codec is lock-free here.
+    with ParallelGzipReader(
+        comp, parallelization=4, chunk_size=chunk, index=index_blob
+    ) as r:
+        lats = _random_access(r, total, _N_READS, seed=11)
+        st = r.stats()
+        emit(
+            "codecs.%s.warm_pread_p50" % tag,
+            _percentile_us(lats, 50),
+            "lock_acquires=%d" % st["frontier"]["lock_acquires"],
+        )
+        emit("codecs.%s.warm_pread_p99" % tag, _percentile_us(lats, 99))
+
+
+def main() -> None:
+    gen = DataGen(0xC0DEC)
+    total = scale(8 << 20, floor=256 << 10)
+    data = gen.text(total // 2) + gen.base64(total - total // 2)
+
+    archives = [
+        ("deflate", gzip_compress(data, 6)),
+        ("bgzf", bgzf_compress(data, 6)),
+    ]
+    if have_zstd():
+        from repro.core.synth import zstd_seekable_compress
+
+        archives.append(("zstd", zstd_seekable_compress(data, 3)))
+    else:
+        print("# codecs: no zstd library importable — zstd rows skipped")
+
+    for tag, comp in archives:
+        emit(
+            "codecs.%s.compressed_ratio" % tag,
+            0.0,
+            "%.3f" % (len(comp) / max(1, len(data))),
+        )
+        _bench_one(tag, comp, len(data))
+
+
+if __name__ == "__main__":
+    main()

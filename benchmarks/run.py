@@ -47,7 +47,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default="",
-        help="comma list: components,decomp,kernels,roofline,service,remote,gateway,fleet",
+        help="comma list: components,decomp,kernels,roofline,codecs,service,remote,gateway,fleet",
     )
     ap.add_argument(
         "--smoke", action="store_true",
@@ -75,6 +75,13 @@ def main() -> None:
         from . import roofline_report
 
         sections.append(("roofline", roofline_report.main))
+    if only is None or "codecs" in only:
+        from . import bench_codecs
+
+        # Same logical corpus under deflate/BGZF/zstd: cold vs warm
+        # random-access p50, with the cold row recording nominal_tasks
+        # (BGZF must show 0 — exact index from framing metadata alone).
+        sections.append(("codecs", bench_codecs.main))
     if only is None or "service" in only:
         from . import bench_service
 

@@ -14,7 +14,18 @@ from .block_finder import (
     scan_dynamic_candidates,
     scan_stored_candidates,
 )
-from .chunk_fetcher import FinalizedChunk, GzipChunkFetcher
+from .chunk_fetcher import ChunkFetcher, FinalizedChunk, GzipChunkFetcher
+from .codec import (
+    CODECS,
+    BgzfCodec,
+    Codec,
+    DeflateCodec,
+    ZstdCodec,
+    detect_codec,
+    detect_codec_tag,
+    have_zstd,
+    resolve_codec,
+)
 from .crc32 import RunningCRC, crc32_combine
 from .deflate import (
     DecodeResult,
@@ -52,12 +63,17 @@ from .reader import ParallelGzipReader
 __all__ = [
     "AdaptivePrefetchStrategy",
     "BackwardPrefetchStrategy",
+    "BgzfCodec",
     "BitReader",
     "BlockNotFoundError",
     "BytesFileReader",
+    "CODECS",
+    "ChunkFetcher",
+    "Codec",
     "CombinedBlockFinder",
     "DecodeResult",
     "DeflateChunkDecoder",
+    "DeflateCodec",
     "DeflateError",
     "FileReader",
     "FilterStats",
@@ -79,9 +95,14 @@ __all__ = [
     "SeekPoint",
     "SharedFileReader",
     "WINDOW_SIZE",
+    "ZstdCodec",
     "canonical_stored_offset",
     "crc32_combine",
     "detect_bgzf",
+    "detect_codec",
+    "detect_codec_tag",
+    "have_zstd",
+    "resolve_codec",
     "find_dynamic_skiplut",
     "find_dynamic_trial",
     "gzip_decompress_sequential",

@@ -35,17 +35,13 @@ import threading
 import zlib as _zlib
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from .block_finder import CombinedBlockFinder
 from .cache import LRUCache
-from .deflate import (
-    DecodeResult,
-    DeflateChunkDecoder,
-    WINDOW_SIZE,
-)
+from .codec import Codec, resolve_codec
+from .deflate import DecodeResult
 from .errors import BlockNotFoundError, DeflateError, EndOfStream, RapidgzipError
 from .filereader import FileReader
 from .index import (
@@ -55,9 +51,7 @@ from .index import (
     GzipIndex,
     SeekPoint,
 )
-from .markers import propagate_window, replacement_table, replace_markers
 from .prefetch import AdaptivePrefetchStrategy, PrefetchStrategy
-from .zlib_bridge import zlib_inflate_at
 
 DEFAULT_CHUNK_SIZE = 4 << 20  # paper §1.4: 4 MiB default compressed chunk size
 #: deflate's maximum compression ratio is ~1032 (paper §1.4); the cap guards
@@ -115,8 +109,14 @@ class FinalizedChunk:
         return segs
 
 
-class GzipChunkFetcher:
-    """Parallel chunk decompression engine over a FileReader."""
+class ChunkFetcher:
+    """Parallel chunk decompression engine over a FileReader.
+
+    Format specifics live in ``codec`` (core.codec): candidate finding,
+    chunk decoding, native delegation, and the marker machinery are all
+    codec methods; everything in this class — caches, in-flight dedup,
+    scheduling hints, prefetch strategy, stats — is codec-agnostic.
+    """
 
     def __init__(
         self,
@@ -125,6 +125,7 @@ class GzipChunkFetcher:
         chunk_size: int = DEFAULT_CHUNK_SIZE,
         parallelization: int = 4,
         framing: str = "gzip",
+        codec: Union[None, str, Codec] = None,
         index: Optional[GzipIndex] = None,
         prefetch_strategy: Optional[PrefetchStrategy] = None,
         access_cache_size: int = 1,
@@ -138,8 +139,17 @@ class GzipChunkFetcher:
         self.reader = reader
         self.chunk_size = chunk_size
         self.parallelization = max(1, parallelization)
-        self.framing = framing
-        self.index = index if index is not None else GzipIndex()
+        # codec=None keeps the historical default (deflate with the given
+        # framing) — auto-detection happens one level up, in the reader,
+        # which has the head bytes at hand.
+        self.codec = resolve_codec(codec, framing=framing)
+        self.framing = getattr(self.codec, "framing", framing)
+        self.index = index if index is not None else GzipIndex(codec_tag=self.codec.tag)
+        if self.index.codec_tag not in self.codec.index_compatible_tags:
+            raise RapidgzipError(
+                "index codec %r is not servable by the %r codec"
+                % (self.index.codec_tag, self.codec.tag)
+            )
         self.max_ratio = max_ratio
         self.file_size = reader.size()
         self.total_bits = self.file_size * 8
@@ -409,6 +419,13 @@ class GzipChunkFetcher:
             margin *= 4
 
     def _task_nominal(self, k: int) -> Optional[DecodeResult]:
+        if not self.codec.supports_speculation:
+            # Exact-index codecs (BGZF, zstd) never speculate: the reader
+            # builds a finalized index before any read, so a stray nominal
+            # dispatch just records "nothing found" without touching stats.
+            with self._lock:
+                self._nominal_done[k] = None
+            return None
         with self._lock:
             self.stats.nominal_tasks += 1
         start_bit = k * self.chunk_size * 8
@@ -424,16 +441,15 @@ class GzipChunkFetcher:
             base_bits = base * 8
             local_start = start_bit - base_bits
             local_stop = stop_bit - base_bits
-            decoder = DeflateChunkDecoder(buf, framing=self.framing)
-            finder = CombinedBlockFinder(buf, local_start, local_stop)
             need_more_data = False
-            for cand in finder:
+            for cand in self.codec.find_chunk_starts(buf, local_start, local_stop):
                 if cand + base_bits in failed:
                     continue
                 with self._lock:
                     self.stats.candidates_tried += 1
                 try:
-                    res = decoder.decode_chunk(
+                    res = self.codec.decode_chunk(
+                        buf,
                         cand,
                         local_stop,
                         window=None,
@@ -477,9 +493,9 @@ class GzipChunkFetcher:
         last_err: Optional[Exception] = None
         for (buf, base), at_eof in self._margins(bit_offset // 8, stop_bit // 8):
             base_bits = base * 8
-            decoder = DeflateChunkDecoder(buf, framing=self.framing)
             try:
-                res = decoder.decode_chunk(
+                res = self.codec.decode_chunk(
+                    buf,
                     bit_offset - base_bits,
                     stop_bit - base_bits,
                     window=window,
@@ -511,7 +527,7 @@ class GzipChunkFetcher:
     ) -> FinalizedChunk:
         """Propagate the window (sequential, O(32 KiB)) and dispatch full
         marker replacement to the pool."""
-        window_out = propagate_window(result.data, window)
+        window_out = self.codec.propagate_window(result.data, window)
         fc = FinalizedChunk(
             start_bit=result.start_bit,
             end_bit=result.end_bit,
@@ -538,7 +554,7 @@ class GzipChunkFetcher:
     def _task_replace(self, result: DecodeResult, window: Optional[bytes]) -> np.ndarray:
         if not result.contains_markers():
             return result.data.astype(np.uint8)
-        return replace_markers(result.data, window)
+        return self.codec.replace_markers(result.data, window)
 
     # ------------------------------------------------------------------
     # indexed mode (second pass / imported index / BGZF)
@@ -601,17 +617,18 @@ class GzipChunkFetcher:
         else:
             local_stop = len(buf) * 8
 
-        if point.flags & (FLAG_HAS_INTERIOR_MEMBER_END | FLAG_ZLIB_UNSAFE):
-            # gzip member boundary inside the chunk (zlib raw streams cannot
-            # cross it) or stored-block padding that would not survive the
-            # bit-shift realignment — use the custom decoder (window known
-            # -> single stage).
-            decoder = DeflateChunkDecoder(buf, framing=self.framing)
-            res = decoder.decode_chunk(
+        if point.flags & self.codec.decoder_required_flags:
+            # Deflate: a gzip member boundary inside the chunk (zlib raw
+            # streams cannot cross it) or stored-block padding that would
+            # not survive the bit-shift realignment — use the codec's own
+            # decoder (window known -> single stage). Codecs whose delegate
+            # always works declare an empty mask and never take this branch.
+            res = self.codec.decode_chunk(
+                buf,
                 local_bit,
                 local_stop,
                 window=point.window if point.window is not None else b"",
-                max_out=out_size + WINDOW_SIZE,
+                max_out=out_size + self.codec.window_size,
             )
             data = res.data[:out_size]
             if data.shape[0] < out_size:
@@ -622,8 +639,10 @@ class GzipChunkFetcher:
             return data
 
         with self._lock:
+            # Historical stats name, kept across codecs: "delegation" = the
+            # native-library fast path (zlib for deflate, zstd for zstd).
             self.stats.zlib_delegations += 1
-        raw = zlib_inflate_at(
+        raw = self.codec.delegate(
             buf, local_bit, point.window or b"", out_size,
             # +2 bytes slack: enough for the final block's bit tail, not
             # enough for zlib to parse a (shift-broken) stored header beyond
@@ -672,6 +691,12 @@ class GzipChunkFetcher:
             "prefetch": stats_of(self.prefetch_cache),
             "fetcher": self.stats.as_dict(),
         }
+
+
+#: Historical name from when the fetcher was deflate-only; the class has
+#: been codec-parameterized (``codec=`` kwarg) but the default construction
+#: is unchanged, so existing callers keep working.
+GzipChunkFetcher = ChunkFetcher
 
 
 def _offset_result(res: DecodeResult, base_bits: int) -> DecodeResult:

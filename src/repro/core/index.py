@@ -26,7 +26,11 @@ from typing import BinaryIO, List, Optional, Union
 from .deflate import WINDOW_SIZE
 from .errors import IndexError_
 
-_MAGIC = b"RPGZIDX1"
+#: v1 (legacy): no codec tag in the meta header — imports as "deflate".
+_MAGIC_V1 = b"RPGZIDX1"
+#: v2: JSON meta carries ``"codec": <tag>``; point records are unchanged.
+_MAGIC_V2 = b"RPGZIDX2"
+_MAGIC = _MAGIC_V2
 
 FLAG_STREAM_START = 1  # point sits right after a gzip member header
 FLAG_HAS_INTERIOR_MEMBER_END = 2  # chunk [this, next) contains a member footer
@@ -50,15 +54,21 @@ class SeekPoint:
 
 
 class GzipIndex:
-    """Sorted, thread-safe collection of seek points."""
+    """Sorted, thread-safe collection of seek points.
 
-    def __init__(self) -> None:
+    ``codec_tag`` names the codec whose chunk semantics the points encode
+    (see ``core.codec``). It is serialized in the v2 header; legacy v1
+    blobs carry no tag and import as ``"deflate"``.
+    """
+
+    def __init__(self, codec_tag: str = "deflate") -> None:
         self._points: List[SeekPoint] = []
         self._dec_offsets: List[int] = []  # parallel array for bisect
         self._lock = threading.RLock()
         self.finalized = False
         self.decompressed_size: Optional[int] = None
         self.compressed_size: Optional[int] = None
+        self.codec_tag = codec_tag
 
     # -- construction -------------------------------------------------------
 
@@ -127,6 +137,7 @@ class GzipIndex:
                     "decompressed_size": self.decompressed_size,
                     "compressed_size": self.compressed_size,
                     "n_points": len(self._points),
+                    "codec": self.codec_tag,
                 }
                 blob = json.dumps(meta).encode()
                 f.write(_MAGIC)
@@ -145,11 +156,14 @@ class GzipIndex:
         own = isinstance(src, str)
         f: BinaryIO = open(src, "rb") if own else src  # type: ignore[assignment]
         try:
-            if f.read(len(_MAGIC)) != _MAGIC:
+            magic = f.read(len(_MAGIC))
+            if magic not in (_MAGIC_V1, _MAGIC_V2):
                 raise IndexError_("bad index magic")
             (blob_len,) = struct.unpack("<I", f.read(4))
             meta = json.loads(f.read(blob_len).decode())
-            idx = cls()
+            # v1 predates codec tags; every v1 index was built by the
+            # deflate machinery (including BGZF files — deflate-compatible).
+            idx = cls(codec_tag=meta.get("codec", "deflate"))
             for _ in range(meta["n_points"]):
                 cb, db, flags, wlen = struct.unpack("<QQII", f.read(24))
                 wz = f.read(wlen)

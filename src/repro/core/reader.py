@@ -43,22 +43,13 @@ from typing import List, Optional, Union
 
 import numpy as np
 
-from .bitreader import BitReader
-from .chunk_fetcher import FinalizedChunk, GzipChunkFetcher
+from .chunk_fetcher import FinalizedChunk, ChunkFetcher
+from .codec import Codec, DeflateCodec, detect_codec, resolve_codec
 from .crc32 import crc32_combine
-from .deflate import (
-    BT_DYNAMIC,
-    BT_STORED,
-    WINDOW_SIZE,
-    canonical_stored_offset,
-)
-from .errors import EndOfStream, GzipFooterError, GzipHeaderError, RapidgzipError
+from .errors import FormatError, GzipFooterError, RapidgzipError
 from .filereader import open_file_reader
-from .gzip_format import parse_gzip_header, scan_bgzf_members, detect_bgzf
 from .index import (
     FLAG_HAS_INTERIOR_MEMBER_END,
-    FLAG_STORED_BLOCK,
-    FLAG_STREAM_START,
     FLAG_ZLIB_UNSAFE,
     GzipIndex,
     SeekPoint,
@@ -78,6 +69,7 @@ class ParallelGzipReader(io.RawIOBase):
         index: Optional[Union[GzipIndex, str, bytes]] = None,
         verify: bool = True,
         framing: str = "gzip",
+        codec: Union[None, str, Codec] = None,
         index_spacing: Optional[int] = None,
         access_cache_size: int = 1,
         executor=None,
@@ -100,11 +92,27 @@ class ParallelGzipReader(io.RawIOBase):
             elif isinstance(index, (bytes, bytearray)):
                 index = GzipIndex.from_bytes(bytes(index))
 
-            self._fetcher = GzipChunkFetcher(
+            # Codec resolution, cheapest evidence first: an explicit
+            # instance/tag wins; raw framing is deflate by definition; a
+            # finalized imported index names its own codec (no head read —
+            # remote sources skip a round trip); otherwise probe the head
+            # bytes (BGZF before gzip before the deflate fallback — valid
+            # gzip can never error here, satellite guarantee).
+            if isinstance(codec, Codec) or isinstance(codec, str):
+                self._codec = resolve_codec(codec, framing=framing)
+            elif framing == "raw":
+                self._codec = DeflateCodec(framing="raw")
+            elif index is not None and index.finalized:
+                self._codec = resolve_codec(index.codec_tag)
+            else:
+                self._codec = detect_codec(self._reader.pread(0, 1 << 12))
+
+            self._fetcher = ChunkFetcher(
                 self._reader,
                 chunk_size=chunk_size,
                 parallelization=parallelization,
                 framing=framing,
+                codec=self._codec,
                 index=index,
                 access_cache_size=access_cache_size,
                 executor=executor,
@@ -128,13 +136,16 @@ class ParallelGzipReader(io.RawIOBase):
             self._frontier_wait_s = 0.0
 
             if self._index.finalized:
-                # Imported (or BGZF) index: no first pass needed.
+                # Imported index: no first pass needed.
                 self._eos = True
                 self._frontier_out = self._index.decompressed_size or 0
-            elif framing == "gzip" and detect_bgzf(self._reader.pread(0, 1 << 12)):
-                self._build_bgzf_index()
+            elif self._build_exact_index():
+                # Metadata-only index (BGZF member walk, zstd seek table):
+                # the trivially-parallel path — zero speculative decoding.
+                self._eos = True
+                self._frontier_out = self._index.decompressed_size or 0
             else:
-                self._parse_leading_header()
+                self._frontier_bit = self._codec.leading_header_bits(self._reader)
         except BaseException:
             # A half-built reader must not leak: header parsing or index
             # import raising here would otherwise strand the opened
@@ -165,55 +176,29 @@ class ParallelGzipReader(io.RawIOBase):
     # setup
     # ------------------------------------------------------------------
 
-    #: Largest leading gzip header we accept: FEXTRA (2+65535) + FNAME and
-    #: FCOMMENT (64 KiB each, the parser's own cap) + fixed fields fit well
-    #: under 1 MiB; anything bigger is malformed, not merely large.
-    _MAX_HEADER_BYTES = 1 << 20
+    def _build_exact_index(self) -> bool:
+        """Try the codec's metadata-only index (paper §3.4.4's fast path).
 
-    def _parse_leading_header(self) -> None:
-        if self._framing == "raw":
-            self._frontier_bit = 0
-            return
-        # A fixed-size pread truncates headers with large FEXTRA/FNAME
-        # fields; on a truncation (EndOfStream under the parser's
-        # GzipHeaderError) retry with a doubled read while the file still
-        # has bytes to give, capped with a clean error.
-        read_size = 1 << 16
-        while True:
-            head = self._reader.pread(0, read_size)
-            try:
-                hdr = parse_gzip_header(BitReader(head))
-            except GzipHeaderError as exc:
-                truncated = isinstance(exc.__cause__, EndOfStream)
-                if truncated and len(head) == read_size:
-                    if read_size >= self._MAX_HEADER_BYTES:
-                        raise GzipHeaderError(
-                            "gzip header exceeds %d bytes" % self._MAX_HEADER_BYTES
-                        ) from exc
-                    read_size *= 2
-                    continue
-                raise
-            self._frontier_bit = hdr.header_bits
-            return
-
-    def _build_bgzf_index(self) -> None:
-        """BGZF fast path: member boundaries from metadata (paper §3.4.4)."""
-        members = scan_bgzf_members(self._reader)
-        out = 0
-        for offset, size in members:
-            head = self._reader.pread(offset, min(size, 1 << 12))
-            hdr = parse_gzip_header(BitReader(head))
-            footer = self._reader.pread(offset + size - 8, 8)
-            isize = int.from_bytes(footer[4:8], "little")
-            if isize == 0:
-                continue  # BGZF EOF marker block
-            self._index.add_point(
-                SeekPoint(offset * 8 + hdr.header_bits, out, b"", FLAG_STREAM_START)
-            )
-            out += isize
-        self._index.finalize(out, self._reader.size())
-        self._eos = True
-        self._frontier_out = out
+        Built into a scratch index and installed atomically on success: a
+        scan failing midway (e.g. a file whose first member is BGZF but
+        whose later members are plain gzip) must leave the shared index
+        untouched, because its partial points would poison the speculative
+        pass's on-the-fly `add_point` ordering. On such a failure a codec
+        that supports speculation falls back to it — valid gzip never
+        errors out of auto-detection.
+        """
+        tmp = GzipIndex(codec_tag=self._codec.tag)
+        try:
+            if not self._codec.build_exact_index(self._reader, tmp):
+                return False
+        except FormatError:
+            if self._codec.supports_speculation:
+                return False
+            raise
+        for p in tmp.points():
+            self._index.add_point(p)
+        self._index.finalize(tmp.decompressed_size or 0, tmp.compressed_size or 0)
+        return True
 
     # ------------------------------------------------------------------
     # frontier: first-pass parallel decompression + on-the-fly indexing
@@ -268,7 +253,7 @@ class ParallelGzipReader(io.RawIOBase):
         res = fc.result
 
         # -- CRC32 / ISIZE verification at member ends ---------------------
-        if self._verify and self._framing == "gzip":
+        if self._verify and self._codec.verifies_members:
             prev = 0
             for me in res.member_ends:
                 seg = data[prev : me.out_offset]
@@ -299,9 +284,7 @@ class ParallelGzipReader(io.RawIOBase):
             point_flags |= FLAG_HAS_INTERIOR_MEMBER_END
         starts = [(fc.start_bit, 0, point_flags)] + cuts
         bounds_for_flags = [s[1] for s in starts] + [fc.size]
-        stored_offsets = [
-            b.out_offset for b in res.blocks if b.block_type == BT_STORED
-        ]
+        stored_offsets = self._codec.stored_block_offsets(res)
         ordinals: List[int] = []
         for j, (bit, local_out, flags) in enumerate(starts):
             # zlib delegation is unsafe when stored-block padding would not
@@ -329,14 +312,10 @@ class ParallelGzipReader(io.RawIOBase):
         for b in res.blocks[1:]:
             if b.out_offset < next_cut or b.is_final:
                 continue
-            if b.block_type not in (BT_STORED, BT_DYNAMIC):
-                continue  # the finder cannot resume at fixed blocks
-            bit = (
-                canonical_stored_offset(b.bit_offset)
-                if b.block_type == BT_STORED
-                else b.bit_offset
-            )
-            flags = FLAG_STORED_BLOCK if b.block_type == BT_STORED else 0
+            cand = self._codec.split_candidate(b)
+            if cand is None:
+                continue  # the finder cannot resume at this block type
+            bit, flags = cand
             # Member-boundary flag for the sub-chunk starting here.
             lo = b.out_offset
             hi = fc.size
@@ -356,14 +335,15 @@ class ParallelGzipReader(io.RawIOBase):
         return fixed
 
     def _window_at(self, fc: FinalizedChunk, local_out: int) -> bytes:
-        if local_out == 0:
+        wsize = self._codec.window_size
+        if local_out == 0 or wsize == 0:
             return self._window if self._window is not None else b""
         data = fc.bytes()
-        if local_out >= WINDOW_SIZE:
-            return data[local_out - WINDOW_SIZE : local_out].tobytes()
+        if local_out >= wsize:
+            return data[local_out - wsize : local_out].tobytes()
         prev = full_window(self._window)
         combined = np.concatenate([prev, data[:local_out]])
-        return combined[-WINDOW_SIZE:].tobytes()
+        return combined[-wsize:].tobytes()
 
     # ------------------------------------------------------------------
     # io.RawIOBase interface
@@ -500,6 +480,10 @@ class ParallelGzipReader(io.RawIOBase):
     @property
     def index(self) -> GzipIndex:
         return self._index
+
+    @property
+    def codec(self) -> Codec:
+        return self._codec
 
     def build_full_index(self) -> GzipIndex:
         self.size()  # drives the first pass to completion (frontier-locked)

@@ -99,6 +99,32 @@ def stored_only_compress(data: bytes) -> bytes:
     return _gzip_member(raw, data)
 
 
+def zstd_seekable_compress(data: bytes, level: int = 3, frame_size: int = 128 << 10) -> bytes:
+    """Zstd seekable format: independent frames + the seek-table footer.
+
+    The footer is the final skippable frame (magic 0x184D2A5E) holding one
+    ``(compressed_size, decompressed_size)`` u32 pair per frame, then
+    ``(frame_count, descriptor, 0x8F92EAB1)``. Needs a zstd library for the
+    frame bodies (``core.codec.have_zstd``) — raises RuntimeError without
+    one, so callers gate on availability rather than silently degrading.
+    """
+    from .codec import zstd_backend
+
+    backend = zstd_backend()
+    if backend is None:
+        raise RuntimeError("zstd_seekable_compress needs a zstd library")
+    frames: List[bytes] = []
+    entries: List[bytes] = []
+    for off in range(0, max(len(data), 1), frame_size):
+        block = data[off : off + frame_size]
+        frame = backend.compress(block, level)
+        frames.append(frame)
+        entries.append(struct.pack("<II", len(frame), len(block)))
+    table = b"".join(entries) + struct.pack("<IBI", len(frames), 0, 0x8F92EAB1)
+    skippable = struct.pack("<II", 0x184D2A5E, len(table)) + table
+    return b"".join(frames) + skippable
+
+
 COMPRESSORS = {
     "gzip-1": lambda d: gzip_compress(d, 1),
     "gzip-6": lambda d: gzip_compress(d, 6),

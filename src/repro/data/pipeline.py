@@ -85,6 +85,7 @@ class GzipCorpusDataset:
         index_store=None,  # service.IndexStore: persistent shard indexes
         tenant: Optional[str] = None,  # accounting id in the shared pool
         remote_options: Optional[Dict] = None,  # RemoteFileReader kwargs for URL shards
+        codec: Optional[str] = None,  # format tag for all shards; None = per-shard probe
     ):
         if not shards:
             raise ValueError("no shards")
@@ -104,6 +105,7 @@ class GzipCorpusDataset:
         self.index_store = index_store
         self.tenant = tenant or f"pipeline-shard{shard_id}"
         self.remote_options = dict(remote_options or {})
+        self.codec = codec
 
         self._my_shards = [i for i in range(len(self.shards)) if i % num_shards == shard_id]
         if not self._my_shards:
@@ -163,7 +165,9 @@ class GzipCorpusDataset:
         try:
             store_key = None
             if self.index_store is not None:
-                store_key = self.index_store.key_for(source)
+                # Codec-qualified key: a gzip shard and a zstd shard of the
+                # same logical text must never share a stored index.
+                store_key = self.index_store.key_for(source, codec=self.codec)
             index = self.indexes.get(global_idx)
             if index is None and store_key is not None:
                 # Warm open: a stored index skips the speculative first pass.
@@ -178,6 +182,7 @@ class GzipCorpusDataset:
                 parallelization=self.parallelization,
                 chunk_size=self.chunk_size,
                 index=index,
+                codec=self.codec,
                 executor=executor,
                 access_cache=access_cache,
                 prefetch_cache=prefetch_cache,

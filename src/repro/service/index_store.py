@@ -33,16 +33,40 @@ from ..core.remote import RemoteFileReader, is_remote_url
 _EXT = ".rpgzidx"
 
 
-def file_identity(source: Union[str, os.PathLike, bytes, bytearray, memoryview, FileReader]) -> str:
-    """Stable hex key for a gzip source.
+def file_identity(
+    source: Union[str, os.PathLike, bytes, bytearray, memoryview, FileReader],
+    *,
+    codec: Optional[str] = None,
+) -> str:
+    """Stable hex key for an archive source.
 
-    Paths hash (realpath, size, mtime_ns) — no content reads, safe for huge
-    archives. Byte buffers hash (len, head 64 KiB, tail 64 KiB). Remote URLs
-    (and any FileReader exposing ``identity()``) hash (url, ETag or
+    Paths hash (realpath, size, mtime_ns) — no bulk content reads, safe for
+    huge archives. Byte buffers hash (len, head 64 KiB, tail 64 KiB). Remote
+    URLs (and any FileReader exposing ``identity()``) hash (url, ETag or
     Last-Modified, size) — one HEAD round trip, no downloads, and a changed
     object gets a new key so its stale index ages out unreferenced.
+
+    Every branch also mixes in the source's codec tag (``codec=`` to pin it,
+    else probed from ≤4 KiB of head bytes): a gzip twin and a zstd twin of
+    the same logical content must never collide in the store or in fleet
+    rendezvous routing — their indexes have incompatible chunk semantics.
+    The probe is deterministic for every caller (router, server, dataset),
+    which is what keeps fleet placement consistent.
     """
+    if isinstance(source, str) and is_remote_url(source):
+        # Small blocks: the probe costs one HEAD, and the codec probe plus
+        # the digest fallback (validator-less servers only) a few 64 KiB
+        # range GETs, not full-size default blocks. Probing happens on the
+        # open reader — a URL string has no local head bytes to sniff.
+        with RemoteFileReader(source, block_size=64 << 10, cache_blocks=2) as r:
+            return file_identity(r, codec=codec)
+    if codec is None:
+        from ..core.codec import detect_codec_tag
+
+        codec = detect_codec_tag(source)
     h = hashlib.sha256()
+    h.update(b"codec\0")
+    h.update(codec.encode())
     if isinstance(source, FileReader):
         ident = source.identity()
         if ident is not None:
@@ -54,12 +78,6 @@ def file_identity(source: Union[str, os.PathLike, bytes, bytearray, memoryview, 
         # RemoteFileReader the two 64 KiB preads round out to its block
         # size (up to two full blocks fetched) — bounded, and the blocks
         # stay cached for the header/footer reads that follow an open.
-    if isinstance(source, str) and is_remote_url(source):
-        # Small blocks: the probe costs one HEAD, and the digest fallback
-        # (validator-less servers only) two 64 KiB range GETs, not two
-        # full-size default blocks.
-        with RemoteFileReader(source, block_size=64 << 10, cache_blocks=2) as r:
-            return file_identity(r)
     if isinstance(source, (str, os.PathLike)):
         path = os.path.realpath(os.fspath(source))
         st = os.stat(path)
@@ -140,8 +158,10 @@ class IndexStore:
 
     # -- keys ---------------------------------------------------------------
 
-    def key_for(self, source) -> str:
-        return source if isinstance(source, str) and _is_key(source) else file_identity(source)
+    def key_for(self, source, *, codec: Optional[str] = None) -> str:
+        if isinstance(source, str) and _is_key(source):
+            return source
+        return file_identity(source, codec=codec)
 
     def _path(self, key: str) -> str:
         assert self.root is not None

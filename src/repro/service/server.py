@@ -80,16 +80,22 @@ class ArchiveStat:
     #: the gateway derives the wire ETag from this, so a replaced source
     #: revalidates exactly like the index store re-keys.
     identity: Optional[str] = None
+    #: Resolved codec tag ("deflate"/"bgzf"/"zstd") once the reader opened;
+    #: before that, the tag requested at open() (None = auto-detect).
+    codec: Optional[str] = None
 
     def as_dict(self) -> Dict[str, Any]:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
 
 
 class _Entry:
-    def __init__(self, handle: str, source, tenant: str):
+    def __init__(self, handle: str, source, tenant: str, codec: Optional[str] = None):
         self.handle = handle
         self.source = source
         self.tenant = tenant
+        #: Codec tag requested at open() (None = auto-detect); replaced by
+        #: the reader's resolved tag once the lazy open runs.
+        self.codec = codec
         # Lifecycle lock: lazy open / close / persist. Positional reads never
         # take it (pread is stateless); serialized=True legacy reads do.
         self.lock = threading.RLock()
@@ -179,14 +185,23 @@ class ArchiveServer:
     # ------------------------------------------------------------------
 
     def open(
-        self, source, *, tenant: str = "default", quantum: Optional[float] = None
+        self,
+        source,
+        *,
+        tenant: str = "default",
+        quantum: Optional[float] = None,
+        codec: Optional[str] = None,
     ) -> str:
-        """Register a gzip source; the reader is created lazily on first use.
+        """Register an archive source; the reader is created lazily on first
+        use.
 
         ``source`` is anything `ParallelGzipReader` accepts: a path, bytes,
         an ``http(s)://`` URL (served via range-GET preads, never fully
-        downloaded), or a FileReader. ``quantum`` optionally (re)sets the
-        tenant's weighted-DRR quantum factor (see
+        downloaded), or a FileReader. ``codec`` pins the format tag
+        ("deflate"/"bgzf"/"zstd"); None auto-detects from the head bytes at
+        lazy-open time (BGZF by its BC subfield, zstd by frame magic, with
+        a deflate fallback that never errors on valid gzip). ``quantum``
+        optionally (re)sets the tenant's weighted-DRR quantum factor (see
         `FairExecutor.set_tenant_quantum`) — a per-open convenience for
         callers that learn the tenant's service class at open time (the
         gateway's admission control does).
@@ -198,7 +213,7 @@ class ArchiveServer:
                 raise RuntimeError("server is closed")
             self._handle_seq += 1
             handle = "f%d" % self._handle_seq
-            self._entries[handle] = _Entry(handle, source, tenant)
+            self._entries[handle] = _Entry(handle, source, tenant, codec)
         return handle
 
     def _entry(self, handle: str) -> _Entry:
@@ -236,7 +251,11 @@ class ArchiveServer:
                         capacity=int(opts.pop("cache_blocks", 16)),
                     )
                     source = RemoteFileReader(source, block_cache=block_cache, **opts)
-                entry.identity = file_identity(source)
+                # Identity and the reader must agree on the codec: an
+                # explicit tag pins both; auto-detection probes the same
+                # head bytes in both places, so the key the store/fleet use
+                # and the codec the reader runs match by construction.
+                entry.identity = file_identity(source, codec=entry.codec)
                 index = self.index_store.get(entry.identity)
                 entry.index_was_warm = index is not None
                 access_cache, prefetch_cache = self.cache_pool.reader_caches(
@@ -248,10 +267,12 @@ class ArchiveServer:
                     chunk_size=self.chunk_size,
                     index=index,
                     verify=self.verify,
+                    codec=entry.codec,
                     executor=self.executor.view(entry.tenant),
                     access_cache=access_cache,
                     prefetch_cache=prefetch_cache,
                 )
+                entry.codec = entry.reader.codec.tag
             except BaseException:
                 # Corrupt/non-gzip source, torn index blob, or a pool fault:
                 # return the caches to the pool and close the remote reader
@@ -367,6 +388,7 @@ class ArchiveServer:
             reads=reads,
             bytes_served=bytes_served,
             identity=entry.identity,
+            codec=entry.codec,
         )
 
     def size(self, handle: str) -> int:
@@ -522,6 +544,7 @@ class ArchiveServer:
                 "bytes_served": bytes_served,
                 "index_was_warm": entry.index_was_warm,
                 "opened": reader is not None,
+                "codec": entry.codec,
             }
         with self._gauge_lock:
             service = {

@@ -139,6 +139,117 @@ def test_import_rejects_bad_magic():
         GzipIndex.from_bytes(b"NOTANIDX" + b"\0" * 32)
 
 
+# ---------------------------------------------------------------------------
+# versioned header: codec tags + legacy (pre-tag) import
+# ---------------------------------------------------------------------------
+
+
+def _legacy_v1_blob(points, finalized, dec_size, comp_size) -> bytes:
+    """Hand-built RPGZIDX1 blob, exactly as pre-tag sessions wrote it: magic,
+    JSON meta WITHOUT a "codec" key, then <QQII>+zlib(window) per point."""
+    import json
+    import struct
+    import zlib
+
+    meta = {
+        "finalized": finalized,
+        "decompressed_size": dec_size,
+        "compressed_size": comp_size,
+        "n_points": len(points),
+    }
+    blob = json.dumps(meta).encode()
+    out = [b"RPGZIDX1", struct.pack("<I", len(blob)), blob]
+    for cb, db, flags, window in points:
+        wz = zlib.compress(window or b"", 6)
+        out.append(struct.pack("<QQII", cb, db, flags, len(wz)))
+        out.append(wz)
+    return b"".join(out)
+
+
+def test_codec_tag_roundtrips_versioned_header():
+    for tag in ("deflate", "bgzf", "zstd"):
+        idx = GzipIndex(codec_tag=tag)
+        idx.add_point(SeekPoint(8, 0, b"", FLAG_STREAM_START))
+        idx.finalize(1000, 500)
+        blob = idx.to_bytes()
+        assert blob.startswith(b"RPGZIDX2")
+        back = GzipIndex.from_bytes(blob)
+        assert back.codec_tag == tag
+        assert back.finalized and back.decompressed_size == 1000
+
+
+def test_legacy_pre_tag_blob_imports_as_deflate():
+    """Blobs written before the codec tag existed (RPGZIDX1, no "codec" meta
+    key) must import as deflate with every point intact — a warm store from
+    an old session keeps working."""
+    points = [
+        (8, 0, FLAG_STREAM_START, b""),
+        (100_003, 50_000, FLAG_ZLIB_UNSAFE, bytes(range(256)) * 4),
+    ]
+    blob = _legacy_v1_blob(points, True, 120_000, 60_000)
+    back = GzipIndex.from_bytes(blob)
+    assert back.codec_tag == "deflate"
+    assert back.finalized and back.decompressed_size == 120_000
+    got = back.points()
+    assert len(got) == 2
+    assert (got[1].compressed_bit, got[1].decompressed_byte, got[1].flags) == (
+        100_003, 50_000, FLAG_ZLIB_UNSAFE,
+    )
+    assert got[1].window == bytes(range(256)) * 4
+
+
+def test_index_codec_mismatch_is_refused(rng):
+    """A zstd-tagged index can never be served by a deflate reader: the
+    chunk semantics differ, so the open must fail loudly, not decode junk."""
+    from repro.core.errors import RapidgzipError
+
+    data = make_text(rng, 50_000)
+    comp = gzip_bytes(data, 6)
+    with ParallelGzipReader(comp, parallelization=1) as r:
+        r.read()
+        blob = GzipIndex.from_bytes(r.index.to_bytes())
+    blob.codec_tag = "zstd"
+    with pytest.raises(RapidgzipError):
+        ParallelGzipReader(comp, parallelization=1, codec="deflate",
+                           index=blob.to_bytes())
+
+
+def test_versioned_header_property_roundtrip():
+    """Property test over synthetic indexes: to_bytes/from_bytes preserves
+    the codec tag, finalization metadata, and every point field."""
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    point = st.tuples(
+        st.integers(0, 2**40), st.integers(0, 2**40),
+        st.integers(0, 15), st.binary(max_size=512),
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tag=st.sampled_from(["deflate", "bgzf", "zstd"]),
+        raw_points=st.lists(point, max_size=8),
+        finalized=st.booleans(),
+    )
+    def check(tag, raw_points, finalized):
+        idx = GzipIndex(codec_tag=tag)
+        for cb, db, flags, window in sorted(raw_points, key=lambda p: (p[1], p[0])):
+            idx.add_point(SeekPoint(cb, db, window, flags))
+        if finalized:
+            idx.finalize(2**41, 2**40)
+        back = GzipIndex.from_bytes(idx.to_bytes())
+        assert back.codec_tag == tag
+        assert back.finalized == idx.finalized
+        assert len(back) == len(idx)
+        for a, b in zip(idx.points(), back.points()):
+            assert (a.compressed_bit, a.decompressed_byte, a.flags) == (
+                b.compressed_bit, b.decompressed_byte, b.flags,
+            )
+            assert (a.window or b"") == (b.window or b"")
+
+    check()
+
+
 def test_index_store_concurrent_same_key_puts_never_tear(rng, tmp_path):
     """Racing put() calls for the same identity (two handles on one archive
     closed concurrently) must each write their own tmp file — a shared tmp

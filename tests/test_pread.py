@@ -76,6 +76,21 @@ def test_pread_exact_eof_boundaries_indexed(rng):
         assert r2.stats()["frontier"]["lock_acquires"] == 0
 
 
+def test_pread_semantics_all_codecs(rng, codec_case):
+    """pread semantics (slices, cursor independence, EOF boundaries) hold
+    for every codec through the same machinery."""
+    data = make_base64(rng, 300_000)
+    comp = codec_case.compress(data)
+    with ParallelGzipReader(comp, parallelization=2, chunk_size=64 * 1024) as r:
+        r.seek(123)
+        for off, n in [(0, 1000), (299_000, 5000), (17, 0), (150_000, 64 * 1024)]:
+            assert r.pread(off, n) == data[off : off + n]
+        assert r.tell() == 123
+        n = len(data)
+        assert r.pread(n, 100) == b""
+        assert r.pread(n - 1, 100) == data[-1:]
+
+
 def test_read_short_chunk_breaks_instead_of_looping(rng):
     """The indexed-path ``avail <= 0`` guard: when a (stale) finalized index
     overstates coverage and the cached last chunk is short, reads come back
