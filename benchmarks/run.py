@@ -1,7 +1,11 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (see DESIGN.md §8 for the
-table/figure mapping). ``python -m benchmarks.run [--only sections] [--smoke]``.
+table/figure mapping). ``python -m benchmarks.run [--only sections] [--smoke]
+[--check]``. ``--check`` diffs each section's fresh rows against the
+committed ``BENCH_<section>.json`` before overwriting it and flags >25%
+per-row regressions (benchmarks/trajectory.py) — the cross-PR trajectory
+gate.
 
 ``--smoke`` shrinks every section to tiny sizes (common.scale) so the whole
 harness completes in a couple of minutes — a CI check that each benchmark
@@ -21,7 +25,7 @@ import tempfile
 import time
 import traceback
 
-from . import common
+from . import common, trajectory
 
 #: BENCH_<section>.json lands next to the repo's other BENCH_* artifacts.
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -52,6 +56,11 @@ def main() -> None:
     ap.add_argument(
         "--smoke", action="store_true",
         help="tiny sizes, 1 repeat: verify every section runs in <60 s total",
+    )
+    ap.add_argument(
+        "--check", action="store_true",
+        help="diff fresh rows against the committed BENCH_<section>.json"
+             " before overwriting it; flag >25%% per-row regressions",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -106,6 +115,7 @@ def main() -> None:
         sections.append(("fleet", _bench_fleet_mod.bench_fleet))
 
     failures = 0
+    regressed_sections = 0
     t_start = time.perf_counter()
     for name, fn in sections:
         print(f"# === {name} ===")
@@ -118,12 +128,24 @@ def main() -> None:
             print(f"# section {name} FAILED", file=sys.stderr)
             traceback.print_exc()
         else:
+            rows = common.drain_results()
+            if args.check:
+                # Diff against the committed artifact *before* _persist_section
+                # overwrites it — this is the cross-PR trajectory gate.
+                report = trajectory.check_section(
+                    _REPO_ROOT, name, rows, smoke=args.smoke
+                )
+                for line in trajectory.format_report(report):
+                    print(line)
+                if report.get("status") == "regressed":
+                    regressed_sections += 1
             _persist_section(
-                name, common.drain_results(),
-                time.perf_counter() - t_section, args.smoke,
+                name, rows, time.perf_counter() - t_section, args.smoke,
             )
     if args.smoke:
         print(f"# smoke total: {time.perf_counter() - t_start:.1f}s")
+    if args.check:
+        print(f"# trajectory: {regressed_sections} section(s) with regressions")
     if failures:
         raise SystemExit(1)
 

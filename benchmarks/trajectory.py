@@ -1,0 +1,145 @@
+"""Cross-PR benchmark trajectory: diff fresh rows against committed artifacts.
+
+Every ``python -m benchmarks.run`` persists one ``BENCH_<section>.json`` per
+section; those artifacts are committed, so the repo's history carries the
+performance trajectory PR by PR. This module closes the loop: given the rows
+a fresh run just produced and the artifact the previous PR committed, it
+flags per-row slowdowns beyond a threshold (default >25%) so a PR that
+quietly regresses a benchmark gets called out at run time instead of at
+archaeology time. ``run.py --check`` wires it in.
+
+Comparisons are only meaningful like-for-like: a smoke artifact against a
+smoke run (sizes differ 32x between modes), and the same machine class.
+Mode mismatches are reported as skips, never as regressions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+#: A row counts as regressed when ``new/old > 1 + REGRESSION_THRESHOLD``.
+#: 25% is deliberately loose — these are wall-clock microbenchmarks on a
+#: shared machine; the checker is for step changes, not 5% noise.
+REGRESSION_THRESHOLD = 0.25
+
+
+def load_artifact(root: str, section: str) -> Optional[Dict[str, Any]]:
+    """The committed ``BENCH_<section>.json`` payload, or None if absent
+    or unreadable (first run of a new section is not an error)."""
+    path = os.path.join(root, "BENCH_%s.json" % section)
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return payload if isinstance(payload, dict) else None
+
+
+def compare_rows(
+    old_rows: Sequence[Mapping[str, Any]],
+    new_rows: Sequence[Mapping[str, Any]],
+    *,
+    threshold: float = REGRESSION_THRESHOLD,
+) -> Dict[str, List]:
+    """Row-by-row diff keyed on ``name``.
+
+    Returns ``{"regressions": [...], "improvements": [...], "added": [names],
+    "removed": [names]}``. Regression/improvement entries are dicts with
+    ``name``/``old_us``/``new_us``/``ratio``. Rows with non-positive old
+    values are skipped (nothing sound to divide by).
+    """
+    old_by = {r.get("name"): r for r in old_rows if r.get("name")}
+    new_by = {r.get("name"): r for r in new_rows if r.get("name")}
+    out: Dict[str, List] = {
+        "regressions": [],
+        "improvements": [],
+        "added": sorted(set(new_by) - set(old_by)),
+        "removed": sorted(set(old_by) - set(new_by)),
+    }
+    for name in sorted(set(old_by) & set(new_by)):
+        try:
+            old_us = float(old_by[name]["value_us"])
+            new_us = float(new_by[name]["value_us"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if old_us <= 0.0:
+            continue
+        ratio = new_us / old_us
+        entry = {
+            "name": name,
+            "old_us": old_us,
+            "new_us": new_us,
+            "ratio": round(ratio, 3),
+        }
+        if ratio > 1.0 + threshold:
+            out["regressions"].append(entry)
+        elif ratio < 1.0 / (1.0 + threshold):
+            out["improvements"].append(entry)
+    return out
+
+
+def check_section(
+    root: str,
+    section: str,
+    new_rows: Sequence[Mapping[str, Any]],
+    *,
+    smoke: bool,
+    threshold: float = REGRESSION_THRESHOLD,
+) -> Dict[str, Any]:
+    """Compare a section's fresh rows against its committed artifact.
+
+    Returns a report dict: ``status`` is one of ``"ok"``, ``"regressed"``,
+    ``"no-baseline"``, or ``"mode-mismatch"`` (committed artifact was
+    recorded in the other smoke/full mode — sizes are incomparable).
+    """
+    artifact = load_artifact(root, section)
+    if artifact is None:
+        return {"section": section, "status": "no-baseline"}
+    if bool(artifact.get("smoke")) != bool(smoke):
+        return {
+            "section": section,
+            "status": "mode-mismatch",
+            "artifact_smoke": bool(artifact.get("smoke")),
+        }
+    diff = compare_rows(
+        artifact.get("results", []), new_rows, threshold=threshold
+    )
+    diff["section"] = section
+    diff["status"] = "regressed" if diff["regressions"] else "ok"
+    return diff
+
+
+def format_report(report: Mapping[str, Any]) -> List[str]:
+    """Human-readable lines (``# ``-prefixed to stay CSV-transparent)."""
+    section = report.get("section", "?")
+    status = report.get("status")
+    lines: List[str] = []
+    if status == "no-baseline":
+        return ["# trajectory[%s]: no committed baseline, skipping" % section]
+    if status == "mode-mismatch":
+        return [
+            "# trajectory[%s]: committed artifact is %s, this run is not"
+            " — skipping" % (
+                section,
+                "smoke" if report.get("artifact_smoke") else "full",
+            )
+        ]
+    for r in report.get("regressions", []):
+        lines.append(
+            "# REGRESSION %s/%s: %.1fus -> %.1fus (%.2fx)"
+            % (section, r["name"], r["old_us"], r["new_us"], r["ratio"])
+        )
+    for r in report.get("improvements", []):
+        lines.append(
+            "# improvement %s/%s: %.1fus -> %.1fus (%.2fx)"
+            % (section, r["name"], r["old_us"], r["new_us"], r["ratio"])
+        )
+    for name in report.get("added", []):
+        lines.append("# trajectory[%s]: new row %s" % (section, name))
+    for name in report.get("removed", []):
+        lines.append("# trajectory[%s]: row %s disappeared" % (section, name))
+    if not lines:
+        lines.append("# trajectory[%s]: ok" % section)
+    return lines

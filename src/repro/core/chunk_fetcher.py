@@ -35,7 +35,7 @@ import threading
 import zlib as _zlib
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -89,6 +89,9 @@ class FinalizedChunk:
     result: DecodeResult
     _bytes_future: Optional[Future] = None
     _bytes: Optional[np.ndarray] = None
+    #: CRC32 callable installed by the owning fetcher (resolver-aware);
+    #: defaults to zlib for bare FinalizedChunks constructed in tests.
+    _crc32: Optional[Callable] = None
 
     def bytes(self) -> np.ndarray:
         if self._bytes is None:
@@ -99,12 +102,13 @@ class FinalizedChunk:
     def crc_segments(self) -> List[Tuple[int, int]]:
         """[(segment_length, crc32), ...] split at interior member ends."""
         data = self.bytes()
+        crc = self._crc32 or (lambda seg: _zlib.crc32(seg.tobytes()) & 0xFFFFFFFF)
         cuts = [me.out_offset for me in self.result.member_ends]
         segs: List[Tuple[int, int]] = []
         prev = 0
         for c in cuts + [self.size]:
             seg = data[prev:c]
-            segs.append((int(seg.shape[0]), _zlib.crc32(seg.tobytes()) & 0xFFFFFFFF))
+            segs.append((int(seg.shape[0]), crc(seg)))
             prev = c
         return segs
 
@@ -133,6 +137,7 @@ class ChunkFetcher:
         executor=None,
         access_cache: Optional[LRUCache] = None,
         prefetch_cache: Optional[LRUCache] = None,
+        resolver=None,
     ):
         if chunk_size < 1 << 10:
             raise ValueError("chunk_size must be >= 1 KiB")
@@ -186,6 +191,14 @@ class ChunkFetcher:
         self._in_flight: Dict[object, Future] = {}
         self._nominal_done: Dict[int, Optional[int]] = {}  # k -> actual start bit
         self.stats = FetcherStats()
+
+        # Stage-2 resolver (kernels.engine.DeviceDecodeEngine or compatible):
+        # shared across fetchers by the service layer like the executor and
+        # caches; externally owned, never shut down here. The codec carries
+        # it into replace_markers so stage 2 can batch across chunks.
+        self.resolver = resolver
+        if resolver is not None and hasattr(self.codec, "set_stage2_resolver"):
+            self.codec.set_stage2_resolver(resolver)
 
     # ------------------------------------------------------------------
     # buffer access
@@ -537,6 +550,7 @@ class ChunkFetcher:
             window_out=window_out,
             result=result,
         )
+        fc._crc32 = self.crc32
         if result.marker_mode:
             # Replacement sits on the read critical path (the caller's
             # bytes() blocks on it): interactive lane, cost ~ one linear
@@ -554,7 +568,24 @@ class ChunkFetcher:
     def _task_replace(self, result: DecodeResult, window: Optional[bytes]) -> np.ndarray:
         if not result.contains_markers():
             return result.data.astype(np.uint8)
+        if self.resolver is not None:
+            # Direct submission (not via the codec shim): many pool workers
+            # hit this concurrently and the engine coalesces their chunks
+            # into one batched device dispatch.
+            return self.resolver.replace_markers(result.data, window)
         return self.codec.replace_markers(result.data, window)
+
+    def crc32(self, data) -> int:
+        """CRC32 through the stage-2 resolver when present, zlib otherwise.
+
+        Accepts bytes or a uint8 ndarray (reader verification passes array
+        segments straight through).
+        """
+        if self.resolver is not None:
+            return self.resolver.crc32(data)
+        if isinstance(data, np.ndarray):
+            data = data.tobytes()
+        return _zlib.crc32(data) & 0xFFFFFFFF
 
     # ------------------------------------------------------------------
     # indexed mode (second pass / imported index / BGZF)

@@ -65,6 +65,10 @@ A ``Codec`` must provide:
     broken stored blocks).
 ``propagate_window(data, window)`` / ``replace_markers(data, window)``
     Stage-2 marker machinery; windowless codecs inherit the no-op defaults.
+``set_stage2_resolver(resolver)``
+    Optional pluggable stage-2 back end (``kernels.engine``): when set,
+    marker resolution routes through it (batched device dispatch with CPU
+    crossover); output stays bit-identical either way.
 ``split_candidate(block)``
     For marker codecs: may the on-the-fly indexer place an interior seek
     point at this block boundary? Returns ``(bit_offset, flags)`` or None.
@@ -149,6 +153,15 @@ class Codec:
     verifies_members: bool = False
     #: seek-point flags that force decode_chunk over delegate
     decoder_required_flags: int = 0
+    #: optional stage-2 resolver (duck-typed: ``replace_markers``/``crc32``,
+    #: e.g. ``kernels.engine.DeviceDecodeEngine``); None = host CPU path.
+    stage2_resolver = None
+
+    def set_stage2_resolver(self, resolver) -> None:
+        """Route stage-2 marker resolution through ``resolver`` (or back to
+        the CPU with None). The resolver decides device-vs-CPU per request;
+        the codec contract (bit-identical output) is unchanged."""
+        self.stage2_resolver = resolver
 
     @property
     def index_compatible_tags(self) -> frozenset:
@@ -321,6 +334,8 @@ class DeflateCodec(Codec):
         return _propagate_window(data, window)
 
     def replace_markers(self, data: np.ndarray, window: Optional[bytes]) -> np.ndarray:
+        if self.stage2_resolver is not None and data.dtype != np.uint8:
+            return self.stage2_resolver.replace_markers(data, window)
         return _replace_markers(data, window)
 
     def split_candidate(self, block: BlockBoundary) -> Optional[Tuple[int, int]]:

@@ -76,6 +76,7 @@ class ParallelGzipReader(io.RawIOBase):
         access_cache=None,
         prefetch_cache=None,
         prefetch_strategy=None,
+        resolver=None,
     ):
         super().__init__()
         self._reader = open_file_reader(source)
@@ -119,6 +120,7 @@ class ParallelGzipReader(io.RawIOBase):
                 access_cache=access_cache,
                 prefetch_cache=prefetch_cache,
                 prefetch_strategy=prefetch_strategy,
+                resolver=resolver,
             )
             self._index = self._fetcher.index
 
@@ -257,7 +259,7 @@ class ParallelGzipReader(io.RawIOBase):
             prev = 0
             for me in res.member_ends:
                 seg = data[prev : me.out_offset]
-                crc = _zlib.crc32(seg.tobytes()) & 0xFFFFFFFF
+                crc = self._fetcher.crc32(seg)
                 self._member_crc = crc32_combine(self._member_crc, crc, int(seg.shape[0]))
                 self._member_len += int(seg.shape[0])
                 if self._member_crc != me.crc32:
@@ -272,7 +274,7 @@ class ParallelGzipReader(io.RawIOBase):
                 prev = me.out_offset
             tail = data[prev:]
             if tail.shape[0]:
-                crc = _zlib.crc32(tail.tobytes()) & 0xFFFFFFFF
+                crc = self._fetcher.crc32(tail)
                 self._member_crc = crc32_combine(self._member_crc, crc, int(tail.shape[0]))
                 self._member_len += int(tail.shape[0])
 

@@ -9,6 +9,13 @@ This container is CPU-only: kernels validate with ``interpret=True`` (kernel
 bodies execute in Python); TPU v5e is the compile target.
 """
 
+from .engine import DeviceDecodeEngine, EngineClosedError
 from .ops import crc32_parallel, marker_replace, precode_candidates
 
-__all__ = ["crc32_parallel", "marker_replace", "precode_candidates"]
+__all__ = [
+    "DeviceDecodeEngine",
+    "EngineClosedError",
+    "crc32_parallel",
+    "marker_replace",
+    "precode_candidates",
+]

@@ -1,0 +1,719 @@
+"""DeviceDecodeEngine — batched stage-2 dispatch on the serving hot path.
+
+The paper's two-stage scheme (§2.2) leaves stage 2 — marker resolution and
+CRC32 — embarrassingly data-parallel, which is exactly what an accelerator
+rewards *if* it is fed full batches. The per-chunk wrappers in ``ops.py``
+pay one host↔device round trip, one table upload, and one dispatch per
+chunk; CODAG and Sitaridi et al. (PAPERS.md) both show that decompression
+on wide-SIMD hardware lives or dies on amortizing exactly those costs.
+
+This engine is the process-wide aggregation point: every reader/tenant
+submits marker-resolution and CRC requests here; a single dispatcher thread
+packs them into fixed-size tile batches, dispatches the batched Pallas
+kernels (``marker_replace_tiles_multi`` / ``crc32_segments_batched``) once
+per batch, and scatters results back to per-request futures.
+
+Layout and policy:
+
+  * **Tile packing** — symbol streams are padded into (8, 1024) int32 tiles
+    (``marker_replace.TILE``); a batch is a stack of tiles from many chunks
+    plus a per-tile ``int32`` table selector. Distinct windows dedupe into a
+    small VMEM-resident stack of replacement tables (132 KiB each, capped at
+    ``max_tables`` per dispatch).
+  * **Shape bucketing** — tile counts and table counts round up to powers of
+    two (capped at ``max_batch_tiles``), so the jitted dispatches compile a
+    bounded set of shapes once and are reused forever (cached compiled
+    kernels). The CRC path buckets ``seg_len`` the same way.
+  * **Double-buffered staging** — two host staging buffers per bucket shape
+    alternate between dispatches, and result readback of batch N overlaps
+    the launch of batch N+1 (one dispatch in flight), so host packing and
+    device compute pipeline instead of serializing.
+  * **Crossover routing** — small or singleton requests take the existing
+    CPU path inline (``core.markers`` / ``zlib.crc32``) and are counted as
+    ``fallbacks``: interactive p99 never pays the batching latency tax. The
+    threshold is derived from the committed ``BENCH_kernels.json`` batched
+    dispatch sweep (see ``derive_crossover``); on hosts where the device
+    never wins (e.g. interpret mode on CPU) the derived crossover is None
+    and *everything* falls back — the engine stays on the hot path only for
+    accounting, costing one branch per request.
+  * **Degradation** — when jax is unavailable the engine constructs fine,
+    reports ``available=False``, and routes every request to the CPU path.
+
+Bit-identity: the device path computes the same gather/CRC as the host path
+(int32 tables hold byte values; CRCs are exact), so results are
+bit-identical regardless of routing — verified by the parity suite in
+``tests/test_device_engine.py`` and the reader round-trip tests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+import zlib as _zlib
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.crc32 import combine_parts
+from ..core.markers import replace_markers as _cpu_replace_markers
+
+try:  # pragma: no cover - exercised via available=False paths in tests
+    import jax.numpy as jnp
+
+    from .crc32 import N_SEGMENTS, crc32_segments_batched, make_crc_table
+    from .marker_replace import (
+        TABLE_SIZE,
+        TILE,
+        TILE_COLS,
+        TILE_ROWS,
+        marker_replace_tiles_multi,
+    )
+    from .ops import INTERPRET
+    from .ref import make_replacement_table
+
+    _HAVE_JAX = True
+except Exception:  # noqa: BLE001 - any import failure means "no device"
+    _HAVE_JAX = False
+    INTERPRET = True
+    TILE, TILE_ROWS, TILE_COLS, N_SEGMENTS = 8192, 8, 1024, 1024
+
+_TILE_BYTES = TILE  # one symbol resolves to one output byte
+
+
+class EngineClosedError(RuntimeError):
+    """Raised on futures queued (or submits attempted) after shutdown."""
+
+
+def _pow2_at_least(n: int, cap: Optional[int] = None) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, cap) if cap is not None else p
+
+
+_MBPS_RE = re.compile(r"([0-9]+(?:\.[0-9]+)?)MB/s")
+
+
+def derive_crossover(rows: Sequence[Dict[str, Any]]) -> Dict[str, Optional[int]]:
+    """Roofline-style CPU/device crossover from ``BENCH_kernels.json`` rows.
+
+    Model: CPU resolves a request of ``n`` bytes in ``n / cpu_bw`` seconds;
+    the device costs a fixed per-dispatch overhead plus ``n / dev_bw``. The
+    crossover is where the lines meet::
+
+        n* = overhead / (1/cpu_bw - 1/dev_bw)      (only if dev_bw > cpu_bw)
+
+    Inputs are the sweep rows ``bench_kernels`` persists:
+      * ``kernel_engine_cpu_replace``  — CPU gather bandwidth (MB/s derived)
+      * ``kernel_engine_batched_b16``  — batched device bandwidth (MB/s)
+      * ``kernel_engine_batched_b1``   — single-tile dispatch latency (us),
+        whose fixed part estimates the per-dispatch overhead.
+
+    Returns ``{"replace": bytes_or_None, "crc": bytes_or_None}`` — None
+    means the device never wins at any size on this artifact (the honest
+    answer for interpret mode on a CPU-only host) and all requests of that
+    kind should take the CPU path.
+    """
+    by_name = {r.get("name"): r for r in rows or ()}
+
+    def _mbps(name: str) -> Optional[float]:
+        row = by_name.get(name)
+        if not row:
+            return None
+        m = _MBPS_RE.search(str(row.get("derived", "")))
+        return float(m.group(1)) * 1e6 if m else None
+
+    def _us(name: str) -> Optional[float]:
+        row = by_name.get(name)
+        return float(row["value_us"]) if row and "value_us" in row else None
+
+    def _one(cpu_name: str, dev_name: str, b1_name: str) -> Optional[int]:
+        cpu_bw, dev_bw, b1 = _mbps(cpu_name), _mbps(dev_name), _us(b1_name)
+        if not cpu_bw or not dev_bw or b1 is None or dev_bw <= cpu_bw:
+            return None
+        overhead_s = max(0.0, b1 * 1e-6 - _TILE_BYTES / dev_bw)
+        if overhead_s == 0.0:
+            return _TILE_BYTES
+        return int(overhead_s / (1.0 / cpu_bw - 1.0 / dev_bw))
+
+    return {
+        "replace": _one(
+            "kernel_engine_cpu_replace",
+            "kernel_engine_batched_b16",
+            "kernel_engine_batched_b1",
+        ),
+        "crc": _one(
+            "kernel_engine_cpu_crc",
+            "kernel_engine_crc_batched_b8",
+            "kernel_engine_crc_batched_b1",
+        ),
+    }
+
+
+def load_crossover(root: Optional[str] = None) -> Dict[str, Optional[int]]:
+    """``derive_crossover`` over the committed ``BENCH_kernels.json``.
+
+    Missing or malformed artifacts degrade to all-None (CPU path) — an
+    installed package without the repo checkout must still construct.
+    """
+    if root is None:
+        root = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        )
+    path = os.path.join(root, "BENCH_kernels.json")
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        return derive_crossover(payload.get("results", []))
+    except (OSError, ValueError):
+        return {"replace": None, "crc": None}
+
+
+class _Request:
+    __slots__ = ("kind", "symbols", "window", "data", "tiles", "nbytes", "future")
+
+    def __init__(self, kind: str, *, symbols=None, window=None, data=None):
+        self.kind = kind
+        self.symbols = symbols
+        self.window = window
+        self.data = data
+        if kind == "replace":
+            self.nbytes = int(symbols.shape[0])
+            self.tiles = max(1, -(-self.nbytes // TILE))
+        else:
+            self.nbytes = len(data)
+            self.tiles = 0
+        self.future: Future = Future()
+
+
+class DeviceDecodeEngine:
+    """Process-wide batched dispatcher for stage-2 device work.
+
+    One engine per process (the service layer owns it like ``CachePool`` /
+    ``FairExecutor``); every entry point is thread-safe. The duck-typed
+    resolver surface consumed by ``core.codec`` / ``core.chunk_fetcher``:
+
+      * ``replace_markers(symbols, window) -> np.uint8 ndarray`` (blocking)
+      * ``crc32(data) -> int`` (blocking)
+      * ``submit_replace`` / ``submit_crc`` -> Future (async variants)
+      * ``stats() -> dict`` / ``shutdown()``
+    """
+
+    def __init__(
+        self,
+        *,
+        max_batch_tiles: int = 32,
+        max_tables: int = 8,
+        max_batch_crc_bytes: int = 4 << 20,
+        max_crc_requests: int = 16,
+        max_delay_s: float = 0.002,
+        crossover: Union[str, None, Dict[str, Optional[int]]] = "auto",
+        force_device: bool = False,
+        interpret: Optional[bool] = None,
+        artifact_root: Optional[str] = None,
+    ):
+        self.max_batch_tiles = max(1, max_batch_tiles)
+        self.max_tables = _pow2_at_least(max(1, max_tables))
+        self.max_batch_crc_bytes = max(1 << 10, max_batch_crc_bytes)
+        self.max_crc_requests = max(1, max_crc_requests)
+        self.max_delay_s = max(0.0, max_delay_s)
+        self.force_device = force_device
+        self.interpret = INTERPRET if interpret is None else interpret
+        self.available = _HAVE_JAX
+        if crossover == "auto":
+            self.crossover = load_crossover(artifact_root)
+        elif crossover is None:
+            self.crossover = {"replace": None, "crc": None}
+        else:
+            self.crossover = {
+                "replace": crossover.get("replace"),
+                "crc": crossover.get("crc"),
+            }
+
+        self._cond = threading.Condition()
+        self._rq: Deque[_Request] = deque()
+        self._cq: Deque[_Request] = deque()
+        self._closed = False
+        # Replacement tables are pure functions of the window; serving reads
+        # hit the same windows repeatedly (re-reads, overlapping ranges), so
+        # an LRU of built tables (132 KiB each) turns the per-dispatch table
+        # cost into a cache probe. Worker-thread only — no lock needed.
+        self._table_cache: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
+        self._table_cache_cap = 32
+        # Device-side cache of padded, uploaded table *stacks* keyed by the
+        # dispatch's window set — a repeat batch skips assembly + transfer.
+        self._stack_cache: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self._stack_cache_cap = 8
+        # Double-buffered host staging: two numpy buffers per bucket shape,
+        # alternating between consecutive dispatches so packing batch N+1
+        # never scribbles over memory the in-flight transfer of batch N may
+        # still be reading (pinned-buffer discipline on real hardware).
+        self._staging: Dict[Tuple, List[np.ndarray]] = {}
+        self._staging_phase = 0
+
+        # Counters (mutated under self._cond).
+        self._requests = {"replace": 0, "crc": 0}
+        self._fallbacks = {"replace": 0, "crc": 0}
+        self._batches = 0
+        self._dispatches = 0
+        self._batched_requests = 0
+        self._tiles_dispatched = 0
+        self._tiles_padded = 0
+        self._crc_bytes = 0
+        self._max_queue_depth = 0
+        self._errors = 0
+
+        self._worker: Optional[threading.Thread] = None
+        if self.available:
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="device-decode-engine", daemon=True
+            )
+            self._worker.start()
+
+    # ------------------------------------------------------------------
+    # routing policy
+    # ------------------------------------------------------------------
+
+    def _route_device(self, kind: str, nbytes: int) -> bool:
+        if not self.available or self._closed:
+            return False
+        if self.force_device:
+            return True
+        threshold = self.crossover.get(kind)
+        return threshold is not None and nbytes >= threshold
+
+    def _count(self, counter: Dict[str, int], kind: str) -> None:
+        with self._cond:
+            counter[kind] += 1
+
+    # ------------------------------------------------------------------
+    # submission API
+    # ------------------------------------------------------------------
+
+    def submit_replace(self, symbols: np.ndarray, window: Optional[bytes]) -> Future:
+        """Queue a marker-resolution request; resolves to a uint8 array.
+
+        Tiny/degenerate requests resolve immediately without touching the
+        queue; when the device is unavailable the work happens inline on the
+        caller's thread (counted as a fallback) so the future contract holds
+        everywhere.
+        """
+        self._count(self._requests, "replace")
+        fut: Future = Future()
+        if symbols.dtype == np.uint8 or symbols.shape[0] == 0:
+            fut.set_result(np.asarray(symbols, dtype=np.uint8))
+            return fut
+        if not self.available:
+            self._count(self._fallbacks, "replace")
+            fut.set_result(_cpu_replace_markers(symbols, window))
+            return fut
+        req = _Request("replace", symbols=symbols, window=window)
+        self._enqueue(self._rq, req)
+        return req.future
+
+    def submit_crc(self, data) -> Future:
+        """Queue a CRC32 request; resolves to the int checksum."""
+        self._count(self._requests, "crc")
+        data = _as_bytes(data)
+        fut: Future = Future()
+        if len(data) == 0:
+            fut.set_result(0)
+            return fut
+        if not self.available:
+            self._count(self._fallbacks, "crc")
+            fut.set_result(_zlib.crc32(data) & 0xFFFFFFFF)
+            return fut
+        req = _Request("crc", data=data)
+        self._enqueue(self._cq, req)
+        return req.future
+
+    def _enqueue(self, queue: Deque[_Request], req: _Request) -> None:
+        with self._cond:
+            if self._closed:
+                raise EngineClosedError("DeviceDecodeEngine is shut down")
+            queue.append(req)
+            depth = len(self._rq) + len(self._cq)
+            if depth > self._max_queue_depth:
+                self._max_queue_depth = depth
+            self._cond.notify_all()
+
+    # ------------------------------------------------------------------
+    # blocking resolver surface (what codec/fetcher call)
+    # ------------------------------------------------------------------
+
+    def replace_markers(self, symbols: np.ndarray, window: Optional[bytes]) -> np.ndarray:
+        """Resolve a marker stream — batched on-device above the crossover,
+        inline on the CPU below it (or whenever the device cannot win)."""
+        if symbols.dtype == np.uint8:
+            return symbols
+        if self._route_device("replace", symbols.shape[0]):
+            try:
+                return self.submit_replace(symbols, window).result()
+            except EngineClosedError:
+                pass  # raced shutdown: serve on the CPU like any fallback
+        else:
+            self._count(self._requests, "replace")
+        self._count(self._fallbacks, "replace")
+        return _cpu_replace_markers(symbols, window)
+
+    def crc32(self, data) -> int:
+        """CRC32 — batched on-device above the crossover, zlib below it."""
+        data = _as_bytes(data)
+        if self._route_device("crc", len(data)):
+            try:
+                return self.submit_crc(data).result()
+            except EngineClosedError:
+                pass
+        else:
+            self._count(self._requests, "crc")
+        self._count(self._fallbacks, "crc")
+        return _zlib.crc32(data) & 0xFFFFFFFF
+
+    # ------------------------------------------------------------------
+    # dispatcher thread
+    # ------------------------------------------------------------------
+
+    def _collect_batch(self) -> Optional[Tuple[List[_Request], List[_Request]]]:
+        """Block until work (or shutdown); return one coalesced batch.
+
+        After the first request arrives, waits up to ``max_delay_s`` for the
+        batch to fill — the window in which concurrent readers' stage-2 work
+        coalesces into one dispatch. Returns None at shutdown.
+        """
+        with self._cond:
+            while not self._closed and not self._rq and not self._cq:
+                self._cond.wait()
+            if self._closed:
+                return None
+            if self.max_delay_s > 0.0:
+                deadline = time.monotonic() + self.max_delay_s
+                while not self._closed:
+                    tiles = sum(r.tiles for r in self._rq)
+                    crc_bytes = sum(r.nbytes for r in self._cq)
+                    if (
+                        tiles >= self.max_batch_tiles
+                        or len(self._cq) >= self.max_crc_requests
+                        or crc_bytes >= self.max_batch_crc_bytes
+                    ):
+                        break
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(remaining)
+                if self._closed:
+                    return None
+
+            rep: List[_Request] = []
+            tiles = 0
+            tables: set = set()
+            while self._rq:
+                req = self._rq[0]
+                key = bytes(req.window or b"")
+                new_table = key not in tables
+                if rep and (
+                    tiles + req.tiles > self.max_batch_tiles
+                    or (new_table and len(tables) >= self.max_tables)
+                ):
+                    break
+                self._rq.popleft()
+                rep.append(req)
+                tiles += req.tiles
+                tables.add(key)
+            crc: List[_Request] = []
+            crc_bytes = 0
+            while self._cq and len(crc) < self.max_crc_requests:
+                req = self._cq[0]
+                if crc and crc_bytes + req.nbytes > self.max_batch_crc_bytes:
+                    break
+                self._cq.popleft()
+                crc.append(req)
+                crc_bytes += req.nbytes
+            return rep, crc
+
+    def _worker_loop(self) -> None:
+        pending = None  # resolve-callback of the previous (in-flight) batch
+        while True:
+            batch = self._collect_batch()
+            if batch is None:
+                break
+            rep, crc = batch
+            launched = []
+            try:
+                if rep:
+                    launched.append(self._dispatch_replace(rep))
+                if crc:
+                    launched.append(self._dispatch_crc(crc))
+            except BaseException as exc:  # noqa: BLE001 - fail the batch, keep serving
+                with self._cond:
+                    self._errors += 1
+                for req in rep + crc:
+                    if not req.future.done():
+                        req.future.set_exception(exc)
+                continue
+            # Pipeline: resolve the *previous* dispatch only after launching
+            # this one — readback of batch N overlaps device work of N+1.
+            if pending is not None:
+                self._resolve_safely(pending)
+            if launched:
+                with self._cond:
+                    self._batches += 1
+                    self._batched_requests += len(rep) + len(crc)
+            pending = launched or None
+            with self._cond:
+                idle = not self._rq and not self._cq
+            if idle and pending is not None:
+                self._resolve_safely(pending)
+                pending = None
+        if pending is not None:
+            self._resolve_safely(pending)
+
+    def _resolve_safely(self, launched) -> None:
+        for resolve in launched:
+            try:
+                resolve()
+            except BaseException:  # noqa: BLE001 - resolve() fails its own futures
+                with self._cond:
+                    self._errors += 1
+
+    # -- marker replacement dispatch ------------------------------------
+
+    def _replacement_table(self, window: bytes) -> np.ndarray:
+        table = self._table_cache.get(window)
+        if table is not None:
+            self._table_cache.move_to_end(window)
+            return table
+        table = make_replacement_table(np.frombuffer(window, np.uint8))
+        self._table_cache[window] = table
+        if len(self._table_cache) > self._table_cache_cap:
+            self._table_cache.popitem(last=False)
+        return table
+
+    def _staging_buffer(self, key: Tuple, shape: Tuple[int, ...]) -> np.ndarray:
+        bufs = self._staging.get(key)
+        if bufs is None:
+            bufs = [np.zeros(shape, np.int32), np.zeros(shape, np.int32)]
+            self._staging[key] = bufs
+        return bufs[self._staging_phase & 1]
+
+    def _table_stack(self, keys: Tuple[bytes, ...]) -> Any:
+        """Device-resident (n_tables, TABLE_SIZE) stack for a window set.
+
+        Window sets recur across dispatches (the same few chunks' windows
+        serve a burst of reads), so the padded, uploaded stack is cached
+        whole — a hit skips both the host assembly and the transfer.
+        """
+        n_tables = _pow2_at_least(len(keys), self.max_tables)
+        cache_key = (n_tables,) + keys
+        stack = self._stack_cache.get(cache_key)
+        if stack is not None:
+            self._stack_cache.move_to_end(cache_key)
+            return stack
+        tab_stack = np.zeros((n_tables, TABLE_SIZE), np.int32)
+        for i in range(n_tables):
+            tab_stack[i] = self._replacement_table(keys[min(i, len(keys) - 1)])
+        stack = jnp.asarray(tab_stack)
+        self._stack_cache[cache_key] = stack
+        if len(self._stack_cache) > self._stack_cache_cap:
+            self._stack_cache.popitem(last=False)
+        return stack
+
+    def _dispatch_replace(self, reqs: List[_Request]):
+        """Pack, upload, and launch one marker batch; returns resolve()."""
+        self._staging_phase += 1
+        # Dedupe windows into a table stack; selector per tile.
+        table_ids: Dict[bytes, int] = {}
+        total_tiles = sum(r.tiles for r in reqs)
+        tid_flat = np.zeros(total_tiles, np.int32)
+        spans: List[Tuple[_Request, int, int]] = []
+        single = total_tiles <= self.max_batch_tiles
+        if single:
+            # Common case: the whole batch is one slab — pack symbols
+            # straight into the staging buffer, no intermediate copy. Pad
+            # gaps keep whatever the buffer last held: stale values were
+            # themselves valid symbols (< TABLE_SIZE), so the gather stays
+            # in range and the padded outputs are simply never read.
+            bucket = _pow2_at_least(total_tiles, self.max_batch_tiles)
+            stage = self._staging_buffer(
+                ("rep", bucket), (bucket, TILE_ROWS, TILE_COLS)
+            )
+            sym_flat = stage.reshape(-1)
+        else:
+            sym_flat = np.zeros(total_tiles * TILE, np.int32)
+        pos = 0
+        for req in reqs:
+            key = bytes(req.window or b"")
+            tid = table_ids.get(key)
+            if tid is None:
+                tid = len(table_ids)
+                table_ids[key] = tid
+            n = req.nbytes
+            sym_flat[pos * TILE : pos * TILE + n] = req.symbols
+            tid_flat[pos : pos + req.tiles] = tid
+            spans.append((req, pos * TILE, n))
+            pos += req.tiles
+
+        tab_dev = self._table_stack(tuple(table_ids))
+
+        # Slab the packed tiles: oversized single requests span multiple
+        # kernel launches, everything else fits one. Bucketed shapes keep
+        # the set of compiled kernels small and cached.
+        outs: List[Tuple[Any, int]] = []
+        slabs = 0
+        for s0 in range(0, total_tiles, self.max_batch_tiles):
+            n = min(self.max_batch_tiles, total_tiles - s0)
+            bucket = _pow2_at_least(n, self.max_batch_tiles)
+            if single:
+                stage_slab = stage
+            else:
+                stage_slab = self._staging_buffer(
+                    ("rep", bucket), (bucket, TILE_ROWS, TILE_COLS)
+                )
+                stage_slab.reshape(-1)[: n * TILE] = (
+                    sym_flat[s0 * TILE : (s0 + n) * TILE]
+                )
+            tids = np.zeros(bucket, np.int32)
+            tids[:n] = tid_flat[s0 : s0 + n]
+            out = marker_replace_tiles_multi(
+                jnp.asarray(stage_slab), tab_dev, jnp.asarray(tids),
+                interpret=self.interpret,
+            )
+            outs.append((out, n))
+            slabs += 1
+            with self._cond:
+                self._tiles_dispatched += n
+                self._tiles_padded += bucket - n
+        with self._cond:
+            self._dispatches += slabs
+
+        def resolve() -> None:
+            flat_out = np.concatenate(
+                [np.asarray(out).reshape(-1)[: n * TILE] for out, n in outs]
+            )
+            for req, off, n in spans:
+                if not req.future.done():
+                    req.future.set_result(
+                        flat_out[off : off + n].astype(np.uint8)
+                    )
+
+        return resolve
+
+    # -- CRC dispatch ----------------------------------------------------
+
+    def _dispatch_crc(self, reqs: List[_Request]):
+        """Pack many byte streams into one (B, 8, 128, seg_len) dispatch."""
+        self._staging_phase += 1
+        seg_len = _pow2_at_least(
+            max(1, max(-(-r.nbytes // N_SEGMENTS) for r in reqs))
+        )
+        batch = _pow2_at_least(len(reqs))
+        from .crc32 import SEG_COLS, SEG_ROWS  # local: shapes only
+
+        stage = self._staging_buffer(
+            ("crc", batch, seg_len), (batch, SEG_ROWS, SEG_COLS, seg_len)
+        )
+        stage.fill(0)
+        fulls: List[int] = []
+        for bi, req in enumerate(reqs):
+            full = req.nbytes // seg_len
+            fulls.append(full)
+            if full:
+                lanes = stage[bi].reshape(N_SEGMENTS, seg_len)
+                lanes[:full] = np.frombuffer(
+                    req.data, np.uint8, count=full * seg_len
+                ).reshape(full, seg_len)
+        out = crc32_segments_batched(
+            jnp.asarray(stage), make_crc_table(), interpret=self.interpret
+        )
+        with self._cond:
+            self._dispatches += 1
+            self._crc_bytes += sum(r.nbytes for r in reqs)
+
+        def resolve() -> None:
+            crcs = np.asarray(out).astype(np.uint32)
+            for bi, req in enumerate(reqs):
+                lanes = crcs[bi].reshape(-1)
+                full = fulls[bi]
+                parts = [(int(lanes[s]), seg_len) for s in range(full)]
+                rem = req.nbytes - full * seg_len
+                if rem:
+                    parts.append(
+                        (_zlib.crc32(req.data[full * seg_len :]) & 0xFFFFFFFF, rem)
+                    )
+                if not req.future.done():
+                    req.future.set_result(combine_parts(parts))
+
+        return resolve
+
+    # ------------------------------------------------------------------
+    # lifecycle & telemetry
+    # ------------------------------------------------------------------
+
+    def shutdown(self) -> None:
+        """Stop the dispatcher and fail queued requests loudly.
+
+        Requests already collected into an in-flight batch complete; anything
+        still queued gets ``EngineClosedError`` — callers must never hang on
+        a future the worker will no longer serve.
+        """
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=30)
+        with self._cond:
+            leftovers = list(self._rq) + list(self._cq)
+            self._rq.clear()
+            self._cq.clear()
+        for req in leftovers:
+            if not req.future.done():
+                req.future.set_exception(
+                    EngineClosedError("DeviceDecodeEngine shut down with requests queued")
+                )
+
+    def __enter__(self) -> "DeviceDecodeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def stats(self) -> Dict[str, Any]:
+        """Snapshot for ``/v1/metrics`` (server threads it through)."""
+        with self._cond:
+            tiles_total = self._tiles_dispatched + self._tiles_padded
+            return {
+                "available": self.available,
+                "interpret": self.interpret,
+                "force_device": self.force_device,
+                "crossover_bytes": dict(self.crossover),
+                "requests": dict(self._requests),
+                "fallbacks": dict(self._fallbacks),
+                "batches": self._batches,
+                "dispatches": self._dispatches,
+                "batched_requests": self._batched_requests,
+                "tiles_dispatched": self._tiles_dispatched,
+                "tiles_padded": self._tiles_padded,
+                "occupancy": (
+                    self._tiles_dispatched / tiles_total if tiles_total else 0.0
+                ),
+                "crc_bytes": self._crc_bytes,
+                "queue_depth": len(self._rq) + len(self._cq),
+                "max_queue_depth": self._max_queue_depth,
+                "errors": self._errors,
+                "closed": self._closed,
+            }
+
+
+def _as_bytes(data) -> bytes:
+    """Normalize ndarray/memoryview/bytes input to bytes for zlib/packing."""
+    if isinstance(data, bytes):
+        return data
+    if isinstance(data, np.ndarray):
+        return np.ascontiguousarray(data).tobytes()
+    return bytes(data)

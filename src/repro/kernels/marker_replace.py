@@ -58,3 +58,55 @@ def marker_replace_tiles(syms: jax.Array, table: jax.Array, *, interpret: bool =
         out_shape=jax.ShapeDtypeStruct(syms.shape, jnp.int32),
         interpret=interpret,
     )(syms, table)
+
+
+def _marker_replace_multi_kernel(tids_ref, syms_ref, tables_ref, out_ref):
+    """out = tables[tid][syms] — one table per tile, selected dynamically.
+
+    The batched-engine variant: a dispatch carries tiles from many chunks
+    (each chunk resolved against its own window), so the replacement table
+    becomes a small VMEM-resident stack of tables plus a per-tile int32
+    selector. The gather itself is unchanged; only the table load gains one
+    dynamic index (a VMEM-local dynamic slice, free on the VPU).
+    """
+    tid = tids_ref[0]
+    syms = syms_ref[...]
+    table = tables_ref[tid, :]
+    out_ref[...] = table[syms]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def marker_replace_tiles_multi(
+    syms: jax.Array,
+    tables: jax.Array,
+    tile_tables: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather-replace over tiles drawn from many chunks/windows in one call.
+
+    syms:        (n_tiles, TILE_ROWS, TILE_COLS) int32 (padded)
+    tables:      (n_tables, TABLE_SIZE) int32 — one replacement table per
+                 distinct window in the batch (all resident in VMEM: 132 KiB
+                 each, so a 16-window batch is ~2 MiB, well inside v5e VMEM)
+    tile_tables: (n_tiles,) int32 — table index for each tile
+    returns syms-shaped int32 with markers resolved.
+
+    On real TPU hardware the per-tile selector would ride scalar prefetch
+    (``PrefetchScalarGridSpec``) so the index is known before the body runs;
+    interpret mode (this container) takes it as a 1-element block.
+    """
+    n_tiles = syms.shape[0]
+    n_tables = tables.shape[0]
+    return pl.pallas_call(
+        _marker_replace_multi_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_COLS), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n_tables, TABLE_SIZE), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_ROWS, TILE_COLS), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(syms.shape, jnp.int32),
+        interpret=interpret,
+    )(tile_tables, syms, tables)

@@ -3,10 +3,19 @@
 These are the entry points the rest of the system uses: they pad/reshape
 host data into kernel tiling, dispatch (interpret=True on CPU — TPU v5e is
 the compile target), and restore shapes/dtypes.
+
+Constant tables are cached at module level: the CRC byte LUT (one device
+transfer per process, via ``make_crc_table``'s own memo) and the
+empty-window replacement table (the common case for the first chunk of a
+stream). The jitted dispatch functions themselves are module-level
+``jax.jit``s, so traces are shared per shape bucket across calls — per-call
+work is reduced to padding + the dispatch itself. For cross-chunk batching
+on the serving hot path, see ``kernels/engine.py``.
 """
 
 from __future__ import annotations
 
+import zlib as _zlib
 from typing import Optional, Tuple
 
 import jax
@@ -24,13 +33,32 @@ _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 #: mode for this container; on real TPU hardware the same calls compile.
 INTERPRET = not _ON_TPU
 
+_EMPTY_WINDOW_TABLE: Optional[jax.Array] = None
+
+
+def replacement_table_device(window: Optional[bytes]) -> jax.Array:
+    """Device-resident int32 replacement table for ``window``.
+
+    The empty-window table (every marker resolves to 0 — the first chunk of
+    any stream) is a constant and cached; real windows are content-dependent
+    and built per call.
+    """
+    global _EMPTY_WINDOW_TABLE
+    if not window:
+        if _EMPTY_WINDOW_TABLE is None:
+            _EMPTY_WINDOW_TABLE = jnp.asarray(
+                make_replacement_table(np.empty(0, np.uint8))
+            )
+        return _EMPTY_WINDOW_TABLE
+    return jnp.asarray(make_replacement_table(np.frombuffer(window, np.uint8)))
+
 
 # -- marker replacement -------------------------------------------------------
 
 def marker_replace(symbols: np.ndarray, window: Optional[bytes]) -> np.ndarray:
     """Resolve a uint16 marker stream to bytes via the Pallas kernel."""
     n = symbols.shape[0]
-    table = jnp.asarray(make_replacement_table(np.frombuffer(window or b"", np.uint8)))
+    table = replacement_table_device(window)
     n_tiles = max(1, -(-n // TILE))
     padded = np.zeros(n_tiles * TILE, dtype=np.int32)
     padded[:n] = symbols.astype(np.int32)
@@ -95,8 +123,6 @@ def crc32_parallel(data: bytes) -> int:
         parts.append((int(flat[s]), seg_len))
     rem = n - full_segments * seg_len
     if rem:
-        import zlib
-
         tail = data[full_segments * seg_len :]
-        parts.append((zlib.crc32(tail) & 0xFFFFFFFF, rem))
+        parts.append((_zlib.crc32(tail) & 0xFFFFFFFF, rem))
     return combine_parts(parts)

@@ -18,6 +18,20 @@ def marker_replace_ref(syms: jax.Array, table: jax.Array) -> jax.Array:
     return jnp.take(table, syms, axis=0)
 
 
+def marker_replace_multi_ref(
+    syms: jax.Array, tables: jax.Array, tile_tables: jax.Array
+) -> jax.Array:
+    """Oracle for the batched multi-window kernel: per-tile table select.
+
+    syms: (n_tiles, R, C) int32; tables: (n_tables, TABLE_SIZE) int32;
+    tile_tables: (n_tiles,) int32.
+    """
+    per_tile = jnp.take(tables, tile_tables, axis=0)  # (n_tiles, TABLE_SIZE)
+    return jnp.take_along_axis(
+        per_tile[:, :, None], syms.reshape(syms.shape[0], -1, 1), axis=1
+    ).reshape(syms.shape)
+
+
 def make_replacement_table(window: np.ndarray) -> np.ndarray:
     """int32 replacement table from a (possibly short) window."""
     table = np.empty(TABLE_SIZE, dtype=np.int32)
@@ -68,5 +82,16 @@ def crc32_segments_ref(data: jax.Array, table: jax.Array) -> jax.Array:
         return jax.lax.shift_right_logical(crc, 8) ^ jnp.take(table, idx, axis=0), None
 
     init = jnp.full(data.shape[:2], jnp.int32(-1))
+    crc, _ = jax.lax.scan(step, init, jnp.moveaxis(data, -1, 0))
+    return ~crc
+
+
+def crc32_segments_batched_ref(data: jax.Array, table: jax.Array) -> jax.Array:
+    """Oracle for the batched CRC kernel: (B, R, C, L) -> (B, R, C)."""
+    def step(crc, byte):
+        idx = (crc ^ byte) & 0xFF
+        return jax.lax.shift_right_logical(crc, 8) ^ jnp.take(table, idx, axis=0), None
+
+    init = jnp.full(data.shape[:3], jnp.int32(-1))
     crc, _ = jax.lax.scan(step, init, jnp.moveaxis(data, -1, 0))
     return ~crc

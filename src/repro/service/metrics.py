@@ -71,12 +71,16 @@ def collect(
     executor=None,
     index_store=None,
     service: Optional[Mapping[str, Any]] = None,
+    engine=None,
 ) -> Dict[str, Any]:
     """One service-wide snapshot. All sections are optional except readers.
 
     ``service`` carries the server's front-door gauges (in-flight read
     count, cumulative reads split by discipline) — the liveness complement
     to the per-reader frontier lock-wait counters in the fleet section.
+    ``engine`` is the server's shared `DeviceDecodeEngine` (or anything with
+    ``stats()``): batch counts, tile occupancy, queue depth, and CPU
+    fallbacks land in an ``engine`` section.
     """
     out: Dict[str, Any] = {
         "fleet": aggregate_reader_reports(reader_reports),
@@ -91,6 +95,8 @@ def collect(
         out["index_store"] = index_store.stats.as_dict()
     if service is not None:
         out["service"] = dict(service)
+    if engine is not None:
+        out["engine"] = engine.stats()
     return out
 
 
@@ -166,6 +172,20 @@ def format_summary(snapshot: Mapping[str, Any]) -> str:
                     "%s=%.1fMiB" % (t, b / (1 << 20)) for t, b in sorted(db.items())
                 )
             )
+    engine = snapshot.get("engine")
+    if engine is not None:
+        req = engine.get("requests", {})
+        fb = engine.get("fallbacks", {})
+        lines.append(
+            "engine[%s]: %d batches over %d requests (replace=%d crc=%d),"
+            " occupancy %.2f, %d queued (max %d), fallbacks replace=%d crc=%d"
+            % ("device" if engine.get("available") else "cpu-only",
+               engine.get("batches", 0), engine.get("batched_requests", 0),
+               req.get("replace", 0), req.get("crc", 0),
+               engine.get("occupancy", 0.0), engine.get("queue_depth", 0),
+               engine.get("max_queue_depth", 0),
+               fb.get("replace", 0), fb.get("crc", 0))
+        )
     store = snapshot.get("index_store")
     if store is not None:
         line = "index store: %d hits, %d misses, %d puts" % (

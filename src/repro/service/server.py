@@ -134,6 +134,8 @@ class ArchiveServer:
         tenant_weights: Optional[Dict[str, float]] = None,
         tenant_quanta: Optional[Dict[str, float]] = None,
         remote_options: Optional[Dict[str, Any]] = None,
+        device_engine: Any = "auto",
+        engine_options: Optional[Dict[str, Any]] = None,
     ):
         #: kwargs forwarded to every RemoteFileReader the server opens for
         #: http(s):// sources: auth headers, block_size/cache_blocks,
@@ -162,6 +164,29 @@ class ArchiveServer:
         for tenant, factor in (tenant_quanta or {}).items():
             self.executor.set_tenant_quantum(tenant, factor)
         self.index_store = index_store if index_store is not None else IndexStore()
+        # One batched stage-2 device engine per server, shared by every
+        # reader/tenant like the executor and cache pool — cross-reader
+        # batching is the whole point (kernels/engine.py). "auto" builds one
+        # when the kernel stack imports (falling back to None — pure CPU —
+        # on hosts without jax); "off"/None/False disables; an object with a
+        # ``replace_markers`` attribute is used as an externally owned
+        # engine and is NOT shut down with the server.
+        self.device_engine = None
+        self._owns_engine = False
+        if hasattr(device_engine, "replace_markers"):
+            self.device_engine = device_engine
+        elif device_engine == "auto":
+            try:
+                from ..kernels.engine import DeviceDecodeEngine
+
+                self.device_engine = DeviceDecodeEngine(**(engine_options or {}))
+                self._owns_engine = True
+            except Exception:  # noqa: BLE001 - no jax/kernels: serve on CPU
+                self.device_engine = None
+        elif device_engine not in (None, False, "off"):
+            raise ValueError(
+                "device_engine must be 'auto', 'off'/None/False, or an engine"
+            )
         self.chunk_size = chunk_size
         self.reader_parallelization = reader_parallelization
         self.access_cache_entries = access_cache_entries
@@ -271,6 +296,7 @@ class ArchiveServer:
                     executor=self.executor.view(entry.tenant),
                     access_cache=access_cache,
                     prefetch_cache=prefetch_cache,
+                    resolver=self.device_engine,
                 )
                 entry.codec = entry.reader.codec.tag
             except BaseException:
@@ -508,6 +534,10 @@ class ArchiveServer:
             self._closed = True
         self.close_all()
         self.executor.shutdown(wait=False, cancel_futures=True)
+        # After the executor: no pool worker can submit to the engine once
+        # the pool is down, so queued engine futures error instead of hang.
+        if self._owns_engine and self.device_engine is not None:
+            self.device_engine.shutdown()
 
     def __enter__(self) -> "ArchiveServer":
         return self
@@ -559,4 +589,5 @@ class ArchiveServer:
             executor=self.executor,
             index_store=self.index_store,
             service=service,
+            engine=self.device_engine,
         )

@@ -85,6 +85,17 @@ def pytest_configure(config):
         "gateway: HTTP gateway tests against an in-process loopback "
         "GatewayServer (no external network access)",
     )
+    # Kernel interpret-mode tests (Pallas kernels + the batched device
+    # engine) run the kernel bodies in Python — correct but slow. The marker
+    # gives them a selection handle: `-m kernels` for the kernel lane,
+    # `-m "not kernels"` for a fast CPU-only pass. They still run in plain
+    # tier-1; the tier-2 perf gate is
+    # `python -m benchmarks.run --smoke --only kernels,codecs` (ROADMAP).
+    config.addinivalue_line(
+        "markers",
+        "kernels: Pallas interpret-mode kernel/engine tests (slow kernel-"
+        "body interpretation; `-m kernels` selects just these)",
+    )
     # Zstd tests exercise real seekable frames when a library is importable
     # (stdlib compression.zstd on 3.14+, else the optional zstandard extra —
     # see requirements-test.txt) and must skip cleanly on a bare container.

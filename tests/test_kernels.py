@@ -10,12 +10,26 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import crc32_parallel, marker_replace, precode_candidates
-from repro.kernels.crc32 import SEG_COLS, SEG_ROWS, crc32_segments, make_crc_table
-from repro.kernels.marker_replace import TILE, TILE_COLS, TILE_ROWS, marker_replace_tiles
+from repro.kernels.crc32 import (
+    SEG_COLS,
+    SEG_ROWS,
+    crc32_segments,
+    crc32_segments_batched,
+    make_crc_table,
+)
+from repro.kernels.marker_replace import (
+    TILE,
+    TILE_COLS,
+    TILE_ROWS,
+    marker_replace_tiles,
+    marker_replace_tiles_multi,
+)
 from repro.kernels.precode_check import BLOCK, HALO, precode_check_blocks
 from repro.kernels.ref import (
+    crc32_segments_batched_ref,
     crc32_segments_ref,
     make_replacement_table,
+    marker_replace_multi_ref,
     marker_replace_ref,
     precode_check_ref,
 )
@@ -23,6 +37,8 @@ from repro.core.block_finder import scan_dynamic_candidates
 from repro.core.markers import replace_markers
 
 from conftest import make_random, make_text
+
+pytestmark = pytest.mark.kernels
 
 
 # ---------------------------------------------------------------------------
@@ -64,6 +80,34 @@ def test_marker_replace_property(n, wlen):
     pick = rng.integers(0, 2, n, dtype=np.uint16)
     syms = np.where(pick == 1, marks, lits).astype(np.uint16)
     np.testing.assert_array_equal(marker_replace(syms, window), replace_markers(syms, window))
+
+
+@pytest.mark.parametrize("n_tiles,n_tables", [(1, 1), (4, 2), (6, 4)])
+def test_marker_replace_multi_kernel_vs_ref(rng, n_tiles, n_tables):
+    """Batched multi-window kernel: per-tile table select matches the oracle
+    and the single-table kernel applied table by table."""
+    tables_np = np.stack([
+        make_replacement_table(rng.integers(0, 256, 32768, dtype=np.uint8))
+        for _ in range(n_tables)
+    ])
+    tables = jnp.asarray(tables_np)
+    syms = jnp.asarray(
+        rng.integers(0, 256 + 32768, (n_tiles, TILE_ROWS, TILE_COLS), dtype=np.int64)
+        .astype(np.int32)
+    )
+    tids_np = rng.integers(0, n_tables, n_tiles, dtype=np.int64).astype(np.int32)
+    tids = jnp.asarray(tids_np)
+    out = np.asarray(marker_replace_tiles_multi(syms, tables, tids, interpret=True))
+    ref = np.asarray(marker_replace_multi_ref(syms, tables, tids))
+    np.testing.assert_array_equal(out, ref)
+    for t in range(n_tables):
+        sel = tids_np == t
+        if not sel.any():
+            continue
+        single = np.asarray(
+            marker_replace_tiles(syms[sel], tables[t], interpret=True)
+        )
+        np.testing.assert_array_equal(out[sel], single)
 
 
 # ---------------------------------------------------------------------------
@@ -127,3 +171,21 @@ def test_crc32_kernel_vs_ref(rng, seg_len):
 def test_crc32_parallel_matches_zlib(rng, n):
     blob = make_random(rng, n)
     assert crc32_parallel(blob) == (zlib.crc32(blob) & 0xFFFFFFFF)
+
+
+@pytest.mark.parametrize("batch,seg_len", [(1, 1), (2, 7), (4, 16)])
+def test_crc32_batched_kernel_vs_ref(rng, batch, seg_len):
+    data = rng.integers(
+        0, 256, (batch, SEG_ROWS, SEG_COLS, seg_len), dtype=np.int64
+    ).astype(np.int32)
+    table = make_crc_table()
+    out = np.asarray(crc32_segments_batched(jnp.asarray(data), table, interpret=True))
+    ref = np.asarray(crc32_segments_batched_ref(jnp.asarray(data), table))
+    np.testing.assert_array_equal(out, ref)
+    # each batch row must equal the unbatched kernel on the same lanes
+    for b in range(batch):
+        single = np.asarray(crc32_segments(jnp.asarray(data[b]), table, interpret=True))
+        np.testing.assert_array_equal(out[b], single)
+    # spot-check one lane against zlib
+    seg = bytes(int(x) for x in data[-1, 0, 0])
+    assert (int(out[-1, 0, 0]) & 0xFFFFFFFF) == (zlib.crc32(seg) & 0xFFFFFFFF)
