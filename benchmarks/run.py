@@ -51,7 +51,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default="",
-        help="comma list: components,decomp,kernels,roofline,codecs,service,remote,gateway,fleet",
+        help="comma list: components,decomp,kernels,roofline,codecs,service,"
+             "remote,gateway,fleet,transcode",
     )
     ap.add_argument(
         "--smoke", action="store_true",
@@ -113,6 +114,12 @@ def main() -> None:
         # Hermetic: 3 loopback gateways behind a FleetRouter — routed vs
         # direct read latency, failover recovery, index-exchange warm open.
         sections.append(("fleet", _bench_fleet_mod.bench_fleet))
+    if only is None or "transcode" in only:
+        from . import bench_transcode
+
+        # Seek-hostile archive cold random access before vs after the
+        # background twin install — the acceptance bar is a >=5x p99 win.
+        sections.append(("transcode", lambda: bench_transcode.main(tempfile.mkdtemp())))
 
     failures = 0
     regressed_sections = 0

@@ -230,6 +230,22 @@ class Codec:
         (FLAG_ZLIB_UNSAFE). Empty for codecs without the concept."""
         return []
 
+    # -- seek hostility (transcode trigger) ---------------------------------
+
+    def seek_hostility(self, index: GzipIndex) -> float:
+        """How seek-hostile did the archive prove during its first pass?
+
+        Returns a score in [0, 1]; the transcode layer re-encodes archives
+        scoring above its threshold as a parallel-friendly twin (BGZF /
+        zstd-seekable). The base implementation — and any codec whose index
+        comes from framing metadata alone — reports 0.0: such formats are
+        already O(1)-seekable. Scores are computed from the in-memory
+        ``index.observations`` the reader records while building the index,
+        so only a freshly *built* index (first full decompression) can
+        probe hostile; imported/warm indexes score 0.0.
+        """
+        return 0.0
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return "<%s tag=%r>" % (type(self).__name__, self.tag)
 
@@ -351,6 +367,49 @@ class DeflateCodec(Codec):
     def stored_block_offsets(self, result: DecodeResult) -> List[int]:
         return [b.out_offset for b in result.blocks if b.block_type == BT_STORED]
 
+    def seek_hostility(self, index: GzipIndex) -> float:
+        """Deflate hostility from first-pass observations (paper §4.8).
+
+        Three signals, strongest wins:
+
+        * **fixed-only members** — chunks whose every block is
+          fixed-Huffman are invisible to the block finder; their fraction
+          is the score (1.0 for a ``Z_FIXED`` archive).
+        * **no block splits found** — speculation never landed a single
+          chunk (no marker-mode chunk collected) *and* no interior split
+          point was recorded: the whole first pass degraded to a
+          sequential chain of exact tasks. Scores 0.9.
+        * **two-stage-only point fraction** — seek points whose flags
+          require the marker decoder forever (``decoder_required_flags``:
+          interior member ends, zlib-unsafe stored spans). When ≥90% of
+          points are stuck on the 2x two-stage path every cache recompute
+          pays double, but random access still parallelizes — so this
+          signal scores 0.5 × fraction, below the default transcode
+          threshold on its own (it raises the score of an archive that is
+          *also* split-starved, never condemns a healthy one: ordinary
+          gzip of incompressible data hits it via stored-block
+          realignment).
+        """
+        obs = getattr(index, "observations", None) or {}
+        chunks = int(obs.get("chunks", 0))
+        if not index.finalized or chunks <= 0:
+            return 0.0
+        score = float(obs.get("fixed_chunks", 0)) / chunks
+        if (
+            chunks >= 2
+            and not obs.get("marker_chunks", 0)
+            and not obs.get("split_points", 0)
+        ):
+            score = max(score, 0.9)
+        points = index.points()
+        if points:
+            required = self.decoder_required_flags
+            hard = sum(1 for p in points if p.flags & required)
+            hard_frac = hard / len(points)
+            if hard_frac >= 0.9:
+                score = max(score, 0.5 * hard_frac)
+        return min(1.0, score)
+
 
 class BgzfCodec(DeflateCodec):
     """BGZF: exact member sizes from the BC FEXTRA subfield (paper §3.4.4).
@@ -399,6 +458,14 @@ class BgzfCodec(DeflateCodec):
             out += isize
         index.finalize(out, reader.size())
         return True
+
+    def seek_hostility(self, index: GzipIndex) -> float:
+        # Inherits DeflateCodec, but a BGZF index comes from framing
+        # metadata alone: member boundaries are O(1)-seekable by
+        # construction, so the deflate heuristics (which would misread the
+        # zero-marker/zero-split profile as sequential degradation) never
+        # apply. BGZF is the transcode *target*, never a source.
+        return 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -69,6 +69,12 @@ class GzipIndex:
         self.decompressed_size: Optional[int] = None
         self.compressed_size: Optional[int] = None
         self.codec_tag = codec_tag
+        #: First-pass observations recorded by the reader (chunk counts,
+        #: marker-mode chunks, fixed-only chunks, interior split points).
+        #: Purely in-memory — never serialized; ``Codec.seek_hostility``
+        #: reads them to score how seek-hostile the archive proved to be.
+        #: An imported index has no observations and always scores 0.0.
+        self.observations: dict = {}
 
     # -- construction -------------------------------------------------------
 

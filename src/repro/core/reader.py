@@ -46,6 +46,7 @@ import numpy as np
 from .chunk_fetcher import FinalizedChunk, ChunkFetcher
 from .codec import Codec, DeflateCodec, detect_codec, resolve_codec
 from .crc32 import crc32_combine
+from .deflate import BT_FIXED
 from .errors import FormatError, GzipFooterError, RapidgzipError
 from .filereader import open_file_reader
 from .index import (
@@ -280,6 +281,7 @@ class ParallelGzipReader(io.RawIOBase):
 
         # -- seek points ----------------------------------------------------
         cuts = self._split_offsets(fc)
+        self._observe_chunk(res, cuts)
         first_bound = cuts[0][1] if cuts else fc.size
         point_flags = 0
         if any(0 < me.out_offset <= first_bound for me in res.member_ends):
@@ -303,6 +305,18 @@ class ParallelGzipReader(io.RawIOBase):
         bounds = [s[1] for s in starts] + [fc.size]
         for j, i_point in enumerate(ordinals):
             self._fetcher.put_indexed(i_point, data[bounds[j] : bounds[j + 1]])
+
+    def _observe_chunk(self, res, cuts) -> None:
+        """Record first-pass hostility observations on the in-memory index
+        (``Codec.seek_hostility`` scores them once the index finalizes).
+        Runs under the frontier lock, so plain dict updates are race-free."""
+        obs = self._index.observations
+        obs["chunks"] = obs.get("chunks", 0) + 1
+        if res.marker_mode:
+            obs["marker_chunks"] = obs.get("marker_chunks", 0) + 1
+        if res.blocks and all(b.block_type == BT_FIXED for b in res.blocks):
+            obs["fixed_chunks"] = obs.get("fixed_chunks", 0) + 1
+        obs["split_points"] = obs.get("split_points", 0) + len(cuts)
 
     def _split_offsets(self, fc: FinalizedChunk):
         """Interior seek points bounding decompressed spacing (paper §1.4)."""
@@ -490,6 +504,14 @@ class ParallelGzipReader(io.RawIOBase):
     def build_full_index(self) -> GzipIndex:
         self.size()  # drives the first pass to completion (frontier-locked)
         return self._index
+
+    def seek_hostility(self) -> float:
+        """The codec's seek-hostility score for this reader's index (0 when
+        the first pass has not finished — only a fully built index can be
+        judged)."""
+        if not self._index.finalized:
+            return 0.0
+        return self._codec.seek_hostility(self._index)
 
     def export_index(self, dest) -> None:
         self.build_full_index()

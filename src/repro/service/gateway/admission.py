@@ -22,18 +22,30 @@ tenant id flows through to every backing budget — FairExecutor DRR queues,
 CachePool shares, and the optional per-tenant ``quanta`` factors the
 gateway applies at open time (paying tenants get a larger quantum).
 
-Thread-model: ``resolve`` is pure; ``acquire``/``release`` run only on the
-gateway's event loop (single thread, so counters need no lock — release is
-deliberately synchronous and hands its slot directly to the eldest live
-waiter, which makes it safe to call from a ``finally`` while the handler
-task is being cancelled); ``snapshot`` may be called from any thread (int
-reads are telemetry snapshots, not barriers).
+Concurrency slots bound *threads*; they do not bound *bytes* — a tenant
+streaming one enormous body per slot saturates the egress path while
+staying under every count. ``charge_bytes`` closes that hole with a
+per-tenant token bucket over bytes streamed (``byte_rate`` bytes/second,
+``byte_burst`` bucket depth): the gateway charges the whole response span
+up front, before any header goes out. The bucket allows overdraft — a
+tenant with a positive balance may start a response larger than the
+remaining tokens (otherwise no span above the burst could ever be served)
+— and then answers 429 until the deficit refills, so the long-run average
+never exceeds the configured rate.
+
+Thread-model: ``resolve`` is pure; ``acquire``/``release``/``charge_bytes``
+run only on the gateway's event loop (single thread, so counters need no
+lock — release is deliberately synchronous and hands its slot directly to
+the eldest live waiter, which makes it safe to call from a ``finally``
+while the handler task is being cancelled); ``snapshot`` may be called from
+any thread (int reads are telemetry snapshots, not barriers).
 """
 
 from __future__ import annotations
 
 import asyncio
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Deque, Dict, Optional, Tuple
@@ -56,11 +68,17 @@ class Unauthorized(Exception):
 class TenantLimit:
     max_in_flight: int = 2
     max_queued: int = 4
+    #: bytes/second this tenant may stream (None inherits the admission
+    #: default; the default's None means unlimited).
+    byte_rate: Optional[float] = None
+    #: token-bucket depth in bytes (None: 2 seconds of byte_rate).
+    byte_burst: Optional[int] = None
 
 
 class _Gate:
     __slots__ = (
-        "in_flight", "waiting", "waiters", "admitted", "rejected", "waited"
+        "in_flight", "waiting", "waiters", "admitted", "rejected", "waited",
+        "byte_tokens", "byte_refilled_at", "bytes_charged", "bytes_rejected",
     )
 
     def __init__(self) -> None:
@@ -70,6 +88,12 @@ class _Gate:
         self.admitted = 0
         self.rejected = 0
         self.waited = 0  # admissions that had to queue first
+        # Byte token bucket: lazily primed to the full burst on first
+        # charge (byte_refilled_at None = never charged).
+        self.byte_tokens = 0.0
+        self.byte_refilled_at: Optional[float] = None
+        self.bytes_charged = 0
+        self.bytes_rejected = 0
 
 
 class TenantAdmission:
@@ -81,6 +105,8 @@ class TenantAdmission:
         max_in_flight: int = 2,
         max_queued: int = 4,
         retry_after: float = 0.5,
+        byte_rate: Optional[float] = None,
+        byte_burst: Optional[int] = None,
         limits: Optional[Dict[str, TenantLimit]] = None,
         quanta: Optional[Dict[str, float]] = None,
     ):
@@ -88,10 +114,14 @@ class TenantAdmission:
             raise ValueError("max_in_flight must be >= 1")
         if max_queued < 0:
             raise ValueError("max_queued must be >= 0")
+        if byte_rate is not None and byte_rate <= 0:
+            raise ValueError("byte_rate must be positive (None = unlimited)")
         self.tokens = dict(tokens or {})
         self.default_tenant = default_tenant
         self.default_limit = TenantLimit(max_in_flight, max_queued)
         self.retry_after = retry_after
+        self.byte_rate = byte_rate
+        self.byte_burst = byte_burst
         self.limits = dict(limits or {})
         #: per-tenant weighted-DRR quantum factors, applied by the gateway
         #: via ``ArchiveServer.open(..., quantum=...)`` at open time.
@@ -132,6 +162,16 @@ class TenantAdmission:
     def _limit(self, tenant: str) -> Tuple[int, int]:
         lim = self.limits.get(tenant, self.default_limit)
         return lim.max_in_flight, lim.max_queued
+
+    def _byte_limit(self, tenant: str) -> Tuple[Optional[float], float]:
+        lim = self.limits.get(tenant)
+        rate = lim.byte_rate if lim is not None and lim.byte_rate is not None else self.byte_rate
+        if rate is None:
+            return None, 0.0
+        burst = lim.byte_burst if lim is not None and lim.byte_burst is not None else self.byte_burst
+        if burst is None:
+            burst = 2.0 * rate  # two seconds of line rate
+        return rate, max(float(burst), 1.0)
 
     async def acquire(self, tenant: str) -> None:
         """Admit one request for ``tenant``: immediate when under the
@@ -188,6 +228,44 @@ class TenantAdmission:
                 return
         gate.in_flight = max(0, gate.in_flight - 1)
 
+    def charge_bytes(self, tenant: str, nbytes: int, *, now: Optional[float] = None) -> None:
+        """Debit ``nbytes`` from the tenant's byte bucket or refuse the
+        response.
+
+        Called by the gateway with the full response span *before* any
+        header is written (so a refusal can still become a clean 429).
+        Overdraft semantics: a tenant whose balance is positive is always
+        admitted — even for a span larger than the balance or the burst —
+        and the balance goes negative; further charges are refused with
+        `AdmissionDenied` carrying the exact refill delay until the balance
+        is positive again. Loop-thread-only, like ``acquire``. ``now`` is a
+        monotonic-clock override for deterministic tests.
+        """
+        rate, burst = self._byte_limit(tenant)
+        gate = self._gate(tenant)
+        if rate is None:
+            gate.bytes_charged += max(0, nbytes)
+            return
+        if now is None:
+            now = time.monotonic()
+        if gate.byte_refilled_at is None:
+            gate.byte_tokens = burst  # first charge: full bucket
+        else:
+            elapsed = max(0.0, now - gate.byte_refilled_at)
+            gate.byte_tokens = min(burst, gate.byte_tokens + elapsed * rate)
+        gate.byte_refilled_at = now
+        if gate.byte_tokens <= 0.0:
+            gate.bytes_rejected += max(0, nbytes)
+            retry = max(-gate.byte_tokens / rate, 0.001)
+            raise AdmissionDenied(
+                tenant,
+                retry,
+                "over byte rate (%.0f B/s, %.0f B in deficit)"
+                % (rate, -gate.byte_tokens),
+            )
+        gate.byte_tokens -= max(0, nbytes)
+        gate.bytes_charged += max(0, nbytes)
+
     # -- telemetry ----------------------------------------------------------
 
     def snapshot(self) -> Dict[str, Any]:
@@ -203,6 +281,9 @@ class TenantAdmission:
                 "admitted": g.admitted,
                 "rejected": g.rejected,
                 "waited": g.waited,
+                "bytes_charged": g.bytes_charged,
+                "bytes_rejected": g.bytes_rejected,
+                "byte_tokens": round(g.byte_tokens, 1),
             }
             for tenant, g in gates.items()
         }

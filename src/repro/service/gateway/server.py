@@ -786,6 +786,11 @@ class GatewayServer:
                     content_length=span,
                 )
                 return keep
+            # Byte-rate admission: charge the whole span up front, before
+            # any header goes out — a refusal propagates to _dispatch's 429
+            # + Retry-After path on a still-clean connection. HEAD and 304
+            # answered above stream nothing and are never charged.
+            self.admission.charge_bytes(tenant, span)
             if span <= self.stream_span:
                 data = await self._asrv.read_range(handle, start, span)
                 await self._send(writer, status, base_headers, data)

@@ -21,16 +21,27 @@ format, one file per key under ``root`` (or an in-memory dict when
 from __future__ import annotations
 
 import hashlib
+import json
 import os
 import threading
-from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Union
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Union
 
 from ..core.filereader import FileReader
 from ..core.index import GzipIndex
 from ..core.remote import RemoteFileReader, is_remote_url
 
 _EXT = ".rpgzidx"
+#: Transcoded-twin slots, all keyed by the *origin's* identity so fleet
+#: rendezvous placement never moves when a twin installs:
+#:   <key>.twin      — the re-encoded archive bytes (BGZF / zstd-seekable)
+#:   <key>.twinidx   — the twin's finalized exact index blob
+#:   <key>.twinmeta  — JSON commit record; written *last*, its presence is
+#:                     the install point (a crash earlier leaves garbage
+#:                     files that resolve_twin ignores)
+_TWIN_DATA_EXT = ".twin"
+_TWIN_IDX_EXT = ".twinidx"
+_TWIN_META_EXT = ".twinmeta"
 
 
 def file_identity(
@@ -111,9 +122,30 @@ class IndexStoreStats:
     rejected: int = 0  # non-finalized indexes refused
     remote_hits: int = 0  # local misses satisfied by the remote fallback
     remote_misses: int = 0  # fallback consulted and came back empty/invalid
+    twin_hits: int = 0  # opens resolved to a transcoded twin
+    twin_installs: int = 0  # twins registered (atomic, meta-last)
+    twin_rejected: int = 0  # twin registrations refused (unfinalized index)
 
     def as_dict(self) -> Dict[str, int]:
         return {k: int(getattr(self, k)) for k in self.__dataclass_fields__}
+
+
+@dataclass
+class TwinRecord:
+    """A registered transcoded twin of a seek-hostile origin archive.
+
+    ``source`` is what to hand ``ParallelGzipReader``: the twin's data-file
+    path for a disk-backed store, or the twin bytes for an in-memory store.
+    ``index_blob`` is the twin's finalized exact index. The record is keyed
+    by — and carries — the *origin's* identity: ETags, fleet placement, and
+    the index-exchange endpoint all keep speaking the origin's name.
+    """
+
+    origin_key: str
+    codec_tag: str
+    source: Any
+    index_blob: bytes
+    meta: Dict[str, Any] = field(default_factory=dict)
 
 
 class IndexStore:
@@ -143,6 +175,7 @@ class IndexStore:
         if self.root is not None:
             os.makedirs(self.root, exist_ok=True)
         self._mem: Dict[str, bytes] = {}
+        self._twins: Dict[str, TwinRecord] = {}  # root=None twin records
         self._lock = threading.Lock()
         self._fallback = remote_fallback
         self._ff_lock = threading.Lock()
@@ -276,6 +309,135 @@ class IndexStore:
             self.stats.puts += 1
         return key
 
+    # -- transcoded twins ---------------------------------------------------
+
+    def _twin_paths(self, key: str) -> Dict[str, str]:
+        assert self.root is not None
+        base = os.path.join(self.root, key)
+        return {
+            "data": base + _TWIN_DATA_EXT,
+            "idx": base + _TWIN_IDX_EXT,
+            "meta": base + _TWIN_META_EXT,
+        }
+
+    def twin_tmp_path(self, source) -> Optional[str]:
+        """Where a transcoder should stream the twin-in-progress: a unique
+        tmp path next to the final data file (same filesystem, so the
+        install ``os.replace`` is atomic), or None for an in-memory store
+        (stream to a buffer and pass bytes to :meth:`register_twin`)."""
+        if self.root is None:
+            return None
+        key = self.key_for(source)
+        return "%s.%d.%x.tmp" % (
+            self._twin_paths(key)["data"], os.getpid(), threading.get_ident(),
+        )
+
+    def register_twin(
+        self,
+        origin,
+        *,
+        codec_tag: str,
+        data: Union[str, bytes],
+        index: GzipIndex,
+        meta: Optional[Dict[str, Any]] = None,
+    ) -> Optional[str]:
+        """Atomically install a transcoded twin under the origin's key.
+
+        ``data`` is a tmp-file path (disk store: renamed into place) or the
+        twin bytes (in-memory store). Install order is data → index → meta,
+        with the meta JSON written last as the commit point: a crash at any
+        earlier step leaves files that :meth:`resolve_twin` never returns.
+        Refuses a non-finalized index (counted in ``stats.twin_rejected``).
+        """
+        if not index.finalized:
+            with self._lock:
+                self.stats.twin_rejected += 1
+            return None
+        key = self.key_for(origin)
+        index_blob = index.to_bytes()
+        record_meta = dict(meta or {})
+        record_meta["codec"] = codec_tag
+        record_meta.setdefault("decompressed", index.decompressed_size)
+        if self.root is None:
+            if not isinstance(data, (bytes, bytearray, memoryview)):
+                raise TypeError("in-memory store needs twin bytes, not a path")
+            blob = bytes(data)
+            record_meta["bytes_out"] = len(blob)
+            record = TwinRecord(key, codec_tag, blob, index_blob, record_meta)
+            with self._lock:
+                self._twins[key] = record
+                self.stats.twin_installs += 1
+            return key
+        if not isinstance(data, (str, os.PathLike)):
+            raise TypeError("disk store needs a tmp-file path for twin data")
+        paths = self._twin_paths(key)
+        record_meta["bytes_out"] = os.stat(data).st_size
+        os.replace(os.fspath(data), paths["data"])
+        self._install_at(paths["idx"], index_blob)
+        self._install_at(paths["meta"], json.dumps(record_meta).encode())
+        with self._lock:
+            self.stats.twin_installs += 1
+        return key
+
+    def _install_at(self, path: str, blob: bytes) -> None:
+        """Unique-tmp + fsync + atomic rename at an explicit path."""
+        tmp = "%s.%d.%x.tmp" % (path, os.getpid(), threading.get_ident())
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def resolve_twin(self, origin) -> Optional[TwinRecord]:
+        """The installed twin for an origin identity, or None.
+
+        A half-written install (no meta, truncated data, unparseable or
+        unfinalized index, codec mismatch) is treated as absent — the open
+        path falls back to the origin archive, never a torn twin.
+        """
+        key = self.key_for(origin)
+        if self.root is None:
+            with self._lock:
+                record = self._twins.get(key)
+                if record is not None:
+                    self.stats.twin_hits += 1
+                return record
+        paths = self._twin_paths(key)
+        try:
+            with open(paths["meta"], "rb") as f:
+                meta = json.loads(f.read())
+            if not isinstance(meta, dict):
+                return None
+            if os.stat(paths["data"]).st_size != meta.get("bytes_out"):
+                return None
+            with open(paths["idx"], "rb") as f:
+                index_blob = f.read()
+        except (OSError, ValueError):
+            return None
+        codec_tag = meta.get("codec")
+        if self._validate_remote(index_blob) is None:
+            return None
+        if codec_tag != GzipIndex.from_bytes(index_blob).codec_tag:
+            return None
+        with self._lock:
+            self.stats.twin_hits += 1
+        return TwinRecord(key, codec_tag, paths["data"], index_blob, meta)
+
+    def drop_twin(self, origin) -> None:
+        """Uninstall a twin (meta removed first, so a concurrent resolve
+        sees either the full record or nothing)."""
+        key = self.key_for(origin)
+        if self.root is None:
+            with self._lock:
+                self._twins.pop(key, None)
+            return
+        paths = self._twin_paths(key)
+        for name in ("meta", "idx", "data"):
+            try:
+                os.unlink(paths[name])
+            except FileNotFoundError:
+                pass
+
     def __contains__(self, source) -> bool:
         key = self.key_for(source)
         if self.root is None:
@@ -297,9 +459,11 @@ class IndexStore:
         if self.root is None:
             with self._lock:
                 self._mem.clear()
+                self._twins.clear()
             return
+        exts = (_EXT, _TWIN_DATA_EXT, _TWIN_IDX_EXT, _TWIN_META_EXT)
         for name in os.listdir(self.root):
-            if name.endswith(_EXT):
+            if name.endswith(exts):
                 os.unlink(os.path.join(self.root, name))
 
 

@@ -72,6 +72,7 @@ def collect(
     index_store=None,
     service: Optional[Mapping[str, Any]] = None,
     engine=None,
+    transcode=None,
 ) -> Dict[str, Any]:
     """One service-wide snapshot. All sections are optional except readers.
 
@@ -97,6 +98,8 @@ def collect(
         out["service"] = dict(service)
     if engine is not None:
         out["engine"] = engine.stats()
+    if transcode is not None:
+        out["transcode"] = transcode.snapshot()
     return out
 
 
@@ -185,6 +188,16 @@ def format_summary(snapshot: Mapping[str, Any]) -> str:
                engine.get("occupancy", 0.0), engine.get("queue_depth", 0),
                engine.get("max_queue_depth", 0),
                fb.get("replace", 0), fb.get("crc", 0))
+        )
+    tr = snapshot.get("transcode")
+    if tr is not None:
+        c = tr.get("counters", {})
+        lines.append(
+            "transcode[%s]: %d considered, %d scheduled, %d installed,"
+            " %d failed, %d skipped"
+            % (tr.get("twin_codec", "?"), c.get("considered", 0),
+               c.get("scheduled", 0), c.get("installed", 0),
+               c.get("failed", 0), c.get("skipped_unresolvable", 0))
         )
     store = snapshot.get("index_store")
     if store is not None:

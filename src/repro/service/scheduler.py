@@ -55,6 +55,7 @@ server owns those.
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict, deque
 from concurrent.futures import Future
 from dataclasses import dataclass
@@ -76,6 +77,7 @@ class _Task:
     view: object
     cost: int
     priority: bool
+    tenant: str = ""  # owning queue (runtime observation needs it post-dispatch)
 
 
 class _TenantQueue:
@@ -120,6 +122,8 @@ class FairExecutor:
         thread_name_prefix: str = "archive",
         quantum_bytes: int = DEFAULT_QUANTUM_BYTES,
         fairness: str = "drr",
+        cost_correction: bool = False,
+        correction_alpha: float = 0.2,
     ):
         if max_workers < 1:
             raise ValueError("max_workers must be >= 1")
@@ -127,9 +131,23 @@ class FairExecutor:
             raise ValueError("quantum_bytes must be >= 1")
         if fairness not in ("drr", "task_rr"):
             raise ValueError("fairness must be 'drr' or 'task_rr'")
+        if not 0.0 < correction_alpha <= 1.0:
+            raise ValueError("correction_alpha must be in (0, 1]")
         self.max_workers = max_workers
         self.quantum_bytes = quantum_bytes
         self.fairness = fairness
+        #: EWMA observed-runtime correction of byte-cost hints. Cost hints
+        #: are estimates (a marker-mode decode claims 2x, a transcode span
+        #: claims span_bytes); observed runtimes calibrate them: a global
+        #: EWMA of claimed-bytes/second sets the fleet's exchange rate, and
+        #: each tenant's factor tracks EWMA(runtime x rate / claimed_cost) —
+        #: >1 means the tenant's tasks run slower than their hints claim, so
+        #: DRR charges them proportionally more. Off by default: the raw
+        #: hints stay exactly the documented DRR behavior.
+        self.cost_correction = bool(cost_correction)
+        self._corr_alpha = float(correction_alpha)
+        self._throughput_ewma: Optional[float] = None  # claimed bytes / s
+        self._correction: Dict[str, float] = {}
         self._cond = threading.Condition()
         # OrderedDict gives a stable round-robin order with O(1) membership.
         self._queues: "OrderedDict[str, _TenantQueue]" = OrderedDict()
@@ -172,7 +190,9 @@ class FairExecutor:
             if self._shutdown:
                 raise RuntimeError("cannot submit after shutdown")
             self._seq += 1
-            task = _Task(self._seq, fut, fn, args, kwargs, _view, cost, _priority)
+            task = _Task(
+                self._seq, fut, fn, args, kwargs, _view, cost, _priority, tenant
+            )
             q = self._queues.setdefault(tenant, _TenantQueue())
             (q.pri if _priority else q.batch).append(task)
             self._tasks_submitted += 1
@@ -195,6 +215,32 @@ class FairExecutor:
     def _quantum_of(self, tenant: str) -> int:
         # Called under self._cond.
         return max(1, int(self.quantum_bytes * self._tenant_quanta.get(tenant, 1.0)))
+
+    def _effective_cost(self, tenant: str, cost: int) -> int:
+        """The cost DRR charges: the hint, scaled by the tenant's observed
+        correction factor when enabled. Called under self._cond."""
+        if not self.cost_correction:
+            return cost
+        return max(1, int(cost * self._correction.get(tenant, 1.0)))
+
+    def _observe_runtime_locked(self, tenant: str, cost: int, runtime_s: float) -> None:
+        """Fold one finished task's (claimed cost, observed runtime) into the
+        EWMA correction state. Called under self._cond."""
+        runtime_s = max(runtime_s, 1e-6)
+        alpha = self._corr_alpha
+        throughput = cost / runtime_s
+        if self._throughput_ewma is None:
+            self._throughput_ewma = throughput
+        else:
+            self._throughput_ewma = (
+                alpha * throughput + (1.0 - alpha) * self._throughput_ewma
+            )
+        implied = runtime_s * self._throughput_ewma  # fleet-rate byte cost
+        ratio = min(16.0, max(1.0 / 16.0, implied / max(1, cost)))
+        prev = self._correction.get(tenant, 1.0)
+        self._correction[tenant] = min(
+            16.0, max(1.0 / 16.0, alpha * ratio + (1.0 - alpha) * prev)
+        )
 
     def boost(self, fut: Future, tenant: Optional[str] = None) -> bool:
         """Move a still-queued task into its tenant's priority lane.
@@ -258,7 +304,8 @@ class FairExecutor:
                 best = (0, tenant)
                 break
             head = q.head(self.fairness)
-            passes = max(0, -(-(head.cost - q.deficit) // self._quantum_of(tenant)))
+            head_cost = self._effective_cost(tenant, head.cost)
+            passes = max(0, -(-(head_cost - q.deficit) // self._quantum_of(tenant)))
             if passes == 0:
                 best = (0, tenant)
                 break  # affordable now, and first in RR order
@@ -281,7 +328,7 @@ class FairExecutor:
         # count).
         cancelled = task.future.cancelled()
         if self.fairness != "task_rr" and not cancelled:
-            q.deficit = max(0, q.deficit - task.cost)
+            q.deficit = max(0, q.deficit - self._effective_cost(tenant, task.cost))
         if not len(q):
             # Classic DRR: an emptied queue forfeits banked credit, so an
             # idle tenant cannot hoard a burst allowance.
@@ -315,14 +362,18 @@ class FairExecutor:
                 with self._cond:
                     self._tasks_cancelled += 1
                 continue
+            t0 = time.perf_counter()
             try:
                 result = task.fn(*task.args, **task.kwargs)
             except BaseException as exc:  # noqa: BLE001 - mirror Executor semantics
                 fut.set_exception(exc)
             else:
                 fut.set_result(result)
+            runtime_s = time.perf_counter() - t0
             with self._cond:
                 self._tasks_done += 1
+                if self.cost_correction:
+                    self._observe_runtime_locked(task.tenant, task.cost, runtime_s)
 
     # -- teardown & introspection ------------------------------------------
 
@@ -398,6 +449,17 @@ class FairExecutor:
                 "tenant_quanta": dict(self._tenant_quanta),
                 "deficit_per_tenant": {
                     t: q.deficit for t, q in self._queues.items() if len(q)
+                },
+                "cost_correction": {
+                    "enabled": self.cost_correction,
+                    "throughput_bps": (
+                        round(self._throughput_ewma, 1)
+                        if self._throughput_ewma is not None
+                        else None
+                    ),
+                    "per_tenant": {
+                        t: round(f, 4) for t, f in self._correction.items()
+                    },
                 },
             }
 

@@ -60,8 +60,9 @@ from ..core.reader import ParallelGzipReader
 from ..core.remote import RemoteFileReader, is_remote_url
 from . import metrics as _metrics
 from .cache_pool import PREFETCH, CachePool
-from .index_store import IndexStore, file_identity
+from .index_store import IndexStore
 from .scheduler import FairExecutor
+from .transcode import TranscodeManager, resolve_source
 
 
 @dataclass
@@ -83,6 +84,10 @@ class ArchiveStat:
     #: Resolved codec tag ("deflate"/"bgzf"/"zstd") once the reader opened;
     #: before that, the tag requested at open() (None = auto-detect).
     codec: Optional[str] = None
+    #: Twin codec tag when the open resolved to a transcoded twin (the
+    #: handle serves bit-identical bytes from the re-encoded copy while
+    #: `identity` still keys — and the ETag still names — the origin).
+    twin: Optional[str] = None
 
     def as_dict(self) -> Dict[str, Any]:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -111,6 +116,13 @@ class _Entry:
         self.reader: Optional[ParallelGzipReader] = None
         self.identity: Optional[str] = None
         self.index_was_warm = False
+        #: Twin codec tag when resolution bound this handle to a transcoded
+        #: twin; None while serving the origin bytes directly.
+        self.twin: Optional[str] = None
+        #: One hostility probe per handle: set the first time a finalized
+        #: first pass is offered to the TranscodeManager (which dedups by
+        #: identity anyway — this flag just keeps the hot path cheap).
+        self.transcode_probed = False
         self.reads = 0
         self.bytes_served = 0
         self.closed = False
@@ -136,6 +148,9 @@ class ArchiveServer:
         remote_options: Optional[Dict[str, Any]] = None,
         device_engine: Any = "auto",
         engine_options: Optional[Dict[str, Any]] = None,
+        transcode: Any = "auto",
+        transcode_options: Optional[Dict[str, Any]] = None,
+        cost_correction: bool = True,
     ):
         #: kwargs forwarded to every RemoteFileReader the server opens for
         #: http(s):// sources: auth headers, block_size/cache_blocks,
@@ -153,10 +168,17 @@ class ArchiveServer:
         # Quantum defaults to a quarter chunk: a zlib-delegated indexed task
         # dispatches nearly every round-robin visit while a marker-mode
         # speculative decode (2x chunk) banks ~8 visits of deficit first.
+        # cost_correction: byte-cost hints are claims; the executor's EWMA of
+        # observed runtime re-prices them so a tenant whose "1 MiB" tasks run
+        # like 4 MiB (marker-mode two-stage decodes, cold page cache) drains
+        # deficit at the observed rate. On by default here — server-submitted
+        # work has runtimes roughly proportional to bytes, so honest tenants
+        # converge to factor 1.0.
         self.executor = FairExecutor(
             max_workers,
             fairness=fairness,
             quantum_bytes=quantum_bytes if quantum_bytes is not None else max(1, chunk_size // 4),
+            cost_correction=cost_correction,
         )
         # Weighted DRR: a tenant's per-pass deficit replenishment scales
         # with its factor (paying tenants get a larger quantum). Also
@@ -186,6 +208,26 @@ class ArchiveServer:
         elif device_engine not in (None, False, "off"):
             raise ValueError(
                 "device_engine must be 'auto', 'off'/None/False, or an engine"
+            )
+        # Background transcoder: archives whose first pass probes
+        # seek-hostile (Codec.seek_hostility above threshold) get re-encoded
+        # as a seekable twin on the executor's batch lane; later opens
+        # resolve to the twin transparently (service/transcode.py). Same
+        # ownership contract as the engine: "auto" builds one over this
+        # server's store+executor, "off"/None/False disables, an object with
+        # a ``consider`` attribute is externally owned.
+        self.transcoder: Optional[TranscodeManager] = None
+        self._owns_transcode = False
+        if hasattr(transcode, "consider"):
+            self.transcoder = transcode
+        elif transcode == "auto":
+            self.transcoder = TranscodeManager(
+                self.index_store, self.executor, **(transcode_options or {})
+            )
+            self._owns_transcode = True
+        elif transcode not in (None, False, "off"):
+            raise ValueError(
+                "transcode must be 'auto', 'off'/None/False, or a manager"
             )
         self.chunk_size = chunk_size
         self.reader_parallelization = reader_parallelization
@@ -276,13 +318,28 @@ class ArchiveServer:
                         capacity=int(opts.pop("cache_blocks", 16)),
                     )
                     source = RemoteFileReader(source, block_cache=block_cache, **opts)
-                # Identity and the reader must agree on the codec: an
-                # explicit tag pins both; auto-detection probes the same
-                # head bytes in both places, so the key the store/fleet use
-                # and the codec the reader runs match by construction.
-                entry.identity = file_identity(source, codec=entry.codec)
-                index = self.index_store.get(entry.identity)
-                entry.index_was_warm = index is not None
+                # Source resolution: identity and the reader must agree on
+                # the codec (an explicit tag pins both; auto-detection probes
+                # the same head bytes in both places), and the store may know
+                # a transcoded twin for this identity — in which case the
+                # handle binds to the twin's bytes/index while `identity`
+                # (and thus the ETag and fleet placement) stays the origin's.
+                origin = source
+                resolved = resolve_source(
+                    self.index_store, origin, codec=entry.codec
+                )
+                entry.identity = resolved.identity
+                entry.index_was_warm = resolved.index_was_warm
+                entry.twin = resolved.twin
+                source = resolved.source
+                if resolved.twin is not None and origin is not entry.source:
+                    # Twin-bound: the read path never touches the origin
+                    # again, so the remote backend (and its pool-backed
+                    # block cache) opened for the identity probe goes back.
+                    origin.close()
+                    if block_cache is not None:
+                        block_cache.release()
+                        block_cache = None
                 access_cache, prefetch_cache = self.cache_pool.reader_caches(
                     entry.tenant, access_capacity=self.access_cache_entries
                 )
@@ -290,9 +347,9 @@ class ArchiveServer:
                     source,
                     parallelization=self.reader_parallelization,
                     chunk_size=self.chunk_size,
-                    index=index,
+                    index=resolved.index,
                     verify=self.verify,
-                    codec=entry.codec,
+                    codec=resolved.codec,
                     executor=self.executor.view(entry.tenant),
                     access_cache=access_cache,
                     prefetch_cache=prefetch_cache,
@@ -314,10 +371,36 @@ class ArchiveServer:
                     prefetch_cache.release()
                 if block_cache is not None:
                     block_cache.release()  # idempotent if close() already did
-                if source is not entry.source:
-                    source.close()
+                if source is not entry.source and hasattr(source, "close"):
+                    source.close()  # twin paths are plain strings: no-op
                 raise
             return entry.reader
+
+    def _maybe_transcode(self, entry: _Entry, reader: ParallelGzipReader) -> None:
+        """Offer a freshly finalized first pass to the transcoder, once.
+
+        Called from the read paths after the reader worked: only a
+        *finalized* index carries the first-pass observations the hostility
+        score needs, and only an origin-bound handle should probe (a twin is
+        the transcode's output, never its input). Remote origins are skipped
+        — re-encoding somebody else's URL into a local twin would pin the
+        fleet's placement to this node. The probed flag is a benign race:
+        the manager dedups by identity.
+        """
+        mgr = self.transcoder
+        if (
+            mgr is None
+            or entry.twin is not None
+            or entry.transcode_probed
+            or not reader.index.finalized
+            or is_remote_url(entry.source)
+        ):
+            return
+        entry.transcode_probed = True
+        try:
+            mgr.consider(entry.identity, entry.source, reader)
+        except Exception:  # noqa: BLE001 - background QoS must not fail reads
+            pass
 
     # ------------------------------------------------------------------
     # request API
@@ -370,6 +453,7 @@ class ArchiveServer:
         with entry.cond:
             entry.reads += 1
             entry.bytes_served += len(data)
+        self._maybe_transcode(entry, reader)
         return data
 
     def read_many(
@@ -415,6 +499,7 @@ class ArchiveServer:
             bytes_served=bytes_served,
             identity=entry.identity,
             codec=entry.codec,
+            twin=entry.twin,
         )
 
     def size(self, handle: str) -> int:
@@ -439,6 +524,7 @@ class ArchiveServer:
                 entry.in_flight -= 1
                 if entry.in_flight == 0:
                     entry.cond.notify_all()
+            self._maybe_transcode(entry, reader)
 
     def cancel_queued(self, handle: str) -> int:
         """Cancel the handle's queued batch-lane prefetch tasks, if idle.
@@ -465,10 +551,21 @@ class ArchiveServer:
     # ------------------------------------------------------------------
 
     def persist_index(self, handle: str) -> Optional[str]:
-        """Store the handle's index if finalized; returns the store key."""
+        """Store the handle's index if finalized; returns the store key.
+
+        Twin-bound handles never persist: their live index describes the
+        *twin's* byte layout, and `entry.identity` keys the *origin* — a put
+        here would poison the origin's index slot for every non-twin open.
+        The origin's own finalized index was persisted by the transcoder at
+        schedule time.
+        """
         entry = self._entry(handle)
         with entry.lock:
-            if entry.reader is None or not entry.reader.index.finalized:
+            if (
+                entry.reader is None
+                or entry.twin is not None
+                or not entry.reader.index.finalized
+            ):
                 return None
             return self.index_store.put(entry.identity, entry.reader.index)
 
@@ -480,10 +577,17 @@ class ArchiveServer:
         can still be served from the local store if a previous session
         persisted it. Non-finalized indexes are never exported — an importer
         would trust seek points that the speculative pass has not confirmed.
+        Twin-bound handles fall through to the store: a peer asking for this
+        identity wants the *origin's* index (it holds the origin's bytes),
+        not the local twin's layout.
         """
         entry = self._entry(handle)
         with entry.lock:
-            if entry.reader is not None and entry.reader.index.finalized:
+            if (
+                entry.reader is not None
+                and entry.twin is None
+                and entry.reader.index.finalized
+            ):
                 return entry.identity, entry.reader.index.to_bytes()
             if entry.identity is not None:
                 blob = self.index_store.get_blob(entry.identity)
@@ -507,7 +611,13 @@ class ArchiveServer:
                 entry.cond.wait()
         with entry.lock:
             if entry.reader is not None:
-                if persist_index and entry.reader.index.finalized:
+                # Twin-bound handles skip the persist: entry.identity keys
+                # the origin, but the live index maps the twin's bytes.
+                if (
+                    persist_index
+                    and entry.twin is None
+                    and entry.reader.index.finalized
+                ):
                     self.index_store.put(entry.identity, entry.reader.index)
                 # Reader close cancels its own queued tasks (view-scoped —
                 # the tenant may have other files open), releases its pooled
@@ -532,6 +642,11 @@ class ArchiveServer:
         # reads would hit the shut-down executor.
         with self._lock:
             self._closed = True
+        # Stop the transcoder before the executor: closed managers fail
+        # their in-flight jobs cleanly (tmp twins unlinked) instead of
+        # racing cancelled futures through half a span chain.
+        if self._owns_transcode and self.transcoder is not None:
+            self.transcoder.close()
         self.close_all()
         self.executor.shutdown(wait=False, cancel_futures=True)
         # After the executor: no pool worker can submit to the engine once
@@ -575,6 +690,7 @@ class ArchiveServer:
                 "index_was_warm": entry.index_was_warm,
                 "opened": reader is not None,
                 "codec": entry.codec,
+                "twin": entry.twin,
             }
         with self._gauge_lock:
             service = {
@@ -590,4 +706,5 @@ class ArchiveServer:
             index_store=self.index_store,
             service=service,
             engine=self.device_engine,
+            transcode=self.transcoder,
         )

@@ -1,0 +1,202 @@
+#!/usr/bin/env python3
+"""Regenerate the committed third-party conformance fixtures.
+
+Deliberately standard-library only and independent of the ``repro``
+package: these archives are built straight from the published format
+specifications (the htslib SAM/BGZF spec and the zstd seekable-format
+RFC draft), so the tests that read them back exercise our parsers against
+an implementation that shares no code with them. Output is byte-for-byte
+deterministic — re-running this script must produce identical files.
+
+    python tests/data/make_fixtures.py [outdir]
+
+Fixtures:
+
+``conformance_payload.bin``
+    The shared decompressed payload (~96 KiB, seeded LCG text).
+``conformance_bgzip.gz``
+    BGZF, bgzip-style: several full members, one member carrying an
+    *extra* FEXTRA subfield before the BC subfield (spec-legal — parsers
+    must walk subfields, not assume BC comes first), and the canonical
+    28-byte EOF member.
+``conformance_seekable.zst``
+    Zstd seekable format, zstd-CLI style: independent frames (raw blocks,
+    so no compressor is needed to build them and any conformant
+    decompressor can read them), footer seek table WITH per-frame XXH64
+    checksums (descriptor bit 7 — 12-byte entries).
+"""
+
+import os
+import struct
+import sys
+import zlib
+
+# --------------------------------------------------------------------------
+# deterministic payload (LCG; no randomness sources)
+# --------------------------------------------------------------------------
+
+WORDS = (
+    b"annotate", b"archive", b"block", b"checksum", b"decode", b"frame",
+    b"gzip", b"huffman", b"index", b"member", b"offset", b"parallel",
+    b"random", b"seek", b"stream", b"window",
+)
+
+
+def make_payload(nbytes: int = 96 << 10, seed: int = 0x2545F491) -> bytes:
+    state = seed
+    out = bytearray()
+    while len(out) < nbytes:
+        state = (state * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        out += WORDS[(state >> 33) % len(WORDS)]
+        out += b" " if (state >> 21) % 13 else b"\n"
+    return bytes(out[:nbytes])
+
+
+# --------------------------------------------------------------------------
+# BGZF (htslib SAM spec section 4.1)
+# --------------------------------------------------------------------------
+
+BGZF_EOF = bytes.fromhex("1f8b08040000000000ff0600424302001b0003000000000000000000")
+
+
+def bgzf_member(block: bytes, extra_subfields: bytes = b"") -> bytes:
+    """One BGZF member; ``extra_subfields`` go *before* the BC subfield."""
+    c = zlib.compressobj(6, zlib.DEFLATED, -15)
+    raw = c.compress(block) + c.flush(zlib.Z_FINISH)
+    bc = b"BC" + struct.pack("<HH", 2, 0)  # BSIZE patched below
+    xtra = extra_subfields + bc
+    header = b"\x1f\x8b\x08\x04\x00\x00\x00\x00\x00\xff" + struct.pack("<H", len(xtra)) + xtra
+    footer = struct.pack("<II", zlib.crc32(block) & 0xFFFFFFFF, len(block) & 0xFFFFFFFF)
+    member = bytearray(header + raw + footer)
+    bsize_at = 12 + len(extra_subfields) + 4  # after the BC id + length
+    member[bsize_at : bsize_at + 2] = struct.pack("<H", len(member) - 1)
+    return bytes(member)
+
+
+def make_bgzf(payload: bytes, block_size: int = 24 << 10) -> bytes:
+    members = []
+    for i, off in enumerate(range(0, len(payload), block_size)):
+        # Second member: a vendor subfield ahead of BC (4-byte payload),
+        # like bgzip files postprocessed by annotating tools.
+        extra = b"RG" + struct.pack("<H", 4) + b"conf" if i == 1 else b""
+        members.append(bgzf_member(payload[off : off + block_size], extra))
+    members.append(BGZF_EOF)
+    return b"".join(members)
+
+
+# --------------------------------------------------------------------------
+# zstd seekable (raw-block frames; no compressor required)
+# --------------------------------------------------------------------------
+
+
+def xxh64(data: bytes, seed: int = 0) -> int:
+    """Pure-python XXH64 (the seekable format's per-frame checksum)."""
+    P1, P2, P3 = 0x9E3779B185EBCA87, 0xC2B2AE3D27D4EB4F, 0x165667B19E3779F9
+    P4, P5 = 0x85EBCA77C2B2AE63, 0x27D4EB2F165667C5
+    M = (1 << 64) - 1
+
+    def rotl(x, r):
+        return ((x << r) | (x >> (64 - r))) & M
+
+    n = len(data)
+    pos = 0
+    if n >= 32:
+        v1 = (seed + P1 + P2) & M
+        v2 = (seed + P2) & M
+        v3 = seed & M
+        v4 = (seed - P1) & M
+        while pos <= n - 32:
+            for i, v in enumerate((v1, v2, v3, v4)):
+                lane = struct.unpack_from("<Q", data, pos + 8 * i)[0]
+                v = (v + lane * P2) & M
+                v = rotl(v, 31)
+                v = (v * P1) & M
+                if i == 0:
+                    v1 = v
+                elif i == 1:
+                    v2 = v
+                elif i == 2:
+                    v3 = v
+                else:
+                    v4 = v
+            pos += 32
+        h = (rotl(v1, 1) + rotl(v2, 7) + rotl(v3, 12) + rotl(v4, 18)) & M
+        for v in (v1, v2, v3, v4):
+            v = rotl((v * P2) & M, 31)
+            v = (v * P1) & M
+            h = (((h ^ v) * P1) + P4) & M
+    else:
+        h = (seed + P5) & M
+    h = (h + n) & M
+    while pos <= n - 8:
+        k = struct.unpack_from("<Q", data, pos)[0]
+        k = rotl((k * P2) & M, 31)
+        k = (k * P1) & M
+        h = ((rotl(h ^ k, 27) * P1) + P4) & M
+        pos += 8
+    if pos <= n - 4:
+        k = struct.unpack_from("<I", data, pos)[0]
+        h = ((rotl(h ^ (k * P1) & M, 23) * P2) + P3) & M
+        pos += 4
+    while pos < n:
+        h = ((rotl(h ^ (data[pos] * P5) & M, 11) * P1)) & M
+        pos += 1
+    h ^= h >> 33
+    h = (h * P2) & M
+    h ^= h >> 29
+    h = (h * P3) & M
+    h ^= h >> 32
+    return h
+
+
+def zstd_raw_frame(content: bytes, block_size: int = 16 << 10) -> bytes:
+    """A spec-valid zstd frame holding ``content`` in raw (stored) blocks.
+
+    Frame header descriptor 0xA0: single-segment, 4-byte frame content
+    size, no dictionary, no content checksum.
+    """
+    out = bytearray()
+    out += struct.pack("<I", 0xFD2FB528)  # frame magic
+    out += bytes([0xA0]) + struct.pack("<I", len(content))
+    offsets = list(range(0, len(content), block_size)) or [0]
+    for i, off in enumerate(offsets):
+        block = content[off : off + block_size]
+        last = 1 if i == len(offsets) - 1 else 0
+        # 3-byte block header: last(1) | type(2, 0=raw) | size(21)
+        hdr = last | (0 << 1) | (len(block) << 3)
+        out += struct.pack("<I", hdr)[:3] + block
+    return bytes(out)
+
+
+def make_zstd_seekable(payload: bytes, frame_size: int = 32 << 10) -> bytes:
+    out = bytearray()
+    entries = bytearray()
+    for off in range(0, len(payload), frame_size):
+        content = payload[off : off + frame_size]
+        frame = zstd_raw_frame(content)
+        out += frame
+        entries += struct.pack(
+            "<III", len(frame), len(content), xxh64(content) & 0xFFFFFFFF
+        )
+    n = len(entries) // 12
+    table = bytes(entries) + struct.pack("<IBI", n, 0x80, 0x8F92EAB1)
+    out += struct.pack("<II", 0x184D2A5E, len(table)) + table
+    return bytes(out)
+
+
+def main(outdir: str) -> None:
+    payload = make_payload()
+    fixtures = {
+        "conformance_payload.bin": payload,
+        "conformance_bgzip.gz": make_bgzf(payload),
+        "conformance_seekable.zst": make_zstd_seekable(payload),
+    }
+    for name, blob in fixtures.items():
+        path = os.path.join(outdir, name)
+        with open(path, "wb") as f:
+            f.write(blob)
+        print("%s: %d bytes" % (path, len(blob)))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(os.path.abspath(__file__)))

@@ -704,3 +704,107 @@ def test_admission_resolve_tokens():
     strict = TenantAdmission(tokens={"s": "a"}, default_tenant=None)
     with pytest.raises(Unauthorized):
         strict.resolve(None)
+
+
+# ---------------------------------------------------------------------------
+# byte-rate limiting: token bucket over bytes streamed
+# ---------------------------------------------------------------------------
+
+def test_charge_bytes_token_bucket_unit():
+    """Deterministic bucket math via the `now` override: burst admits,
+    overdraft admits once, deficit denies with the exact refill delay."""
+    adm = TenantAdmission(byte_rate=1_000.0, byte_burst=10_000)
+    # primed to the full burst on first charge
+    adm.charge_bytes("t", 8_000, now=100.0)
+    # 2_000 left: overdraft is allowed while the balance is positive
+    adm.charge_bytes("t", 8_000, now=100.0)
+    # balance is now -6_000: denied, Retry-After = deficit / rate
+    with pytest.raises(AdmissionDenied) as exc_info:
+        adm.charge_bytes("t", 100, now=100.0)
+    assert exc_info.value.retry_after == pytest.approx(6.0)
+    # refill: 6.5 s later the balance is +500 — admitted again (overdraft)
+    adm.charge_bytes("t", 2_000, now=106.5)
+    snap = adm.snapshot()["t"]
+    assert snap["bytes_charged"] == 18_000
+    assert snap["bytes_rejected"] == 100
+    assert snap["byte_tokens"] == pytest.approx(-1_500.0)
+
+
+def test_charge_bytes_per_tenant_overrides_and_unlimited_default():
+    """TenantLimit.byte_rate scopes the bucket to one tenant; everyone
+    else stays unlimited when no admission-wide rate is set."""
+    adm = TenantAdmission(
+        limits={"metered": TenantLimit(byte_rate=100.0, byte_burst=1_000)},
+    )
+    adm.charge_bytes("free", 10**9, now=0.0)  # unlimited: only counted
+    assert adm.snapshot()["free"]["bytes_charged"] == 10**9
+    adm.charge_bytes("metered", 900, now=0.0)
+    adm.charge_bytes("metered", 900, now=0.0)  # overdraft (100 left)
+    with pytest.raises(AdmissionDenied):
+        adm.charge_bytes("metered", 1, now=0.0)
+
+
+def test_byte_rate_rejects_zero_rate():
+    with pytest.raises(ValueError):
+        TenantAdmission(byte_rate=0.0)
+
+
+def test_byte_flood_gets_429_other_tenant_unharmed(corpus):
+    """A tenant streaming past its byte budget collects 429 + Retry-After
+    on a clean connection (headers never went out); HEAD stays free; an
+    unmetered tenant is untouched."""
+    path, data = corpus["text"]
+    span = 64 << 10
+    adm = TenantAdmission(
+        tokens={"tok-m": "metered", "tok-u": "unmetered"},
+        default_tenant=None,
+        limits={
+            # burst covers one span plus change: request 1 charges the
+            # bucket, request 2 overdrafts, request 3 must 429.
+            "metered": TenantLimit(
+                max_in_flight=4, max_queued=4,
+                byte_rate=1_000.0, byte_burst=span + 1_000,
+            ),
+        },
+    )
+    with GatewayServer(
+        cache_budget_bytes=2 << 20, max_workers=2, chunk_size=64 << 10,
+        admission=adm,
+    ) as gw:
+        cm = GatewayClient(gw.url, source=path, token="tok-m")
+        cu = GatewayClient(gw.url, source=path, token="tok-u")
+        rng_hdr = {"Range": "bytes=0-%d" % (span - 1)}
+
+        def req(handle, token, method="GET"):
+            conn = _raw_conn(gw)
+            try:
+                conn.request(
+                    method, "/v1/archives/%s/bytes" % handle,
+                    headers={"Authorization": "Bearer %s" % token, **rng_hdr},
+                )
+                resp = conn.getresponse()
+                return resp.status, dict(resp.getheaders()), resp.read()
+            finally:
+                conn.close()
+
+        s1, _, b1 = req(cm.handle, "tok-m")
+        s2, _, b2 = req(cm.handle, "tok-m")
+        assert (s1, s2) == (206, 206)
+        assert b1 == b2 == data[:span]
+        s3, h3, b3 = req(cm.handle, "tok-m")
+        assert s3 == 429
+        assert int(h3["Retry-After"]) >= 1
+        assert b"byte rate" in b3
+        # HEAD is never charged: metadata stays reachable under deficit
+        sh, hh, _ = req(cm.handle, "tok-m", method="HEAD")
+        assert sh == 206 and int(hh["Content-Length"]) == span
+        # the unmetered tenant streams freely throughout
+        for _ in range(3):
+            su, _, bu = req(cu.handle, "tok-u")
+            assert su == 206 and bu == data[:span]
+        snap = gw.metrics()["admission"]
+        assert snap["metered"]["bytes_rejected"] >= span
+        assert snap["unmetered"]["bytes_charged"] >= 3 * span
+        assert gw.metrics()["gateway"]["rejected_429"] >= 1
+        cm.close()
+        cu.close()

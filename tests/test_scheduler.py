@@ -395,3 +395,72 @@ def test_cancel_view_batch_only_spares_priority_lane():
     assert snap["submitted"] == snap["done"] + snap["cancelled"] + snap["queued"], snap
     assert snap["cancelled"] == 3
     ex.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# EWMA cost correction: observed runtime re-prices claimed byte costs
+# ---------------------------------------------------------------------------
+
+def test_cost_correction_off_by_default():
+    """Default behavior is the documented pure-DRR arbitration: no
+    correction state accumulates and the snapshot says so."""
+    ex = FairExecutor(1)
+    fut = ex.submit("t", lambda: None, _cost=5 * Q)
+    fut.result(10)
+    snap = ex.snapshot()["cost_correction"]
+    assert snap == {"enabled": False, "throughput_bps": None, "per_tenant": {}}
+    ex.shutdown(wait=True)
+
+
+def test_cost_correction_validates_alpha():
+    with pytest.raises(ValueError):
+        FairExecutor(1, cost_correction=True, correction_alpha=0.0)
+    with pytest.raises(ValueError):
+        FairExecutor(1, cost_correction=True, correction_alpha=1.5)
+
+
+def test_cost_correction_learns_underclaimed_costs():
+    """Two tenants run identical work, but one claims 100x fewer bytes.
+    The EWMA of observed runtime must drive the under-claimer's correction
+    factor above the honest tenant's (its tasks run far longer than their
+    claimed bytes imply at the fleet's observed throughput)."""
+    ex = FairExecutor(1, cost_correction=True, correction_alpha=0.5)
+
+    def work():
+        time.sleep(0.02)
+
+    futs = []
+    for _ in range(8):
+        futs.append(ex.submit("honest", work, _cost=100 * Q))
+        futs.append(ex.submit("liar", work, _cost=Q))
+    for f in futs:
+        f.result(30)
+    cc = ex.snapshot()["cost_correction"]
+    assert cc["enabled"]
+    assert cc["throughput_bps"] > 0
+    liar = cc["per_tenant"]["liar"]
+    honest = cc["per_tenant"]["honest"]
+    assert liar > honest, (liar, honest)
+    assert liar > 2.0, liar  # clamped EWMA converges toward x16
+    assert honest < 2.0, honest
+    # Raw claimed bytes are still what the ledger books (the correction
+    # re-prices arbitration, not accounting).
+    snap = ex.snapshot()
+    assert snap["dispatched_bytes_per_tenant"]["honest"] == 8 * 100 * Q
+    assert snap["dispatched_bytes_per_tenant"]["liar"] == 8 * Q
+    ex.shutdown(wait=True)
+
+
+def test_cost_correction_factor_is_clamped():
+    """Even an absurd claim (1 byte for a long task) stays within the
+    [1/16, 16] clamp, so a misbehaving tenant cannot push another into
+    starvation through the correction itself."""
+    ex = FairExecutor(1, cost_correction=True, correction_alpha=1.0)
+    futs = [ex.submit("wild", time.sleep, 0.03, _cost=1) for _ in range(3)]
+    futs += [ex.submit("calm", time.sleep, 0.001, _cost=10**9) for _ in range(3)]
+    for f in futs:
+        f.result(30)
+    per = ex.snapshot()["cost_correction"]["per_tenant"]
+    assert 1.0 / 16.0 <= per["wild"] <= 16.0
+    assert 1.0 / 16.0 <= per["calm"] <= 16.0
+    ex.shutdown(wait=True)

@@ -1,0 +1,439 @@
+"""Transcoded-twin read path: hostility probe, twin store, background
+re-encoding, atomic install, and the server's source-resolution seam.
+
+The scenario under test is the paper's §4.8 worst case made durable: a
+fixed-Huffman (splitless) archive degrades every cold open to a sequential
+scan, so the service pays one sequential pass, re-encodes a BGZF twin in
+the background, and every later open resolves to the twin — same identity,
+bit-identical bytes, zero speculative work.
+"""
+
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import gzip_bytes, make_text
+from repro.core.index import GzipIndex
+from repro.core.reader import ParallelGzipReader
+from repro.core.synth import bgzf_compress, fixed_only_compress
+from repro.service.index_store import IndexStore, file_identity
+from repro.service.scheduler import FairExecutor
+from repro.service.server import ArchiveServer
+from repro.service.transcode import TranscodeManager, resolve_source
+
+TEXT = make_text(np.random.default_rng(0x7E57), 200_000)
+
+
+def _hostility(comp: bytes, **kw) -> float:
+    kw.setdefault("parallelization", 2)
+    kw.setdefault("chunk_size", 32 << 10)
+    with ParallelGzipReader(comp, **kw) as r:
+        r.build_full_index()
+        return r.seek_hostility()
+
+
+def _hostile_file(tmp_path, name="hostile.gz"):
+    p = tmp_path / name
+    p.write_bytes(fixed_only_compress(TEXT))
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# hostility scoring
+# ---------------------------------------------------------------------------
+
+def test_fixed_only_archive_probes_maximally_hostile():
+    assert _hostility(fixed_only_compress(TEXT)) == 1.0
+
+
+def test_ordinary_gzip_probes_friendly():
+    assert _hostility(gzip_bytes(TEXT, 6)) < 0.7
+
+
+def test_bgzf_probes_zero():
+    assert _hostility(bgzf_compress(TEXT)) == 0.0
+
+
+def test_imported_index_probes_zero():
+    """A warm (imported) index carries no first-pass observations — scoring
+    it would condemn archives the importer never even decoded here."""
+    comp = fixed_only_compress(TEXT)
+    with ParallelGzipReader(comp, chunk_size=32 << 10) as r:
+        r.build_full_index()
+        blob = r.index.to_bytes()
+    with ParallelGzipReader(comp, index=blob) as warm:
+        assert warm.seek_hostility() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# IndexStore twin slots: registration, resolution, torn installs
+# ---------------------------------------------------------------------------
+
+def _twin_fixture():
+    """(origin bytes, twin bytes, twin's finalized index)."""
+    origin = fixed_only_compress(TEXT)
+    twin = bgzf_compress(TEXT)
+    with ParallelGzipReader(twin, codec="bgzf", parallelization=1) as r:
+        assert r.index.finalized
+        index = r.index
+    return origin, twin, index
+
+
+def test_memory_store_twin_roundtrip():
+    origin, twin, index = _twin_fixture()
+    store = IndexStore()
+    key = file_identity(origin)
+    assert store.resolve_twin(key) is None
+    assert store.register_twin(key, codec_tag="bgzf", data=twin, index=index)
+    rec = store.resolve_twin(key)
+    assert rec is not None
+    assert rec.codec_tag == "bgzf"
+    assert rec.source == twin
+    assert rec.meta["bytes_out"] == len(twin)
+    assert GzipIndex.from_bytes(rec.index_blob).finalized
+    assert store.stats.twin_installs == 1 and store.stats.twin_hits == 1
+    store.drop_twin(key)
+    assert store.resolve_twin(key) is None
+
+
+def test_register_twin_refuses_unfinalized_index():
+    origin, twin, _ = _twin_fixture()
+    store = IndexStore()
+    assert (
+        store.register_twin(
+            file_identity(origin), codec_tag="bgzf", data=twin, index=GzipIndex()
+        )
+        is None
+    )
+    assert store.stats.twin_rejected == 1
+
+
+def test_disk_store_twin_roundtrip_and_torn_installs(tmp_path):
+    origin, twin, index = _twin_fixture()
+    store = IndexStore(str(tmp_path / "s"))
+    key = file_identity(origin)
+    tmp = store.twin_tmp_path(key)
+    with open(tmp, "wb") as f:
+        f.write(twin)
+    assert store.register_twin(key, codec_tag="bgzf", data=tmp, index=index)
+    assert not os.path.exists(tmp)  # renamed into place, not copied
+
+    rec = store.resolve_twin(key)
+    assert rec is not None and rec.codec_tag == "bgzf"
+    with open(rec.source, "rb") as f:
+        assert f.read() == twin
+
+    data_path = os.path.join(store.root, key + ".twin")
+    idx_path = os.path.join(store.root, key + ".twinidx")
+    meta_path = os.path.join(store.root, key + ".twinmeta")
+    assert os.path.exists(data_path) and os.path.exists(idx_path)
+
+    # meta is the commit point: without it the twin does not exist.
+    with open(meta_path, "rb") as f:
+        meta_blob = f.read()
+    os.unlink(meta_path)
+    assert store.resolve_twin(key) is None
+    with open(meta_path, "wb") as f:
+        f.write(meta_blob)
+    assert store.resolve_twin(key) is not None
+
+    # corrupt meta: unparseable JSON never resolves.
+    with open(meta_path, "wb") as f:
+        f.write(b"{half a record")
+    assert store.resolve_twin(key) is None
+    with open(meta_path, "wb") as f:
+        f.write(meta_blob)
+
+    # torn data (crash mid-write): size mismatch never resolves.
+    with open(data_path, "wb") as f:
+        f.write(twin[: len(twin) // 2])
+    assert store.resolve_twin(key) is None
+    with open(data_path, "wb") as f:
+        f.write(twin)
+    assert store.resolve_twin(key) is not None
+
+    # codec mismatch between meta and index blob never resolves.
+    meta = json.loads(meta_blob)
+    meta["codec"] = "zstd"
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    assert store.resolve_twin(key) is None
+    with open(meta_path, "wb") as f:
+        f.write(meta_blob)
+
+    store.drop_twin(key)
+    assert store.resolve_twin(key) is None
+    assert not os.path.exists(data_path)
+
+
+def test_store_clear_removes_twins(tmp_path):
+    origin, twin, index = _twin_fixture()
+    store = IndexStore(str(tmp_path / "s"))
+    key = file_identity(origin)
+    tmp = store.twin_tmp_path(key)
+    with open(tmp, "wb") as f:
+        f.write(twin)
+    store.register_twin(key, codec_tag="bgzf", data=tmp, index=index)
+    store.clear()
+    assert store.resolve_twin(key) is None
+    assert os.listdir(store.root) == []
+
+
+# ---------------------------------------------------------------------------
+# resolve_source
+# ---------------------------------------------------------------------------
+
+def test_resolve_source_without_store_and_with_warm_index():
+    comp = gzip_bytes(TEXT, 6)
+    bare = resolve_source(None, comp)
+    assert bare.source is comp and bare.index is None and bare.twin is None
+    assert bare.identity == file_identity(comp)
+
+    store = IndexStore()
+    cold = resolve_source(store, comp)
+    assert not cold.index_was_warm
+    with ParallelGzipReader(comp, chunk_size=32 << 10) as r:
+        r.build_full_index()
+        store.put(cold.identity, r.index)
+    warm = resolve_source(store, comp)
+    assert warm.index_was_warm and warm.index is not None
+    assert warm.twin is None and warm.source is comp
+
+
+def test_resolve_source_binds_twin_and_survives_corrupt_twin_index():
+    origin, twin, index = _twin_fixture()
+    store = IndexStore()
+    key = file_identity(origin)
+    store.register_twin(key, codec_tag="bgzf", data=twin, index=index)
+
+    res = resolve_source(store, origin)
+    assert res.twin == "bgzf" and res.codec == "bgzf"
+    assert res.source == twin and res.index.finalized
+    assert res.identity == key  # identity stays the ORIGIN's key
+
+    # A twin whose index blob no longer parses must never win resolution:
+    # the origin stays servable.
+    store._twins[key].index_blob = b"not an index"
+    res = resolve_source(store, origin)
+    assert res.twin is None and res.source is origin
+
+
+# ---------------------------------------------------------------------------
+# TranscodeManager: background job, fault injection, atomicity
+# ---------------------------------------------------------------------------
+
+def _probe_reader(path):
+    r = ParallelGzipReader(path, parallelization=1, chunk_size=32 << 10)
+    r.build_full_index()
+    return r
+
+
+def test_manager_transcodes_hostile_file_and_skips_friendly(tmp_path):
+    path = _hostile_file(tmp_path)
+    store = IndexStore(str(tmp_path / "s"))
+    ex = FairExecutor(2)
+    try:
+        mgr = TranscodeManager(store, ex, span_bytes=1 << 16, min_input_bytes=1)
+        ident = file_identity(path)
+        with _probe_reader(path) as r:
+            assert mgr.consider(ident, path, r)
+            assert not mgr.consider(ident, path, r)  # dedup: job exists
+        assert mgr.wait(ident, timeout=60) == "installed"
+        rec = store.resolve_twin(ident)
+        assert rec is not None and rec.codec_tag == "bgzf"
+        with ParallelGzipReader(rec.source, codec="bgzf") as tw:
+            assert tw.pread(0, len(TEXT) + 1) == TEXT
+        # origin's own index was persisted under the origin key too
+        origin_idx = store.get(ident)
+        assert origin_idx is not None
+        assert origin_idx.compressed_size == os.path.getsize(path)
+
+        # a friendly archive is considered but never scheduled
+        friendly = tmp_path / "friendly.gz"
+        friendly.write_bytes(gzip_bytes(TEXT, 6))
+        with _probe_reader(str(friendly)) as r:
+            assert not mgr.consider(file_identity(str(friendly)), str(friendly), r)
+        snap = mgr.snapshot()
+        assert snap["counters"]["scheduled"] == 1
+        job = snap["jobs"][ident]
+        assert job["state"] == "installed"
+        assert job["speedup"] >= 2  # several seek points vs one
+        assert job["bytes_out"] > 0
+    finally:
+        ex.shutdown(wait=True)
+
+
+def test_open_filereader_source_is_skipped_not_raced(tmp_path):
+    """An already-open FileReader can't be re-opened by value — the job
+    would race the handle's close. It must be skipped, with a counter."""
+    path = _hostile_file(tmp_path)
+    store = IndexStore()
+    ex = FairExecutor(1)
+    try:
+        mgr = TranscodeManager(store, ex, min_input_bytes=1)
+        from repro.core.filereader import SharedFileReader
+
+        src = SharedFileReader(path)
+        with ParallelGzipReader(src, parallelization=1, chunk_size=32 << 10) as r:
+            r.build_full_index()
+            assert not mgr.consider(file_identity(path), src, r)
+        assert mgr.snapshot()["counters"]["skipped_unresolvable"] == 1
+    finally:
+        ex.shutdown(wait=True)
+
+
+@pytest.mark.parametrize("stage", ["open", "span", "finish", "validate", "install"])
+def test_fault_injection_never_installs_a_half_twin(tmp_path, stage):
+    """Kill the transcoder at every lifecycle stage: the job fails, no
+    half-written twin is ever resolvable, tmp files are cleaned up, and the
+    origin keeps serving bit-identical bytes."""
+    path = _hostile_file(tmp_path)
+    store = IndexStore(str(tmp_path / "s"))
+    ex = FairExecutor(2)
+    try:
+        def hook(s):
+            if s == stage:
+                raise RuntimeError("injected crash at %s" % s)
+
+        mgr = TranscodeManager(
+            store, ex, span_bytes=1 << 16, min_input_bytes=1, fault_hook=hook
+        )
+        ident = file_identity(path)
+        with _probe_reader(path) as r:
+            assert mgr.consider(ident, path, r)
+        assert mgr.wait(ident, timeout=60) == "failed"
+        job = mgr.snapshot()["jobs"][ident]
+        assert "injected crash" in job["error"]
+
+        assert store.resolve_twin(ident) is None
+        stray = [
+            f for f in os.listdir(store.root)
+            if f.endswith((".twin", ".twinidx", ".twinmeta", ".tmp"))
+        ]
+        assert stray == [], stray
+
+        with ArchiveServer(index_store=store, transcode="off",
+                           max_workers=2) as srv:
+            h = srv.open(path)
+            assert srv.read_range(h, 0, len(TEXT)) == TEXT
+            assert srv.stat(h).twin is None
+    finally:
+        ex.shutdown(wait=True)
+
+
+def test_fault_after_data_rename_is_still_unresolvable(tmp_path):
+    """Crash *between* the twin-data rename and the meta write (simulated
+    by deleting idx+meta after a full install): data alone never resolves —
+    meta is the commit point."""
+    path = _hostile_file(tmp_path)
+    store = IndexStore(str(tmp_path / "s"))
+    ex = FairExecutor(2)
+    try:
+        mgr = TranscodeManager(store, ex, min_input_bytes=1)
+        ident = file_identity(path)
+        with _probe_reader(path) as r:
+            mgr.consider(ident, path, r)
+        assert mgr.wait(ident, timeout=60) == "installed"
+        os.unlink(os.path.join(store.root, ident + ".twinidx"))
+        os.unlink(os.path.join(store.root, ident + ".twinmeta"))
+        assert store.resolve_twin(ident) is None
+        res = resolve_source(store, path)
+        assert res.twin is None and res.source == path
+    finally:
+        ex.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# ArchiveServer end to end: hostile open -> background twin -> resolved reopen
+# ---------------------------------------------------------------------------
+
+def test_server_end_to_end_twin_lifecycle(tmp_path):
+    path = _hostile_file(tmp_path)
+    store_dir = str(tmp_path / "store")
+
+    # Pass 1: cold open pays the sequential first pass; the transcoder
+    # installs a twin in the background.
+    with ArchiveServer(
+        index_store=IndexStore(store_dir), chunk_size=32 << 10, max_workers=4,
+        transcode_options={"min_input_bytes": 1, "span_bytes": 1 << 16},
+    ) as srv:
+        h = srv.open(path)
+        assert srv.read_range(h, 0, len(TEXT)) == TEXT
+        st = srv.stat(h)
+        assert st.twin is None and st.codec == "deflate"
+        assert srv.transcoder.wait(st.identity, timeout=60) == "installed"
+        tsnap = srv.metrics()["transcode"]
+        assert tsnap["counters"]["installed"] == 1
+        assert tsnap["jobs"][st.identity]["speedup"] >= 2
+        identity = st.identity
+
+    # Pass 2: cold reopen resolves the twin — same identity, bgzf serving
+    # codec, warm exact index (zero speculative tasks), bit-identical bytes.
+    with ArchiveServer(
+        index_store=IndexStore(store_dir), chunk_size=32 << 10, max_workers=4,
+    ) as srv:
+        h = srv.open(path)
+        assert srv.read_range(h, 0, len(TEXT)) == TEXT
+        assert srv.read_range(h, 12_345, 4096) == TEXT[12_345 : 12_345 + 4096]
+        st = srv.stat(h)
+        assert st.twin == "bgzf" and st.codec == "bgzf"
+        assert st.identity == identity  # ETag semantics preserved
+        assert st.index_was_warm
+        m = srv.metrics()
+        assert m["fleet"]["fetcher"]["nominal_tasks"] == 0
+        assert m["per_file"][h]["twin"] == "bgzf"
+
+        # the index-exchange endpoint must serve the ORIGIN's blob: a peer
+        # asking for this identity holds the origin's bytes.
+        key, blob = srv.index_blob(h)
+        assert key == identity
+        assert GzipIndex.from_bytes(blob).compressed_size == os.path.getsize(path)
+
+        # closing the twin-bound handle must not overwrite the origin's
+        # index slot with the twin's layout...
+        srv.close(h, persist_index=True)
+
+    with ArchiveServer(
+        index_store=IndexStore(store_dir), chunk_size=32 << 10, transcode="off",
+    ) as srv:
+        # ...so a later origin-keyed lookup still describes the origin.
+        idx = srv.index_store.get(identity)
+        assert idx is not None
+        assert idx.compressed_size == os.path.getsize(path)
+
+
+def test_server_concurrent_reads_while_transcoding(tmp_path):
+    """Interactive reads keep flowing (and stay byte-exact) while the
+    batch-lane transcode of the same archive runs."""
+    path = _hostile_file(tmp_path)
+    with ArchiveServer(
+        index_store=IndexStore(str(tmp_path / "s")), chunk_size=32 << 10,
+        max_workers=2,
+        transcode_options={"min_input_bytes": 1, "span_bytes": 1 << 16},
+    ) as srv:
+        h = srv.open(path)
+        srv.size(h)  # finalize: triggers the hostility probe
+        errors = []
+
+        def hammer(seed):
+            rng = np.random.default_rng(seed)
+            try:
+                for _ in range(20):
+                    off = int(rng.integers(0, len(TEXT)))
+                    n = int(rng.integers(1, 8192))
+                    if srv.read_range(h, off, n) != TEXT[off : off + n]:
+                        raise AssertionError("bytes diverged at %d+%d" % (off, n))
+            except Exception as exc:  # noqa: BLE001
+                errors.append(exc)
+
+        threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not errors, errors[0]
+        ident = srv.stat(h).identity
+        assert srv.transcoder.wait(ident, timeout=60) == "installed"
