@@ -1,0 +1,298 @@
+"""Observability overhead: traced vs untraced warm preads, noop-span cost.
+
+The tracing subsystem's contract (docs/observability.md) is two-tier:
+
+  * **disabled** — a ``span()`` call is one module-flag check returning a
+    shared no-op object; the cost must be *unmeasurable* against a warm
+    pread (hundreds of nanoseconds vs tens of microseconds). Measured
+    directly here as ``obs_noop_span_ns``.
+  * **enabled** — a service boundary allocates one Span, stamps two
+    clocks, and appends one tuple to the ring buffer. The acceptance bar
+    (ISSUE 10) is ≤5% added latency on the **warm request path** — the
+    ``obs_wire_*`` rows: a warm 4 MiB pread through the gateway loopback,
+    the bulk-serving shape the tentpole instruments end to end (5 spans
+    per request: client range-GET root, gateway.request, admission wait,
+    bridge hop, server.read_range). The in-process ``obs_warm_pread_*``
+    rows report the per-span cost in *absolute* terms (paired-delta µs
+    per read): a tight single-thread `read_range` loop is a denominator
+    an in-process tracer cannot hide behind, so that row exists for
+    transparency about the per-span price, not as the 5% gate.
+
+Methodology notes, hard-won on a 2-core virtualized host:
+
+  * The wire client runs in a **subprocess**. Client and server sharing
+    one interpreter share one GIL, so server-side span work bills itself
+    to the *client's* ``conn.request()`` wall time and roughly doubles
+    the apparent overhead. A separate process measures what a real
+    caller sees.
+  * Both comparisons are **paired/blocked**: A-B-B-A blocks of reads
+    with tracing toggled per block, pairing block medians. Sequential
+    A-then-B runs are hopeless for µs-scale effects — host drift moves
+    p50 by more per minute than tracing costs per read.
+  * The gateway client is built with a single-block cache and
+    block-aligned offsets; otherwise its own block cache serves repeat
+    reads locally and the "wire" rows measure a dict lookup.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.obs import hist as obs_hist
+from repro.obs import trace as obs_trace
+from repro.service import ArchiveServer
+
+from .common import DataGen, emit, gzip_bytes, scale
+
+
+def _percentiles(samples_s):
+    arr = np.sort(np.asarray(samples_s))
+    return (
+        float(arr[int(0.50 * (len(arr) - 1))]) * 1e6,
+        float(arr[int(0.99 * (len(arr) - 1))]) * 1e6,
+    )
+
+
+def _paired_ab(read_fn, offsets, n_pairs):
+    """Median paired delta + per-mode samples for traced-vs-untraced.
+
+    Calls ``read_fn(offset)`` with tracing toggled around it — the same
+    offset read back to back in both modes, alternating which mode goes
+    first; returns (off_samples, on_samples, deltas) in seconds.
+    """
+    off_samples: list = []
+    on_samples: list = []
+    deltas: list = []
+    for i in range(n_pairs):
+        off = int(offsets[i % len(offsets)])
+        first_traced = bool(i & 1)
+        pair = {}
+        for traced in (first_traced, not first_traced):
+            if traced:
+                obs_trace.enable_tracing()
+            else:
+                obs_trace.disable_tracing()
+            t0 = time.perf_counter()
+            read_fn(off)
+            pair[traced] = time.perf_counter() - t0
+        on_samples.append(pair[True])
+        off_samples.append(pair[False])
+        deltas.append(pair[True] - pair[False])
+    obs_trace.disable_tracing()
+    return off_samples, on_samples, deltas
+
+
+def bench_noop_span() -> None:
+    """Cost of `span()` while tracing is disabled: the always-paid tax."""
+    obs_trace.disable_tracing()
+    n = scale(200_000, floor=20_000)
+    span = obs_trace.span
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with span("bench.noop"):
+            pass
+    per_call = (time.perf_counter() - t0) / n
+    emit("obs_noop_span_ns", per_call * 1e3, "%.0fns disabled span()" % (per_call * 1e9))
+
+
+def bench_traced_pread() -> None:
+    """Absolute per-read span cost: in-process warm read_range, paired."""
+    gen = DataGen(0x0B5E)
+    data = gen.text(scale(8 << 20, floor=2 << 20))
+    comp = gzip_bytes(data, 6)
+    # One gateway stream chunk: the serving path preads up to `stream_span`
+    # per await, so a warm 1 MiB read is the in-process unit of work the
+    # traced request path repeats.
+    req_size = 1 << 20
+    n_pairs = scale(1200, floor=250)
+    rng = np.random.default_rng(42)
+    offsets = rng.integers(0, max(1, len(data) - req_size), 64)
+
+    with ArchiveServer(
+        cache_budget_bytes=64 << 20, max_workers=4, slow_request_s=None
+    ) as server:
+        h = server.open(comp)
+        server.read_range(h, 0, len(data))  # fully warm the chunk cache
+        for _ in range(3):  # reach allocator/clock steady state
+            for off in offsets:
+                server.read_range(h, int(off), req_size)
+
+        off_s, on_s, deltas = _paired_ab(
+            lambda off: server.read_range(h, off, req_size), offsets, n_pairs
+        )
+        stats = obs_trace.tracing_stats()
+        obs_trace.reset_tracing()
+        obs_hist.reset_histograms()
+
+    off_p50, off_p99 = _percentiles(off_s)
+    on_p50, on_p99 = _percentiles(on_s)
+    delta_p50 = float(np.median(deltas)) * 1e6
+    emit("obs_warm_pread_p50_untraced", off_p50, "p99=%.1fus" % off_p99)
+    emit(
+        "obs_warm_pread_p50_traced", on_p50,
+        "p99=%.1fus spans=%d paired_delta=%+.2fus/read"
+        " (absolute span cost; the 5%% gate is the wire rows)"
+        % (on_p99, stats["recorded_total"], delta_p50),
+    )
+
+
+#: Benchmark client run in a separate interpreter (own GIL): reads the
+#: requested offsets through the gateway, toggling its *own* tracing per
+#: block, and reports per-read wall times over stdout. Protocol:
+#: ``b <on|off> <off1> <off2> ...`` -> space-joined seconds; ``q`` -> exit.
+_WIRE_CHILD = r'''
+import sys, time
+from repro.obs import trace as obs_trace
+from repro.service.gateway import GatewayClient
+
+url, path, req = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cl = GatewayClient(url, source=path, block_size=req, cache_blocks=1)
+print("ready", flush=True)
+for line in sys.stdin:
+    parts = line.split()
+    if not parts or parts[0] == "q":
+        break
+    if parts[0] == "b":
+        if parts[1] == "on":
+            obs_trace.enable_tracing()
+        else:
+            obs_trace.disable_tracing()
+        out = []
+        for tok in parts[2:]:
+            t0 = time.perf_counter()
+            cl.pread(int(tok), req)
+            out.append("%.9f" % (time.perf_counter() - t0))
+        print(" ".join(out), flush=True)
+cl.close()
+'''
+
+
+def bench_traced_wire() -> None:
+    """The acceptance measurement: warm 4 MiB preads through the gateway.
+
+    This is the end-to-end path the tentpole instruments — client range
+    GET → gateway accept → admission → bridge → read_range — and
+    therefore the path whose latency the ≤5% bar protects. The client
+    lives in a subprocess (see the module docstring: sharing the server's
+    GIL inflates the apparent overhead ~2x), tracing is toggled on both
+    sides per block of reads, and blocks alternate A-B-B-A so linear
+    host drift cancels out of the paired block-median deltas.
+    """
+    import repro
+    from repro.service.gateway import GatewayServer
+
+    req_size = 4 << 20
+    reads_per_block = 8
+    n_super = scale(24, floor=12)  # super-block = off,on,on,off blocks
+    gen = DataGen(0x0B5E)
+    data = gen.text(scale(48 << 20, floor=24 << 20))
+    n_blocks = len(data) // req_size - 1
+    rng = np.random.default_rng(7)
+    offsets = [int(x) * req_size for x in rng.permutation(n_blocks - 1)[:12]]
+
+    src_dir = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_dir + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+
+    with tempfile.TemporaryDirectory(prefix="bench_obs_") as tmpdir:
+        path = os.path.join(tmpdir, "obs.gz")
+        with open(path, "wb") as f:
+            f.write(gzip_bytes(data, 6))
+        with ArchiveServer(
+            cache_budget_bytes=160 << 20, max_workers=4, slow_request_s=None
+        ) as server:
+            with GatewayServer(server, front_end_threads=4) as gw:
+                child = subprocess.Popen(
+                    [sys.executable, "-u", "-c", _WIRE_CHILD,
+                     gw.url, path, str(req_size)],
+                    stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                    text=True, env=env,
+                )
+                try:
+                    if child.stdout.readline().strip() != "ready":
+                        raise RuntimeError("wire bench child failed to start")
+
+                    def block(mode, i0):
+                        offs = [
+                            offsets[(i0 + j) % len(offsets)]
+                            for j in range(reads_per_block)
+                        ]
+                        if mode == "on":
+                            obs_trace.enable_tracing()
+                        else:
+                            obs_trace.disable_tracing()
+                        child.stdin.write(
+                            "b %s %s\n" % (mode, " ".join(map(str, offs)))
+                        )
+                        child.stdin.flush()
+                        line = child.stdout.readline()
+                        if not line:
+                            raise RuntimeError("wire bench child exited early")
+                        times = [float(x) for x in line.split()]
+                        return float(np.median(times)), times
+
+                    # Warm every offset in both modes: server chunk cache,
+                    # connection reuse, import/code paths on both sides.
+                    for mode, i0 in (("off", 0), ("on", 4), ("off", 8)):
+                        block(mode, i0)
+
+                    base_meds: list = []
+                    deltas: list = []
+                    off_samples: list = []
+                    on_samples: list = []
+                    for i in range(n_super):
+                        a1, ta1 = block("off", i * 4)
+                        b1, tb1 = block("on", i * 4)
+                        b2, tb2 = block("on", i * 4 + 2)
+                        a2, ta2 = block("off", i * 4 + 2)
+                        base_meds += [a1, a2]
+                        off_samples += ta1 + ta2
+                        on_samples += tb1 + tb2
+                        deltas.append(((b1 + b2) - (a1 + a2)) / 2)
+                    obs_trace.disable_tracing()
+                    stats = obs_trace.tracing_stats()
+                    obs_trace.reset_tracing()
+                    obs_hist.reset_histograms()
+                    child.stdin.write("q\n")
+                    child.stdin.flush()
+                    child.wait(timeout=10)
+                finally:
+                    if child.poll() is None:
+                        child.kill()
+
+    off_p50, off_p99 = _percentiles(off_samples)
+    on_p50, on_p99 = _percentiles(on_samples)
+    base_p50 = float(np.median(base_meds)) * 1e6
+    delta = float(np.median(deltas)) * 1e6
+    overhead = 100.0 * delta / base_p50
+    emit(
+        "obs_wire_pread_p50_untraced", off_p50,
+        "p99=%.1fus 4MiB warm pread, subprocess client" % off_p99,
+    )
+    # The overhead percentage lives in the derived string, not as a row
+    # value: a ratio hovering near zero would trip the trajectory checker's
+    # relative threshold on pure noise.
+    emit(
+        "obs_wire_pread_p50_traced", on_p50,
+        "p99=%.1fus server_spans=%d paired_delta=%+.1fus overhead=%+.2f%%"
+        " target<=5%%"
+        % (on_p99, stats["recorded_total"], delta, overhead),
+    )
+
+
+def main() -> None:
+    bench_noop_span()
+    bench_traced_pread()
+    bench_traced_wire()
+
+
+if __name__ == "__main__":
+    main()

@@ -52,7 +52,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default="",
         help="comma list: components,decomp,kernels,roofline,codecs,service,"
-             "remote,gateway,fleet,transcode",
+             "remote,gateway,fleet,transcode,obs",
     )
     ap.add_argument(
         "--smoke", action="store_true",
@@ -114,6 +114,12 @@ def main() -> None:
         # Hermetic: 3 loopback gateways behind a FleetRouter — routed vs
         # direct read latency, failover recovery, index-exchange warm open.
         sections.append(("fleet", _bench_fleet_mod.bench_fleet))
+    if only is None or "obs" in only:
+        from . import bench_obs
+
+        # Tracing overhead: warm pread p50/p99 traced vs untraced (the ≤5%
+        # acceptance bar) and the disabled-path noop span cost.
+        sections.append(("obs", bench_obs.main))
     if only is None or "transcode" in only:
         from . import bench_transcode
 

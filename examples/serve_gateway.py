@@ -8,11 +8,15 @@ disconnect whose speculation is cancelled end to end (watch the scheduler's
 ``cancelled`` counter).
 
     PYTHONPATH=src python examples/serve_gateway.py
+    PYTHONPATH=src python examples/serve_gateway.py --trace
+        # ... writes a Chrome trace-event JSON on exit; load it in
+        # Perfetto / chrome://tracing to see every demo request's spans
     PYTHONPATH=src python examples/serve_gateway.py --port 8080 --keep
         # ... then from another shell:
         # curl -H 'Authorization: Bearer demo-token' \
         #      -H 'Range: bytes=1000-1999' \
         #      http://127.0.0.1:8080/v1/archives/f1/bytes
+        # curl http://127.0.0.1:8080/metrics   # Prometheus exposition
 """
 
 import argparse
@@ -51,7 +55,14 @@ def main() -> None:
     ap.add_argument("--port", type=int, default=0, help="0 = ephemeral")
     ap.add_argument("--keep", action="store_true",
                     help="keep serving until Ctrl-C (for curl exploration)")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable request tracing; dump a Chrome trace-event "
+                         "JSON (open in Perfetto) on exit")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro import obs
+        obs.enable_tracing()
 
     tmpdir = tempfile.mkdtemp(prefix="gateway_demo_")
     paths = make_corpus(tmpdir)
@@ -139,6 +150,12 @@ def main() -> None:
                 pass
         noisy.close()
         client.close()
+
+    if args.trace:
+        trace_path = os.path.join(tmpdir, "gateway_trace.json")
+        trace = obs.dump_trace(trace_path)
+        print(f"\nwrote {len(trace['traceEvents'])} trace events to "
+              f"{trace_path} (load in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -35,10 +35,12 @@ import threading
 import zlib as _zlib
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
+import time as _time
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from ..obs import trace as _obs_trace
 from .cache import LRUCache
 from .codec import Codec, resolve_codec
 from .deflate import DecodeResult
@@ -217,6 +219,24 @@ class ChunkFetcher:
     # ------------------------------------------------------------------
 
     def _cache_lookup(self, key):
+        # Traced misses leave a zero-duration marker span: the probe itself
+        # is a dict access with nothing to time — what matters in a trace is
+        # *where* the miss happened (the fetch or in-flight wait that
+        # follows shows up as a sibling span with the real duration). Hits
+        # record nothing at all: a warm pread probes the cache once per
+        # chunk it touches, and any per-probe work here (a live span, even
+        # one clock read) was the dominant per-byte tracing overhead.
+        val = self._cache_lookup_raw(key)
+        if val is None and _obs_trace.tracing_enabled():
+            _obs_trace.record_span(
+                "fetcher.cache_lookup",
+                _time.perf_counter(),
+                0.0,
+                {"kind": key[0], "key": str(key[1]), "hit": False},
+            )
+        return val
+
+    def _cache_lookup_raw(self, key):
         # One logical lookup, exactly one hit or miss fleet-wide: the access
         # probe suppresses its miss so a prefetch hit right after is not also
         # counted as an access miss (that skew deflated the aggregated
@@ -280,7 +300,11 @@ class ChunkFetcher:
                     # or the dedup would quietly drop the priority hint.
                     self._boost(fut)
                 return fut
-            fut = self._pool_submit(self._run_task, key, fn, *args,
+            # Carry the submitter's trace context explicitly: a plain
+            # ThreadPoolExecutor does not propagate it (the service-layer
+            # FairExecutor does, and _run_task defers to it when so).
+            fut = self._pool_submit(self._run_task, _obs_trace.capture(),
+                                    key, fn, *args,
                                     cost=cost, priority=priority)
             self._in_flight[key] = fut
             return fut
@@ -324,9 +348,18 @@ class ChunkFetcher:
         except TypeError:
             return 1
 
-    def _run_task(self, key, fn, *args):
+    def _run_task(self, ctx, key, fn, *args):
         try:
-            return fn(*args)
+            if not _obs_trace.tracing_enabled():
+                return fn(*args)
+            # FairExecutor workers already reinstated the submitter's context
+            # (and opened an executor.run span we should nest under); only a
+            # bare pool needs the carried context attached here.
+            attach_ctx = ctx if _obs_trace.current_context() is None else None
+            with _obs_trace.attach(attach_ctx), _obs_trace.span(
+                "fetcher.task", {"kind": key[0], "key": str(key[1])}
+            ):
+                return fn(*args)
         finally:
             with self._lock:
                 self._in_flight.pop(key, None)

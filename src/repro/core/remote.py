@@ -50,6 +50,7 @@ import urllib.parse
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+from ..obs import trace as _obs_trace
 from .cache import CacheStats, LRUCache
 from .errors import RemoteFileChangedError, RemoteIOError
 from .filereader import FileReader, check_pread_args
@@ -255,7 +256,15 @@ class RemoteFileReader(FileReader):
         transport faults (the caller's retry loop owns recovery).
         """
         conn = self._connection()
-        conn.request(method, self._path, headers={**self._headers, **extra_headers})
+        headers = {**self._headers, **extra_headers}
+        # Wire-level trace propagation: when a span is current (this request
+        # was issued under tracing), the traceparent header lets the serving
+        # gateway stitch its own spans into our trace. One contextvar read
+        # per request; absent while tracing is off.
+        tp = _obs_trace.current_traceparent()
+        if tp is not None:
+            headers.setdefault(_obs_trace.TRACEPARENT_HEADER, tp)
+        conn.request(method, self._path, headers=headers)
         resp = conn.getresponse()
         # Always drain the response (HEAD drains to b"" — http.client knows
         # the method has no body) or the connection cannot be reused.
@@ -346,6 +355,15 @@ class RemoteFileReader(FileReader):
 
     def _fetch_range(self, start: int, end_incl: int) -> bytes:
         """Fetch [start, end_incl] with bounded retry + validator checks."""
+        if not _obs_trace.tracing_enabled():
+            return self._fetch_range_raw(start, end_incl)
+        with _obs_trace.span(
+            "remote.range_get",
+            {"start": start, "size": end_incl - start + 1, "url": self._url},
+        ):
+            return self._fetch_range_raw(start, end_incl)
+
+    def _fetch_range_raw(self, start: int, end_incl: int) -> bytes:
         want = end_incl - start + 1
         extra = {"Range": "bytes=%d-%d" % (start, end_incl)}
         if self._etag is not None:

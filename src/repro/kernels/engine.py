@@ -61,6 +61,7 @@ import numpy as np
 
 from ..core.crc32 import combine_parts
 from ..core.markers import replace_markers as _cpu_replace_markers
+from ..obs import trace as _obs_trace
 
 try:  # pragma: no cover - exercised via available=False paths in tests
     import jax.numpy as jnp
@@ -353,7 +354,11 @@ class DeviceDecodeEngine:
             return symbols
         if self._route_device("replace", symbols.shape[0]):
             try:
-                return self.submit_replace(symbols, window).result()
+                fut = self.submit_replace(symbols, window)
+                with _obs_trace.timed(
+                    "engine.batch_wait", {"kind": "replace", "symbols": int(symbols.shape[0])}
+                ):
+                    return fut.result()
             except EngineClosedError:
                 pass  # raced shutdown: serve on the CPU like any fallback
         else:
@@ -366,7 +371,9 @@ class DeviceDecodeEngine:
         data = _as_bytes(data)
         if self._route_device("crc", len(data)):
             try:
-                return self.submit_crc(data).result()
+                fut = self.submit_crc(data)
+                with _obs_trace.timed("engine.batch_wait", {"kind": "crc", "nbytes": len(data)}):
+                    return fut.result()
             except EngineClosedError:
                 pass
         else:

@@ -1,0 +1,79 @@
+"""Observability substrate: tracing, latency histograms, Prometheus text.
+
+Dependency-free (stdlib only) on purpose — `repro.core` imports this from
+its hottest paths, so nothing here may pull in jax, numpy, or the service
+layer. Three pieces:
+
+  * `trace` — ring-buffer span recorder with contextvar propagation across
+    thread hops and a ``traceparent``-style header for the wire. ~Zero cost
+    while disabled (one flag check per instrumentation site); enable with
+    `enable_tracing()`. Export with `dump_trace()` (Chrome trace-event
+    JSON, load in chrome://tracing or Perfetto).
+  * `hist` — fixed log-bucket latency histograms (power-of-two microsecond
+    buckets), lock-cheap and mergeable; every finished span observes into
+    the process registry, plus a few always-on service boundaries record
+    even while tracing is off.
+  * `prom` — renders the nested ``metrics()`` snapshot as Prometheus
+    exposition text, histograms included (`_bucket`/`_sum`/`_count`).
+
+`sanitize_snapshot` is the gateway-boundary helper that coerces any
+snapshot into strictly-JSON-serializable form.
+"""
+
+from .hist import (  # noqa: F401
+    BUCKET_BOUNDS_US,
+    HistogramRegistry,
+    LogHistogram,
+    histogram_snapshots,
+    observe,
+    registry,
+    reset_histograms,
+)
+from .prom import render_prometheus  # noqa: F401
+from .sanitize import sanitize_snapshot  # noqa: F401
+from .trace import (  # noqa: F401
+    attach,
+    capture,
+    current_context,
+    current_traceparent,
+    disable_tracing,
+    drain_spans,
+    dump_trace,
+    enable_tracing,
+    parse_traceparent,
+    recorded_spans,
+    reset_tracing,
+    span,
+    spans_for,
+    timed,
+    tracing_enabled,
+    tracing_stats,
+)
+
+__all__ = [
+    "BUCKET_BOUNDS_US",
+    "HistogramRegistry",
+    "LogHistogram",
+    "attach",
+    "capture",
+    "current_context",
+    "current_traceparent",
+    "disable_tracing",
+    "drain_spans",
+    "dump_trace",
+    "enable_tracing",
+    "histogram_snapshots",
+    "observe",
+    "parse_traceparent",
+    "recorded_spans",
+    "registry",
+    "render_prometheus",
+    "reset_histograms",
+    "reset_tracing",
+    "sanitize_snapshot",
+    "span",
+    "spans_for",
+    "timed",
+    "tracing_enabled",
+    "tracing_stats",
+]

@@ -52,10 +52,13 @@ from __future__ import annotations
 
 import asyncio
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from ..obs import hist as _obs_hist
+from ..obs import trace as _obs_trace
 from .server import ArchiveServer, ArchiveStat
 
 
@@ -101,10 +104,33 @@ class AsyncArchiveServer:
     # bridge
     # ------------------------------------------------------------------
 
-    def _bridged_call(self, fn, *args, **kwargs):
+    def _bridged_call(self, ctx, t_submit, fn, *args, **kwargs):
         with self._bridge_lock:
             self._bridge_started += 1
-        return fn(*args, **kwargs)
+        # Bridge queue wait: loop-side submit -> bridge-thread start. The
+        # histogram is always on (it is the "bridge pool saturated" signal);
+        # the span exists only while tracing and joins the caller's trace
+        # via the context captured on the event loop.
+        t0 = time.perf_counter()
+        _obs_hist.observe("bridge.queue_wait", t0 - t_submit)
+        if ctx is None and not _obs_trace.tracing_enabled():
+            return fn(*args, **kwargs)
+        # `attach` alone propagates the caller's context into this bridge
+        # thread (the bridged read's own spans parent under the gateway
+        # request); the bridge hop itself is recorded post-hoc, which keeps
+        # the warm path at one completed-span append instead of a live Span.
+        with _obs_trace.attach(ctx):
+            t1 = time.perf_counter()
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                _obs_trace.record_span(
+                    "bridge.call",
+                    t1,
+                    time.perf_counter() - t1,
+                    {"queue_wait_s": round(t0 - t_submit, 6)},
+                    parent=ctx,
+                )
 
     async def _run(self, fn, *args, **kwargs):
         """Await ``fn(*args)`` on the bridge, propagating cancellation.
@@ -123,7 +149,16 @@ class AsyncArchiveServer:
         with self._bridge_lock:
             self._bridge_submitted += 1
         try:
-            fut = self._bridge.submit(partial(self._bridged_call, fn, *args, **kwargs))
+            fut = self._bridge.submit(
+                partial(
+                    self._bridged_call,
+                    _obs_trace.capture(),
+                    time.perf_counter(),
+                    fn,
+                    *args,
+                    **kwargs,
+                )
+            )
         except BaseException:
             with self._bridge_lock:
                 self._bridge_submitted -= 1
@@ -214,8 +249,10 @@ class AsyncArchiveServer:
         return await self._run(self._server.size, handle)
 
     def metrics(self) -> Dict[str, Any]:
-        """Fleet snapshot (sync: already non-blocking by design)."""
-        return self._server.metrics()
+        """Fleet snapshot + this bridge's books (sync: non-blocking)."""
+        snap = self._server.metrics()
+        snap["bridge"] = self.bridge_stats()
+        return snap
 
     # ------------------------------------------------------------------
     # lifecycle

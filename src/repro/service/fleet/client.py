@@ -25,6 +25,7 @@ from typing import Any, Dict, Iterator, Optional, Set
 
 from ...core.errors import RemoteFileChangedError, RemoteIOError
 from ...core.filereader import FileReader, check_pread_args
+from ...obs import trace as _obs_trace
 from ..gateway.client import GatewayClient, GatewayError
 
 
@@ -184,14 +185,19 @@ class FleetClient(FileReader):
     def pread(self, offset: int, size: int) -> bytes:
         check_pread_args(offset, size)
         exclude: Set[str] = set()
-        while True:
-            gw = self._current()
-            try:
-                return gw.pread(offset, size)
-            except BaseException as exc:
-                if not _is_peer_failure(exc):
-                    raise
-                self._failover(gw, exclude)  # raises FleetUnavailable at end
+        with _obs_trace.span("fleet.pread", {"offset": offset, "size": size}) as sp:
+            while True:
+                gw = self._current()
+                try:
+                    return gw.pread(offset, size)
+                except BaseException as exc:
+                    if not _is_peer_failure(exc):
+                        raise
+                    with _obs_trace.span(
+                        "fleet.failover", {"from_peer": self.peer, "error": type(exc).__name__}
+                    ):
+                        self._failover(gw, exclude)  # raises FleetUnavailable at end
+                    sp.set_attr("failovers", len(exclude))
 
     def size(self) -> int:
         exclude: Set[str] = set()

@@ -50,6 +50,8 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Any, Deque, Dict, Optional, Tuple
 
+from ...obs import hist as _obs_hist
+
 
 class AdmissionDenied(Exception):
     """Tenant over in-flight + queue-depth budget; retry after a delay."""
@@ -194,6 +196,7 @@ class TenantAdmission:
         fut: asyncio.Future = asyncio.get_running_loop().create_future()
         gate.waiters.append(fut)
         gate.waiting += 1
+        t_wait = time.perf_counter()
         try:
             # release() resolves the future *with the slot already
             # transferred* (in_flight stays constant across the handoff), so
@@ -210,6 +213,9 @@ class TenantAdmission:
             raise
         finally:
             gate.waiting -= 1
+            # Only queued admissions land here; the fast path is untimed
+            # (the gateway's gateway.admission_wait timer covers both).
+            _obs_hist.observe("admission.queue_wait", time.perf_counter() - t_wait)
 
     def release(self, tenant: str) -> None:
         """Return one slot: hand it to the eldest live waiter, else free it.

@@ -46,6 +46,7 @@ from typing import Any, Dict, Iterator, Optional
 from ...core.errors import RemoteFileChangedError, RemoteIOError
 from ...core.filereader import FileReader, check_pread_args
 from ...core.remote import RemoteFileReader, parse_retry_after
+from ...obs import trace as _obs_trace
 
 
 class GatewayError(RemoteIOError):
@@ -327,6 +328,11 @@ class GatewayClient(FileReader):
         headers = dict(self._headers)
         if body is not None:
             headers["Content-Type"] = "application/json"
+        # Management verbs join the caller's trace the same way the data path
+        # does (RemoteFileReader injects this inside core.remote).
+        tp = _obs_trace.current_traceparent()
+        if tp is not None:
+            headers.setdefault(_obs_trace.TRACEPARENT_HEADER, tp)
         conn = self._connect()
         try:
             conn.request(method, path, body=body, headers=headers)

@@ -36,10 +36,16 @@ import asyncio
 import json
 import os
 import threading
+import time
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Tuple
+from urllib.parse import parse_qs
 
 from ...core.remote import is_remote_url
+from ...obs import hist as _obs_hist
+from ...obs import trace as _obs_trace
+from ...obs.prom import render_prometheus
+from ...obs.sanitize import sanitize_snapshot
 from ..async_server import AsyncArchiveServer
 from ..index_store import _is_key
 from ..server import ArchiveServer
@@ -64,6 +70,7 @@ class _Request:
     path: str
     headers: Dict[str, str]  # keys lower-cased
     body: bytes
+    query: str = ""  # raw query string, no leading '?'
 
 
 class _BadRequest(Exception):
@@ -367,6 +374,34 @@ class GatewayServer:
         snap["admission"] = self.admission.snapshot()
         return snap
 
+    async def _serve_metrics(self, req: _Request, writer) -> None:
+        """``GET /v1/metrics`` (JSON by default) / ``GET /metrics``
+        (Prometheus text by default — scrapers hitting the conventional
+        path never send a query string). Both honor an explicit
+        ``?format=json|prometheus``.
+
+        The snapshot crosses the wire boundary through `sanitize_snapshot`
+        so whatever instrumented layers stuffed into their stats dicts
+        (tuple keys, sets, NaNs, numpy scalars) serializes deterministically.
+        """
+        snap = sanitize_snapshot(self.metrics())
+        default = "prometheus" if req.path.rstrip("/") == "/metrics" else "json"
+        fmt = parse_qs(req.query).get("format", [default])[-1].lower()
+        if fmt == "prometheus":
+            body = render_prometheus(snap).encode()
+            await self._send(
+                writer, 200,
+                {"Content-Type": "text/plain; version=0.0.4; charset=utf-8"},
+                body,
+            )
+            return
+        if fmt != "json":
+            await self._send_error(
+                writer, 400, "unknown metrics format %r (json|prometheus)" % fmt
+            )
+            return
+        await self._send_json(writer, 200, snap)
+
     # ------------------------------------------------------------------
     # connection handling
     # ------------------------------------------------------------------
@@ -497,7 +532,8 @@ class GatewayServer:
             if length > MAX_BODY_BYTES:
                 raise _BadRequest(413, "request body too large")
             body = await asyncio.wait_for(reader.readexactly(length), self.idle_timeout)
-        return _Request(method.upper(), path.split("?", 1)[0], headers, body)
+        path, _, query = path.partition("?")
+        return _Request(method.upper(), path, headers, body, query)
 
     # ------------------------------------------------------------------
     # response plumbing
@@ -556,18 +592,53 @@ class GatewayServer:
     # ------------------------------------------------------------------
 
     async def _dispatch(self, req: _Request, writer) -> bool:
-        """Route one request; returns False when the connection must close."""
+        """Route one request; returns False when the connection must close.
+
+        An incoming ``traceparent`` header adopts the caller's trace: the
+        per-request span (and everything it fans out to — admission wait,
+        bridge hop, executor run, remote range-GETs) parents under the
+        remote caller's span, so a FleetClient read that fails over across
+        two gateways stitches into one trace. The contextvar set here is
+        task-local (one asyncio task per request), so concurrent requests
+        never cross-contaminate.
+        """
+        parent = _obs_trace.parse_traceparent(
+            req.headers.get(_obs_trace.TRACEPARENT_HEADER)
+        )
+        with _obs_trace.attach(parent), _obs_trace.timed(
+            "gateway.request", {"method": req.method, "path": req.path}, parent=parent
+        ):
+            return await self._dispatch_routed(req, writer)
+
+    async def _dispatch_routed(self, req: _Request, writer) -> bool:
         keep = req.headers.get("connection", "").lower() != "close"
         parts = [p for p in req.path.split("/") if p]
         try:
-            if parts[:2] == ["v1", "metrics"] and req.method == "GET":
-                await self._send_json(writer, 200, self.metrics())
+            # /metrics is the conventional Prometheus scrape path; /v1/metrics
+            # the API-shaped one. Both are admission-exempt (operators must be
+            # able to look at an overloaded gateway).
+            if req.method == "GET" and parts in (["v1", "metrics"], ["metrics"]):
+                await self._serve_metrics(req, writer)
                 return keep
             if parts[:2] != ["v1", "archives"]:
                 await self._send_error(writer, 404, "no such route: %s" % req.path)
                 return keep
             tenant = self.admission.resolve(req.headers.get("authorization"))
+            # Post-hoc span (not a live one): the admission wait is over by
+            # the time anything could parent under it, and on the warm path
+            # a completed-span record is about half the price of a Span.
+            # `record_span` observes the histogram itself, so the disabled
+            # branch keeps the always-on boundary timer without double
+            # counting.
+            t0_adm = time.perf_counter()
             await self.admission.acquire(tenant)
+            wait_adm = time.perf_counter() - t0_adm
+            if _obs_trace.tracing_enabled():
+                _obs_trace.record_span(
+                    "gateway.admission_wait", t0_adm, wait_adm, {"tenant": tenant}
+                )
+            else:
+                _obs_hist.observe("gateway.admission_wait", wait_adm)
             try:
                 return await self._dispatch_archives(req, writer, parts, tenant, keep)
             finally:

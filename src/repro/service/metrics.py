@@ -73,6 +73,7 @@ def collect(
     service: Optional[Mapping[str, Any]] = None,
     engine=None,
     transcode=None,
+    obs: Optional[Mapping[str, Any]] = None,
 ) -> Dict[str, Any]:
     """One service-wide snapshot. All sections are optional except readers.
 
@@ -100,12 +101,22 @@ def collect(
         out["engine"] = engine.stats()
     if transcode is not None:
         out["transcode"] = transcode.snapshot()
+    if obs is not None:
+        # Tracing/histogram/slow-read section (repro.obs): the server passes
+        # the already-snapshotted dict so collect stays side-effect free.
+        out["obs"] = dict(obs)
     return out
 
 
 def format_summary(snapshot: Mapping[str, Any]) -> str:
     """Human-readable one-screen summary of a `collect()` snapshot."""
     lines = []
+    if "ts" in snapshot or "uptime_s" in snapshot:
+        lines.append(
+            "snapshot #%d at ts=%.3f, uptime %.1fs"
+            % (snapshot.get("snapshot_seq", 0), snapshot.get("ts", 0.0),
+               snapshot.get("uptime_s", 0.0))
+        )
     fleet = snapshot.get("fleet", {})
     f = fleet.get("fetcher", {})
     lines.append(
@@ -234,6 +245,23 @@ def format_summary(snapshot: Mapping[str, Any]) -> str:
                    st.get("sent", 0), st.get("total", 0),
                    100.0 * st.get("sent", 0) / total)
             )
+    obs = snapshot.get("obs")
+    if obs is not None:
+        tracing = obs.get("tracing", {})
+        hists = obs.get("histograms", {})
+        rr = hists.get("server.read_range")
+        line = "obs: tracing %s (%d spans recorded)" % (
+            "on" if tracing.get("enabled") else "off",
+            tracing.get("recorded", 0),
+        )
+        if rr and rr.get("count"):
+            line += ", read_range p50=%.1fms p99=%.1fms over %d" % (
+                rr["p50_s"] * 1e3, rr["p99_s"] * 1e3, rr["count"]
+            )
+        slow = obs.get("slow_requests") or []
+        if slow:
+            line += ", %d slow request(s) logged" % len(slow)
+        lines.append(line)
     router = snapshot.get("router")
     if router is not None:
         membership = router.get("membership", {})

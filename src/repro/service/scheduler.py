@@ -58,8 +58,11 @@ import threading
 import time
 from collections import OrderedDict, deque
 from concurrent.futures import Future
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, Optional, Tuple
+
+from ..obs import hist as _obs_hist
+from ..obs import trace as _obs_trace
 
 #: Default deficit replenishment per round-robin visit. One quantum ~ one
 #: small indexed-chunk task, so light tenants dispatch every visit while a
@@ -78,6 +81,11 @@ class _Task:
     cost: int
     priority: bool
     tenant: str = ""  # owning queue (runtime observation needs it post-dispatch)
+    #: Trace context captured at submit (None while tracing is disabled) —
+    #: the worker reinstates it so a task's spans join the submitter's trace
+    #: across the thread hop.
+    ctx: Optional[Tuple[str, str]] = None
+    t_submit: float = field(default=0.0)  # perf_counter at enqueue
 
 
 class _TenantQueue:
@@ -191,7 +199,8 @@ class FairExecutor:
                 raise RuntimeError("cannot submit after shutdown")
             self._seq += 1
             task = _Task(
-                self._seq, fut, fn, args, kwargs, _view, cost, _priority, tenant
+                self._seq, fut, fn, args, kwargs, _view, cost, _priority, tenant,
+                ctx=_obs_trace.capture(), t_submit=time.perf_counter(),
             )
             q = self._queues.setdefault(tenant, _TenantQueue())
             (q.pri if _priority else q.batch).append(task)
@@ -363,13 +372,36 @@ class FairExecutor:
                     self._tasks_cancelled += 1
                 continue
             t0 = time.perf_counter()
+            # Queue wait (enqueue -> dispatch) is the scheduler's own
+            # contribution to read latency — always histogrammed; the run
+            # span below only exists while tracing is on.
+            _obs_hist.observe("executor.queue_wait", t0 - task.t_submit)
+            if _obs_trace.tracing_enabled():
+                run_cm = _obs_trace.span(
+                    "executor.run",
+                    {
+                        "tenant": task.tenant,
+                        "cost": task.cost,
+                        "priority": task.priority,
+                        "queue_wait_s": round(t0 - task.t_submit, 6),
+                    },
+                    parent=task.ctx,
+                )
+            else:
+                run_cm = None
             try:
-                result = task.fn(*task.args, **task.kwargs)
+                if run_cm is not None:
+                    with _obs_trace.attach(task.ctx), run_cm:
+                        result = task.fn(*task.args, **task.kwargs)
+                else:
+                    result = task.fn(*task.args, **task.kwargs)
             except BaseException as exc:  # noqa: BLE001 - mirror Executor semantics
                 fut.set_exception(exc)
             else:
                 fut.set_result(result)
             runtime_s = time.perf_counter() - t0
+            if run_cm is None:
+                _obs_hist.observe("executor.run", runtime_s)
             with self._cond:
                 self._tasks_done += 1
                 if self.cost_correction:

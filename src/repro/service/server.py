@@ -53,11 +53,15 @@ bridges these calls off the event loop and adds a concurrent ``read_many``.
 from __future__ import annotations
 
 import threading
+import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core.reader import ParallelGzipReader
 from ..core.remote import RemoteFileReader, is_remote_url
+from ..obs import hist as _obs_hist
+from ..obs import trace as _obs_trace
 from . import metrics as _metrics
 from .cache_pool import PREFETCH, CachePool
 from .index_store import IndexStore
@@ -151,6 +155,8 @@ class ArchiveServer:
         transcode: Any = "auto",
         transcode_options: Optional[Dict[str, Any]] = None,
         cost_correction: bool = True,
+        slow_request_s: Optional[float] = 1.0,
+        slow_log_entries: int = 32,
     ):
         #: kwargs forwarded to every RemoteFileReader the server opens for
         #: http(s):// sources: auth headers, block_size/cache_blocks,
@@ -246,6 +252,18 @@ class ArchiveServer:
         self._reads_in_flight = 0
         self._reads_started = 0
         self._reads_serialized = 0
+        # Snapshot provenance (metrics satellite): wall/monotonic anchors so
+        # scrapers can compute rates and detect restarts, plus a sequence
+        # number that makes snapshot ordering explicit.
+        self._started_wall = time.time()
+        self._started_mono = time.monotonic()
+        self._snapshot_seq = 0
+        # Threshold-gated slow-request log: reads slower than
+        # ``slow_request_s`` (None disables) land here with their span tree
+        # attached when tracing is on. Bounded; newest wins.
+        self._slow_request_s = slow_request_s
+        self._slow_lock = threading.Lock()
+        self._slow_log: deque = deque(maxlen=max(1, slow_log_entries))
 
     # ------------------------------------------------------------------
     # registry
@@ -422,39 +440,87 @@ class ArchiveServer:
         if offset < 0 or size < 0:
             raise ValueError("offset and size must be non-negative")
         entry = self._entry(handle)
-        reader = entry.reader
-        if reader is None:
-            reader = self._ensure_reader(entry)
-        with entry.cond:
-            # Register under the close handshake: after this, close() waits
-            # for us before tearing the reader (and its fd) down.
-            if entry.closed:
-                raise KeyError("unknown or closed handle %r" % handle)
-            entry.in_flight += 1
-        with self._gauge_lock:
-            self._reads_in_flight += 1
-            self._reads_started += 1
-            if serialized:
-                self._reads_serialized += 1
-        try:
-            if serialized:
-                with entry.lock:
-                    reader.seek(offset)
-                    data = reader.read(size)
-            else:
-                data = reader.pread(offset, size)
-        finally:
-            with self._gauge_lock:
-                self._reads_in_flight -= 1
+        # Always-on latency boundary: the duration histogram records even
+        # while tracing is off; with tracing on this is the read's span (the
+        # root, unless a gateway request is already the current context).
+        read_span = _obs_trace.timed(
+            "server.read_range",
+            {
+                "handle": handle,
+                "tenant": entry.tenant,
+                "offset": offset,
+                "size": size,
+                "serialized": serialized,
+            },
+        )
+        t0 = time.perf_counter()
+        with read_span:
+            reader = entry.reader
+            if reader is None:
+                reader = self._ensure_reader(entry)
             with entry.cond:
-                entry.in_flight -= 1
-                if entry.in_flight == 0:
-                    entry.cond.notify_all()
+                # Register under the close handshake: after this, close()
+                # waits for us before tearing the reader (and its fd) down.
+                if entry.closed:
+                    raise KeyError("unknown or closed handle %r" % handle)
+                entry.in_flight += 1
+            with self._gauge_lock:
+                self._reads_in_flight += 1
+                self._reads_started += 1
+                if serialized:
+                    self._reads_serialized += 1
+            try:
+                if serialized:
+                    with entry.lock:
+                        reader.seek(offset)
+                        data = reader.read(size)
+                else:
+                    data = reader.pread(offset, size)
+            finally:
+                with self._gauge_lock:
+                    self._reads_in_flight -= 1
+                with entry.cond:
+                    entry.in_flight -= 1
+                    if entry.in_flight == 0:
+                        entry.cond.notify_all()
+        duration = time.perf_counter() - t0
+        if self._slow_request_s is not None and duration >= self._slow_request_s:
+            self._log_slow_read(entry, offset, size, duration, read_span)
         with entry.cond:
             entry.reads += 1
             entry.bytes_served += len(data)
         self._maybe_transcode(entry, reader)
         return data
+
+    def _log_slow_read(
+        self, entry: _Entry, offset: int, size: int, duration: float, read_span
+    ) -> None:
+        """Record one over-threshold read; attach its span tree if traced."""
+        record: Dict[str, Any] = {
+            "ts": time.time(),
+            "handle": entry.handle,
+            "tenant": entry.tenant,
+            "offset": offset,
+            "size": size,
+            "duration_s": round(duration, 6),
+            "trace_id": getattr(read_span, "trace_id", None),
+        }
+        if record["trace_id"] is not None:
+            tree = _obs_trace.span_tree(record["trace_id"])
+            t_first = tree[0]["ts"] if tree else 0.0
+            record["spans"] = [
+                {
+                    "name": s["name"],
+                    "start_offset_s": round(s["ts"] - t_first, 6),
+                    "dur_s": round(s["dur_s"], 6),
+                    "span_id": s["span_id"],
+                    "parent_id": s["parent_id"],
+                    "thread": s["thread_name"],
+                }
+                for s in tree
+            ]
+        with self._slow_lock:
+            self._slow_log.append(record)
 
     def read_many(
         self, requests: Sequence[Tuple[str, int, int]]
@@ -698,7 +764,17 @@ class ArchiveServer:
                 "reads_started": self._reads_started,
                 "reads_serialized": self._reads_serialized,
             }
-        return _metrics.collect(
+            self._snapshot_seq += 1
+            seq = self._snapshot_seq
+        with self._slow_lock:
+            slow = list(self._slow_log)
+        obs_section = {
+            "tracing": _obs_trace.tracing_stats(),
+            "histograms": _obs_hist.histogram_snapshots(),
+            "slow_request_threshold_s": self._slow_request_s,
+            "slow_requests": slow,
+        }
+        snap = _metrics.collect(
             reader_reports=reports,
             per_file=per_file,
             pool=self.cache_pool,
@@ -707,4 +783,12 @@ class ArchiveServer:
             service=service,
             engine=self.device_engine,
             transcode=self.transcoder,
+            obs=obs_section,
         )
+        # Snapshot provenance: wall timestamp for scrape alignment, a
+        # monotonic uptime for rate windows, and a sequence number whose
+        # reset (alongside uptime) is the restart signal.
+        snap["ts"] = time.time()
+        snap["uptime_s"] = round(time.monotonic() - self._started_mono, 3)
+        snap["snapshot_seq"] = seq
+        return snap

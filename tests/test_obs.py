@@ -1,0 +1,677 @@
+"""Observability subsystem: spans, histograms, Prometheus exposition.
+
+Covers the tracer units (context propagation across threads and the wire,
+ring-buffer capacity, Chrome dump format), the log-bucket histogram math,
+snapshot sanitization, exposition-format validity, the metrics satellites
+(ts/uptime/snapshot_seq, JSON round-trips of every layer's snapshot), the
+documented counter invariants across sync/async/gateway serving paths, and
+the acceptance trace: a fleet pread that fails over mid-operation yields
+ONE stitched trace whose spans cross two gateways via the traceparent
+header.
+
+Everything is hermetic (loopback only); gateway/fleet tests carry the
+``gateway`` marker like the rest of the wire suite.
+"""
+
+import asyncio
+import json
+import math
+import re
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import gzip_bytes, make_text
+from repro import obs
+from repro.obs import hist as obs_hist
+from repro.obs import trace as obs_trace
+from repro.obs.hist import BUCKET_BOUNDS_US, LogHistogram, bucket_index, merge_snapshots
+from repro.obs.prom import render_prometheus
+from repro.obs.sanitize import sanitize_snapshot
+from repro.service import ArchiveServer, AsyncArchiveServer
+from repro.service.metrics import format_summary
+
+RUN_TIMEOUT = 60
+
+
+def _run(coro):
+    return asyncio.run(asyncio.wait_for(coro, RUN_TIMEOUT))
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracing():
+    """Every test starts and ends with tracing disabled and empty state —
+    the tracer is process-global, so leakage would couple tests."""
+    obs_trace.disable_tracing()
+    obs_trace.reset_tracing()
+    obs_hist.reset_histograms()
+    yield
+    obs_trace.disable_tracing()
+    obs_trace.reset_tracing()
+    obs_hist.reset_histograms()
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0x0B5)
+    data = make_text(rng, 300_000)
+    return data, gzip_bytes(data, 6)
+
+
+# ---------------------------------------------------------------------------
+# tracer units
+# ---------------------------------------------------------------------------
+
+def test_disabled_span_is_shared_noop():
+    s1 = obs_trace.span("a", {"k": 1})
+    s2 = obs_trace.span("b")
+    assert s1 is s2  # one shared object: zero allocation while disabled
+    with s1 as sp:
+        sp.set_attr("x", 1)  # must not raise
+        assert obs_trace.capture() is None
+        assert obs_trace.current_traceparent() is None
+    assert obs_trace.recorded_spans() == []
+
+
+def test_span_nesting_assigns_one_trace():
+    obs_trace.enable_tracing()
+    with obs_trace.span("outer") as outer:
+        with obs_trace.span("mid") as mid:
+            with obs_trace.span("inner") as inner:
+                pass
+    spans = {s["name"]: s for s in obs_trace.recorded_spans()}
+    assert set(spans) == {"outer", "mid", "inner"}
+    assert spans["outer"]["parent_id"] is None
+    assert spans["mid"]["parent_id"] == outer.span_id
+    assert spans["inner"]["parent_id"] == mid.span_id
+    assert len({s["trace_id"] for s in spans.values()}) == 1
+    assert inner.trace_id == outer.trace_id
+    # durations nest: outer covers mid covers inner
+    assert spans["outer"]["dur_s"] >= spans["mid"]["dur_s"] >= spans["inner"]["dur_s"]
+
+
+def test_span_records_error_attr():
+    obs_trace.enable_tracing()
+    with pytest.raises(ValueError):
+        with obs_trace.span("boom"):
+            raise ValueError("x")
+    (rec,) = obs_trace.recorded_spans()
+    assert rec["attrs"]["error"] == "ValueError"
+
+
+def test_traceparent_roundtrip():
+    obs_trace.enable_tracing()
+    with obs_trace.span("root") as sp:
+        tp = obs_trace.current_traceparent()
+        assert re.fullmatch(r"00-[0-9a-f]{32}-[0-9a-f]{16}-01", tp)
+        assert obs_trace.parse_traceparent(tp) == (sp.trace_id, sp.span_id)
+    assert obs_trace.current_traceparent() is None
+
+
+@pytest.mark.parametrize("bad", [
+    None, "", "garbage", "00-short-short-01",
+    "00-" + "0" * 32 + "-" + "1" * 16 + "-01",   # all-zero trace id
+    "00-" + "1" * 32 + "-" + "0" * 16 + "-01",   # all-zero span id
+    "00-" + "g" * 32 + "-" + "1" * 16 + "-01",   # non-hex
+])
+def test_parse_traceparent_rejects_malformed(bad):
+    assert obs_trace.parse_traceparent(bad) is None
+
+
+def test_capture_attach_carries_context_across_threads():
+    obs_trace.enable_tracing()
+    carried = {}
+
+    def worker(ctx):
+        with obs_trace.attach(ctx), obs_trace.span("child"):
+            carried["tp"] = obs_trace.current_traceparent()
+
+    with obs_trace.span("parent") as parent:
+        t = threading.Thread(target=worker, args=(obs_trace.capture(),))
+        t.start()
+        t.join(timeout=10)
+    spans = {s["name"]: s for s in obs_trace.recorded_spans()}
+    assert spans["child"]["trace_id"] == parent.trace_id
+    assert spans["child"]["parent_id"] == parent.span_id
+    assert spans["child"]["thread"] != spans["parent"]["thread"]
+
+
+def test_ring_buffer_capacity_and_drop_accounting():
+    obs_trace.enable_tracing(capacity=8)
+    for i in range(20):
+        with obs_trace.span("s%d" % i):
+            pass
+    stats = obs_trace.tracing_stats()
+    assert stats["recorded"] == 8 and stats["recorded_total"] == 20
+    assert stats["dropped"] == 12
+    names = [s["name"] for s in obs_trace.recorded_spans()]
+    assert names == ["s%d" % i for i in range(12, 20)]  # oldest evicted
+
+
+def test_dump_trace_chrome_format(tmp_path):
+    obs_trace.enable_tracing()
+    with obs_trace.span("work", {"size": 7}):
+        time.sleep(0.001)
+    path = tmp_path / "trace.json"
+    trace = obs_trace.dump_trace(str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == trace
+    events = trace["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    slices = [e for e in events if e["ph"] == "X"]
+    assert meta and meta[0]["name"] == "thread_name"
+    (ev,) = slices
+    assert ev["name"] == "work" and ev["dur"] >= 1000  # microseconds
+    assert ev["args"]["size"] == 7
+    assert re.fullmatch(r"[0-9a-f]{32}", ev["args"]["trace_id"])
+
+
+def test_timed_observes_histogram_even_while_disabled():
+    with obs_trace.timed("boundary"):
+        pass
+    snap = obs_hist.histogram_snapshots()
+    assert snap["boundary"]["count"] == 1
+    assert obs_trace.recorded_spans() == []  # no span while disabled
+    obs_trace.enable_tracing()
+    with obs_trace.timed("boundary"):
+        pass
+    assert [s["name"] for s in obs_trace.recorded_spans()] == ["boundary"]
+    assert obs_hist.histogram_snapshots()["boundary"]["count"] == 2
+
+
+# ---------------------------------------------------------------------------
+# histogram math
+# ---------------------------------------------------------------------------
+
+def test_bucket_index_bounds():
+    # bucket i covers (2^(i-1), 2^i] microseconds
+    assert bucket_index(0.0) == 0
+    assert bucket_index(1e-6) == 0
+    assert bucket_index(1.5e-6) == 1
+    assert bucket_index(2e-6) == 1
+    assert bucket_index(2.0001e-6) == 2
+    assert bucket_index(1.0) == 20          # 2^20 µs ≈ 1.05 s
+    assert bucket_index(1e9) == len(BUCKET_BOUNDS_US)  # +Inf overflow
+
+
+def test_histogram_snapshot_percentiles_are_conservative():
+    h = LogHistogram()
+    values = [3e-6] * 50 + [100e-6] * 40 + [5e-3] * 10
+    for v in values:
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 100
+    assert snap["sum_s"] == pytest.approx(sum(values))
+    # reported pXX is the covering bucket's upper bound: >= true value
+    assert snap["p50_s"] >= 3e-6 and snap["p50_s"] <= 8e-6
+    assert snap["p90_s"] >= 100e-6 and snap["p90_s"] <= 256e-6
+    assert snap["p99_s"] >= 5e-3
+    # cumulative buckets: monotone, last equals count
+    cums = [c for _, c in snap["buckets"]]
+    assert cums == sorted(cums)
+    assert cums[-1] == 100
+    bounds = [b for b, _ in snap["buckets"]]
+    assert bounds == sorted(bounds)
+
+
+def test_histogram_merge_snapshot_equals_single_stream():
+    a, b, both = LogHistogram(), LogHistogram(), LogHistogram()
+    rng = np.random.default_rng(7)
+    for v in rng.uniform(1e-6, 1e-2, 200):
+        a.observe(v)
+        both.observe(v)
+    for v in rng.uniform(1e-5, 1.0, 100):
+        b.observe(v)
+        both.observe(v)
+    merged = merge_snapshots(a.snapshot(), b.snapshot())
+    want = both.snapshot()
+    assert merged["count"] == want["count"]
+    assert merged["sum_s"] == pytest.approx(want["sum_s"])
+    assert merged["buckets"] == want["buckets"]
+    assert (merged["p50_s"], merged["p99_s"]) == (want["p50_s"], want["p99_s"])
+
+
+# ---------------------------------------------------------------------------
+# sanitize
+# ---------------------------------------------------------------------------
+
+def test_sanitize_snapshot_makes_everything_json_safe():
+    raw = {
+        ("chunk", 3): {"set": {1, 2}, "nan": float("nan"), "inf": float("inf")},
+        "np": np.int64(7),
+        "npf": np.float32(1.5),
+        "bytes": b"\xff\x00ab",
+        "tuple": (1, 2.0, "x"),
+        "ok": {"n": 3, "flag": True, "none": None},
+    }
+    clean = sanitize_snapshot(raw)
+    text = json.dumps(clean)  # must not raise
+    back = json.loads(text)
+    assert back["('chunk', 3)"]["nan"] is None
+    assert back["('chunk', 3)"]["inf"] is None
+    assert sorted(back["('chunk', 3)"]["set"]) == [1, 2]
+    assert back["np"] == 7 and back["npf"] == 1.5
+    assert back["tuple"] == [1, 2.0, "x"]
+    assert back["ok"] == {"n": 3, "flag": True, "none": None}
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+
+# One exposition line: name{labels} value  (value: int/float/exponent form)
+_PROM_LINE = re.compile(
+    r"^[a-zA-Z_][a-zA-Z0-9_]*"
+    r"(\{[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\"(,[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\")*\})?"
+    r" -?[0-9.e+-]+$"
+)
+
+
+def _assert_valid_exposition(text):
+    assert text.endswith("\n")
+    for line in text.rstrip("\n").split("\n"):
+        if line.startswith("#"):
+            assert re.match(r"^# (TYPE|HELP) [a-zA-Z_][a-zA-Z0-9_]*", line), line
+        else:
+            assert _PROM_LINE.match(line), "bad exposition line: %r" % line
+
+
+def test_render_prometheus_names_labels_and_histograms():
+    h = LogHistogram()
+    for v in (1e-5, 2e-4, 3e-3):
+        h.observe(v)
+    snap = {
+        "ts": 123.5,
+        "scheduler": {"submitted": 10, "done": 10, "fairness": "drr"},
+        "per_file": {"f0": {"reads": 4, "codec": "gzip"}},
+        "admission": {"t1": {"admitted": 2, "in_flight": 0}},
+        "obs": {
+            "tracing": {"enabled": False, "recorded": 0},
+            "histograms": {"server.read_range": h.snapshot()},
+            "slow_requests": [{"trace_id": "x", "spans": []}],
+        },
+    }
+    text = render_prometheus(snap)
+    _assert_valid_exposition(text)
+    assert "repro_ts 123.5" in text
+    # sibling string field rides along as a label on the numeric samples
+    assert 'repro_scheduler_submitted{fairness="drr"} 10' in text
+    # string field became a label, not a sample; per_file key became handle=
+    assert 'repro_file_reads{codec="gzip",handle="f0"} 4' in text
+    assert "fairness" not in [l.split("{")[0] for l in text.splitlines()]
+    assert 'repro_admission_admitted{tenant="t1"} 2' in text
+    # histogram family: TYPE histogram, cumulative buckets, +Inf, sum/count
+    assert "# TYPE repro_latency_seconds histogram" in text
+    bucket_lines = [
+        l for l in text.splitlines()
+        if l.startswith("repro_latency_seconds_bucket") and "server.read_range" in l
+    ]
+    assert bucket_lines[-1].startswith(
+        'repro_latency_seconds_bucket{le="+Inf",span="server.read_range"} 3'
+    )
+    cums = [int(l.rsplit(" ", 1)[1]) for l in bucket_lines]
+    assert cums == sorted(cums) and cums[-1] == 3
+    assert 'repro_latency_seconds_count{span="server.read_range"} 3' in text
+    assert 'repro_latency_seconds_sum{span="server.read_range"}' in text
+    # the slow-request span trees are not samples
+    assert "slow_requests" not in text
+
+
+def test_render_prometheus_drops_non_finite_and_renders_bools():
+    text = render_prometheus({"a": float("nan"), "b": True, "c": float("inf")})
+    _assert_valid_exposition(text)
+    assert "repro_a" not in text and "repro_c" not in text
+    assert "repro_b 1" in text
+
+
+# ---------------------------------------------------------------------------
+# metrics satellites: ts/uptime/seq, summary line, slow-request log
+# ---------------------------------------------------------------------------
+
+def test_server_metrics_ts_uptime_and_monotone_seq(corpus):
+    data, comp = corpus
+    with ArchiveServer(cache_budget_bytes=2 << 20, max_workers=2) as server:
+        h = server.open(comp)
+        server.read_range(h, 100, 1000)
+        m1 = server.metrics()
+        m2 = server.metrics()
+        assert m2["snapshot_seq"] == m1["snapshot_seq"] + 1
+        assert abs(m1["ts"] - time.time()) < 60
+        assert 0.0 <= m1["uptime_s"] <= m2["uptime_s"]
+        # the obs section is always present, with the read boundary timed
+        assert m1["obs"]["histograms"]["server.read_range"]["count"] >= 1
+        assert m1["obs"]["tracing"]["enabled"] is False
+        summary = format_summary(m2)
+        assert summary.startswith("snapshot #%d at ts=" % m2["snapshot_seq"])
+        assert "obs: tracing off" in summary
+        assert "read_range p50=" in summary
+
+
+def test_slow_request_log_attaches_span_tree(corpus):
+    data, comp = corpus
+    obs_trace.enable_tracing()
+    with ArchiveServer(
+        cache_budget_bytes=2 << 20, max_workers=2, slow_request_s=0.0
+    ) as server:
+        h = server.open(comp)
+        server.read_range(h, 0, 2000)
+        m = server.metrics()
+        slow = m["obs"]["slow_requests"]
+        assert len(slow) >= 1
+        entry = slow[-1]
+        assert entry["handle"] == h and entry["size"] == 2000
+        assert entry["duration_s"] >= 0.0
+        assert re.fullmatch(r"[0-9a-f]{32}", entry["trace_id"])
+        names = {s["name"] for s in entry["spans"]}
+        assert "server.read_range" in names
+        assert "reader.pread" in names  # the tree crosses into the core
+        json.dumps(m, default=str)  # the whole snapshot stays serializable
+
+
+def test_slow_request_log_disabled_with_none(corpus):
+    data, comp = corpus
+    with ArchiveServer(
+        cache_budget_bytes=2 << 20, max_workers=2, slow_request_s=None
+    ) as server:
+        h = server.open(comp)
+        server.read_range(h, 0, 2000)
+        assert server.metrics()["obs"]["slow_requests"] == []
+
+
+# ---------------------------------------------------------------------------
+# JSON serializability: every layer's snapshot round-trips
+# ---------------------------------------------------------------------------
+
+def _assert_json_roundtrip(snapshot, where):
+    clean = sanitize_snapshot(snapshot)
+    text = json.dumps(clean)
+    assert json.loads(text) == clean, where
+
+
+def test_every_layer_snapshot_is_json_serializable(corpus, tmp_path):
+    data, comp = corpus
+    with ArchiveServer(cache_budget_bytes=2 << 20, max_workers=2) as server:
+        h = server.open(comp)
+        server.read_range(h, 5000, 3000)
+        m = server.metrics()
+        # metrics() must be directly dumpable — sanitize must be a no-op
+        # guard for exotic stats, not a crutch the normal path depends on.
+        assert json.loads(json.dumps(m)) == json.loads(json.dumps(sanitize_snapshot(m)))
+        _assert_json_roundtrip(m, "ArchiveServer.metrics")
+        _assert_json_roundtrip(server.stat(h).as_dict(), "HandleStat.as_dict")
+    _assert_json_roundtrip(obs_trace.tracing_stats(), "tracing_stats")
+    _assert_json_roundtrip(obs_hist.histogram_snapshots(), "histograms")
+
+
+@pytest.mark.gateway
+def test_gateway_and_fleet_snapshots_are_json_serializable(corpus, tmp_path):
+    from repro.service.fleet import FleetRouter
+    from repro.service.gateway import GatewayServer
+
+    data, comp = corpus
+    path = tmp_path / "a.gz"
+    path.write_bytes(comp)
+    with GatewayServer(cache_budget_bytes=2 << 20, max_workers=2) as gw:
+        router = FleetRouter([gw.url])
+        try:
+            c = router.open(str(path))
+            c.pread(0, 1000)
+            _assert_json_roundtrip(gw.metrics(), "GatewayServer.metrics")
+            _assert_json_roundtrip(router.snapshot(), "FleetRouter.snapshot")
+            _assert_json_roundtrip(c.stat(), "FleetClient.stat")
+            c.close()
+        finally:
+            router.close()
+
+
+# ---------------------------------------------------------------------------
+# counter invariants across serving paths
+# ---------------------------------------------------------------------------
+
+#: (section, counter) pairs that must never decrease between snapshots.
+_MONOTONE = [
+    ("scheduler", "submitted"), ("scheduler", "done"), ("scheduler", "cancelled"),
+    ("service", "reads_started"),
+    ("fleet.fetcher", "bytes_decompressed"), ("fleet.fetcher", "nominal_tasks"),
+]
+
+
+def _dig(snap, dotted):
+    node = snap
+    for part in dotted.split("."):
+        node = node[part]
+    return node
+
+
+def _check_books(snap, *, bridge=False):
+    sched = snap["scheduler"]
+    assert sched["submitted"] == sched["done"] + sched["cancelled"] + sched["queued"], sched
+    if bridge:
+        b = snap["bridge"]
+        assert b["submitted"] == b["started"] + b["cancelled"], b
+    eng = snap.get("engine")
+    if eng is not None:
+        for kind in ("replace", "crc"):
+            assert eng["fallbacks"].get(kind, 0) <= eng["requests"].get(kind, 0)
+    for dim in ("ts", "uptime_s", "snapshot_seq"):
+        assert dim in snap
+
+
+def _check_monotone(before, after):
+    for section, counter in _MONOTONE:
+        try:
+            b, a = _dig(before, section)[counter], _dig(after, section)[counter]
+        except KeyError:
+            continue
+        assert a >= b, "%s.%s went backwards: %s -> %s" % (section, counter, b, a)
+
+
+def _concurrent_reads(read_fn, n_threads=4, n_reads=8):
+    errors = []
+
+    def work(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(n_reads):
+                read_fn(int(rng.integers(0, 250_000)), 4096)
+        except BaseException as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=RUN_TIMEOUT)
+    assert not errors, errors
+
+
+def test_invariants_sync_path(corpus):
+    data, comp = corpus
+    with ArchiveServer(cache_budget_bytes=4 << 20, max_workers=3) as server:
+        h = server.open(comp)
+        server.read_range(h, 0, 1000)
+        before = server.metrics()
+        _check_books(before)
+        _concurrent_reads(lambda off, n: server.read_range(h, off, n))
+        after = server.metrics()
+        _check_books(after)
+        _check_monotone(before, after)
+        assert after["obs"]["histograms"]["server.read_range"]["count"] >= 33
+
+
+def test_invariants_async_path(corpus):
+    data, comp = corpus
+
+    async def scenario():
+        async with AsyncArchiveServer(
+            cache_budget_bytes=4 << 20, max_workers=3, front_end_threads=3
+        ) as srv:
+            h = await srv.open(comp)
+            await srv.read_range(h, 0, 1000)
+            before = srv.metrics()
+            _check_books(before, bridge=True)
+            await asyncio.gather(*(
+                srv.read_range(h, off, 4096)
+                for off in range(0, 240_000, 20_000)
+            ))
+            after = srv.metrics()
+            _check_books(after, bridge=True)
+            _check_monotone(before, after)
+            # every bridged call carries the queue-wait boundary
+            bqw = obs_hist.histogram_snapshots()["bridge.queue_wait"]
+            assert bqw["count"] >= after["bridge"]["started"]
+
+    _run(scenario())
+
+
+@pytest.mark.gateway
+def test_invariants_gateway_path(corpus, tmp_path):
+    from repro.service.gateway import GatewayClient, GatewayServer
+
+    data, comp = corpus
+    path = tmp_path / "inv.gz"
+    path.write_bytes(comp)
+    with GatewayServer(cache_budget_bytes=4 << 20, max_workers=3) as gw:
+        c = GatewayClient(gw.url, source=str(path), block_size=16 << 10, cache_blocks=1)
+        try:
+            c.pread(0, 1000)
+            before = gw.metrics()
+            _check_books(before, bridge=True)
+            _concurrent_reads(lambda off, n: c.pread(off, n), n_threads=3, n_reads=5)
+            after = gw.metrics()
+            _check_books(after, bridge=True)
+            _check_monotone(before, after)
+            assert after["gateway"]["reads"] > before["gateway"]["reads"]
+            # every request passed the admission-wait boundary timer
+            gh = obs_hist.histogram_snapshots()
+            assert gh["gateway.admission_wait"]["count"] >= after["gateway"]["reads"]
+            assert gh["gateway.request"]["count"] >= after["gateway"]["requests"] - 2
+        finally:
+            c.close()
+
+
+# ---------------------------------------------------------------------------
+# the wire: /v1/metrics?format=prometheus and /metrics alias
+# ---------------------------------------------------------------------------
+
+@pytest.mark.gateway
+def test_gateway_prometheus_exposition(corpus, tmp_path):
+    import http.client
+    import urllib.parse
+
+    from repro.service.gateway import GatewayClient, GatewayServer
+
+    data, comp = corpus
+    path = tmp_path / "prom.gz"
+    path.write_bytes(comp)
+    with GatewayServer(cache_budget_bytes=2 << 20, max_workers=2) as gw:
+        c = GatewayClient(gw.url, source=str(path))
+        try:
+            assert c.pread(100, 5000) == data[100:5100]
+        finally:
+            c.close()
+
+        def fetch(path_q):
+            netloc = urllib.parse.urlsplit(gw.url).netloc
+            conn = http.client.HTTPConnection(netloc, timeout=10)
+            try:
+                conn.request("GET", path_q)
+                resp = conn.getresponse()
+                return resp.status, resp.getheader("Content-Type"), resp.read()
+            finally:
+                conn.close()
+
+        status, ctype, body = fetch("/v1/metrics?format=prometheus")
+        assert status == 200 and ctype.startswith("text/plain")
+        text = body.decode()
+        _assert_valid_exposition(text)
+        assert "# TYPE repro_latency_seconds histogram" in text
+        assert 'repro_latency_seconds_bucket{le="+Inf",span="server.read_range"}' in text
+        assert re.search(r"repro_latency_seconds_count\{[^}]*\} [1-9]", text)
+        assert "repro_gateway_requests " in text
+        assert "repro_uptime_s " in text
+        # Bare /metrics is the conventional scrape path: exposition text by
+        # default — a Prometheus scrape config never sends ?format=.
+        status, ctype, body = fetch("/metrics")
+        assert status == 200 and ctype.startswith("text/plain")
+        _assert_valid_exposition(body.decode())
+        status, ctype, body = fetch("/metrics?format=json")
+        assert status == 200 and ctype.startswith("application/json")
+        # /v1/metrics default stays JSON, and it is the sanitized snapshot
+        status, ctype, body = fetch("/v1/metrics")
+        assert status == 200 and ctype.startswith("application/json")
+        snap = json.loads(body)
+        assert snap["snapshot_seq"] >= 1
+        # unknown formats are a client error, not a silent JSON fallback
+        status, _, _ = fetch("/v1/metrics?format=xml")
+        assert status == 400
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one stitched trace across a mid-operation fleet failover
+# ---------------------------------------------------------------------------
+
+@pytest.mark.gateway
+def test_fleet_failover_yields_one_stitched_trace(corpus, tmp_path):
+    from repro.service.fleet import FleetRouter
+    from repro.service.gateway import GatewayServer
+
+    data, comp = corpus
+    path = tmp_path / "stitch.gz"
+    path.write_bytes(comp)
+    gws = [
+        GatewayServer(cache_budget_bytes=4 << 20, max_workers=2).start()
+        for _ in range(3)
+    ]
+    router = FleetRouter([gw.url for gw in gws], eject_after=1)
+    try:
+        obs_trace.enable_tracing()
+        # tiny client cache so the post-kill pread must hit the wire
+        c = router.open(str(path), block_size=16 << 10, cache_blocks=1)
+        owner = c.peer
+        # One logical client operation: a cold read served by the owner,
+        # then — after the owner dies mid-session — a read that fails over.
+        # Everything under this root span must stitch into ONE trace.
+        with obs_trace.span("client.session") as root:
+            assert c.pread(0, 1000) == data[:1000]
+            next(gw for gw in gws if gw.url == owner).close()  # owner dies
+            assert c.pread(150_000, 1000) == data[150_000:151_000]
+        assert c.stats["failovers"] == 1
+        assert c.peer != owner
+        c.close()
+
+        spans = obs_trace.recorded_spans()
+        tree = [s for s in spans if s["trace_id"] == root.trace_id]
+        names = {s["name"] for s in tree}
+        # client side: the retry shell, the failover, and the wire hops
+        assert {"fleet.pread", "fleet.failover", "remote.range_get"} <= names
+        # server side, joined via the traceparent header: front door,
+        # admission, bridge hop, executor queue→run, and the frontier wait
+        # underneath. (`reader.pread` is deliberately absent: nested preads
+        # below the recording floor are elided on the warm path.)
+        assert {"gateway.request", "gateway.admission_wait",
+                "bridge.call", "executor.run", "reader.frontier_wait",
+                "server.read_range"} <= names
+        # the trace crossed the wire into TWO distinct gateways: the owner
+        # served the first pread, the survivor the failed-over one — their
+        # event loops are different threads, same trace id
+        gw_reqs = [s for s in tree if s["name"] == "gateway.request"]
+        assert len(gw_reqs) >= 2
+        assert len({s["thread"] for s in gw_reqs}) >= 2
+        # parenting is intact across the hop: every gateway.request's parent
+        # is a client-side span of this trace
+        ids = {s["span_id"] for s in tree}
+        for g in gw_reqs:
+            assert g["parent_id"] in ids
+        # and the whole thing exports as one Chrome trace
+        trace = obs_trace.dump_trace(spans=tree)
+        assert len(trace["traceEvents"]) >= len(tree)
+    finally:
+        router.close()
+        for gw in gws:
+            try:
+                gw.close()
+            except Exception:  # noqa: BLE001 - one was killed on purpose
+                pass
